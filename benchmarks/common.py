@@ -1,0 +1,103 @@
+"""Shared harness for the paper-figure benchmarks.
+
+The paper's experiments (§5) train LeNet on FEMNIST and a char-LSTM on
+Shakespeare with M = 2 active clients, B = 10, eta = K/M, beta = 0.9.  The
+benchmarks reproduce those settings on the synthetic LEAF-statistics data
+(DESIGN.md §7) at reduced round counts; pass --full for longer runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RoundConfig, UniformSampler, round_step
+from repro.core.server_opt import ServerOpt
+from repro.data import FederatedDataset, synthetic_femnist
+from repro.data.federated import lm_clients_to_dataset
+from repro.data.synthetic import SHAKESPEARE_SEQ, synthetic_shakespeare
+from repro.models import small
+
+
+@dataclass
+class Task:
+    name: str
+    loss_fn: Callable
+    dataset: FederatedDataset
+    init_fn: Callable
+    local_batch: int = 10
+
+
+def femnist_task(n_clients=60, seed=0) -> Task:
+    clients, _ = synthetic_femnist(n_clients=n_clients, seed=seed)
+    return Task("femnist", small.lenet_loss,
+                FederatedDataset(clients, seed=seed + 1),
+                lambda k: small.lenet_init(k))
+
+
+def shakespeare_task(n_clients=30, seed=0) -> Task:
+    streams, _ = synthetic_shakespeare(n_clients=n_clients, seed=seed)
+    ds = lm_clients_to_dataset([c["text"] for c in streams],
+                               SHAKESPEARE_SEQ, seed=seed + 1)
+    return Task("shakespeare", small.lstm_loss, ds,
+                lambda k: small.lstm_init(k))
+
+
+def run_rounds(task: Task, opt: ServerOpt, rounds: int, *,
+               local_steps: int = 10, lr: float = 0.05, m: int = 2,
+               seed: int = 0, record_states: bool = False):
+    """Runs the federated training; returns dict with per-round losses and
+    (optionally) per-round (w_t, delta_t) probes for the inner-product
+    figures.  Deterministic in ``seed``."""
+    pop = task.dataset.population()
+    sampler = UniformSampler(pop, m, seed=seed)
+    task.dataset._rng = np.random.default_rng(seed + 7)  # reset draws
+    w0 = task.init_fn(jax.random.PRNGKey(0))
+    state = opt.init(w0)
+    rcfg = RoundConfig(clients_per_round=m, local_steps=local_steps, lr=lr,
+                       placement="mesh", compute_dtype="float32")
+
+    @jax.jit
+    def step(state, batches, weights):
+        return round_step(task.loss_fn, opt, state, batches, weights, rcfg)
+
+    losses, states, deltas = [], [], []
+    for t in range(rounds):
+        idx, weights = sampler.sample(t)
+        batches = jax.tree.map(
+            jnp.asarray,
+            task.dataset.round_batches(idx, local_steps, task.local_batch))
+        prev_w = state.w
+        state, metrics = step(state, batches, jnp.asarray(weights))
+        losses.append(float(metrics["loss"]))
+        if record_states:
+            states.append(prev_w)
+            # biased gradient g_t (eq. 3) recovered from the server motion is
+            # opt-dependent; recompute delta directly for probes:
+            deltas.append(jax.tree.map(
+                lambda a, b: (a - b).astype(jnp.float32), prev_w, state.w))
+    return {"losses": losses, "final_w": state.w, "states": states,
+            "deltas": deltas}
+
+
+def inner_products(states: List, deltas: List, w_star) -> np.ndarray:
+    """<g_t, w_t - w*> per round (g_t proportional to the recorded server
+    motion; positive = descent direction toward w*)."""
+    out = []
+    for w_t, g_t in zip(states, deltas):
+        acc = 0.0
+        for a, g, ws in zip(jax.tree.leaves(w_t), jax.tree.leaves(g_t),
+                            jax.tree.leaves(w_star)):
+            acc += float(jnp.sum(g * (a - ws)))
+        out.append(acc)
+    return np.asarray(out)
+
+
+def smooth(x: np.ndarray, k: int = 10) -> np.ndarray:
+    if len(x) < k:
+        return x
+    c = np.convolve(x, np.ones(k) / k, mode="valid")
+    return c

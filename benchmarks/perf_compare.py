@@ -1,0 +1,59 @@
+"""§Perf helper: compare dry-run records (baseline vs variant) — per-kind
+collective deltas and the three roofline terms side by side.
+
+    PYTHONPATH=src python -m benchmarks.perf_compare results/hillclimb.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(paths):
+    recs = {}
+    for path in paths:
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                key = (r["arch"], r["shape"], r["mesh"], r["variant"])
+                recs[key] = r
+    return recs
+
+
+def fmt(r):
+    if r["status"] != "ok":
+        return f"   {r['variant']:14s} {r['status']}: {r.get('error','')[:90]}"
+    t = r["roofline"]
+    coll = ", ".join(
+        f"{k}:{v['bytes']:.2e}B x{int(v['count'])}"
+        for k, v in sorted(r.get("collectives", {}).items()))
+    return (f"   {r['variant']:14s} compute={t['compute_s']:.3e}s "
+            f"memory={t['memory_s']:.3e}s coll={t['collective_s']:.3e}s "
+            f"dom={t['dominant']:10s} bound={t['bound_s']:.3e}s\n"
+            f"     args/dev={r.get('arg_bytes_per_dev', 0)/2**30:.2f}GiB "
+            f"[{coll}]")
+
+
+def main(paths):
+    recs = load(paths)
+    groups = defaultdict(list)
+    for (arch, shape, mesh, variant), r in recs.items():
+        groups[(arch, shape, mesh)].append(r)
+    for (arch, shape, mesh), rs in sorted(groups.items()):
+        print(f"{arch} x {shape} @ {mesh}")
+        base = next((r for r in rs if r["variant"] == "zero"), None)
+        for r in sorted(rs, key=lambda r: r["variant"] != "zero"):
+            print(fmt(r))
+            if (base and r is not base and r["status"] == "ok"
+                    and base["status"] == "ok"):
+                b0 = base["roofline"]["bound_s"]
+                b1 = r["roofline"]["bound_s"]
+                if b0 > 0:
+                    print(f"     -> bound {b0:.3e}s -> {b1:.3e}s "
+                          f"({(b0 - b1) / b0:+.1%} vs zero)")
+        print()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["results/hillclimb.jsonl"])

@@ -1,0 +1,81 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun_baseline.jsonl (written by repro.launch.dryrun) and
+prints, per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and flags the three §Perf hillclimb
+candidates (worst roofline fraction / most collective-bound / most
+representative of the paper's technique)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from collections import defaultdict
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun_baseline.jsonl")
+
+
+def load(path: str = DEFAULT_PATH):
+    recs = []
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"], r.get("variant"))
+            seen[key] = r          # later records override earlier ones
+    return list(seen.values())
+
+
+def fmt_row(r) -> str:
+    if r["status"] == "skipped":
+        return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                f"SKIP ({r['reason'][:60]})")
+    if r["status"] != "ok":
+        return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                f"ERROR {r.get('error', '')[:60]}")
+    t = r["roofline"]
+    mfr = r.get("model_flops_ratio")
+    return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{t['compute_s']:9.3e} {t['memory_s']:9.3e} "
+            f"{t['collective_s']:9.3e} {t['dominant']:10s} "
+            f"{(mfr if mfr is not None else 0):7.3f}")
+
+
+def run(path: str = DEFAULT_PATH, verbose: bool = True) -> dict:
+    recs = load(path)
+    ok = [r for r in recs if r["status"] == "ok"]
+    if verbose:
+        print(f"{'arch':22s} {'shape':12s} {'mesh':8s} "
+              f"{'compute_s':>9s} {'memory_s':>9s} {'collect_s':>9s} "
+              f"{'dominant':10s} {'mf/hlo':>7s}")
+        for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                             r["mesh"])):
+            print(fmt_row(r))
+    # hillclimb candidates (single-pod records only, per the assignment)
+    sp = [r for r in ok if r["mesh"] == "16x16"]
+    worst_frac = min(sp, key=lambda r: r["roofline"]["compute_fraction"])
+    most_coll = max(sp, key=lambda r: r["roofline"]["collective_s"])
+    # most representative of the paper's technique = the federated round
+    # (train shape) with the largest collective share
+    trains = [r for r in sp if r["kind"] == "train"]
+    rep = max(trains, key=lambda r: (r["roofline"]["collective_s"]
+                                     / max(r["roofline"]["bound_s"], 1e-12)))
+    picks = {
+        "worst_roofline_fraction": (worst_frac["arch"], worst_frac["shape"]),
+        "most_collective_bound": (most_coll["arch"], most_coll["shape"]),
+        "paper_representative_round": (rep["arch"], rep["shape"]),
+    }
+    if verbose:
+        print("\nhillclimb candidates:")
+        for k, v in picks.items():
+            print(f"  {k}: {v[0]} x {v[1]}")
+        n_dom = defaultdict(int)
+        for r in ok:
+            n_dom[r["roofline"]["dominant"]] += 1
+        print(f"dominant-term histogram: {dict(n_dom)}")
+    return {"records": recs, "picks": picks}
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH)

@@ -1,0 +1,65 @@
+"""Quickstart: the paper's setting in miniature.
+
+Trains LeNet on synthetic non-IID FEMNIST with M=2 active clients per round
+(exactly §5.1's configuration) and compares FedAvg vs FedMom server
+optimizers.  Runs in ~1 minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py [--rounds 150]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RoundConfig, UniformSampler, fedavg, fedmom
+from repro.data import FederatedDataset, synthetic_femnist
+from repro.launch.train import FederatedTrainer
+from repro.models import small
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=150)
+    ap.add_argument("--clients", type=int, default=60)
+    ap.add_argument("--m", type=int, default=2, help="active clients/round")
+    ap.add_argument("--local-steps", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=0.05)
+    args = ap.parse_args()
+
+    clients, counts = synthetic_femnist(n_clients=args.clients, seed=0)
+    ds = FederatedDataset(clients, seed=1)
+    pop = ds.population()
+    K, M = pop.n_clients, args.m
+
+    # held-out eval set: a slice of every client's data
+    ex = np.concatenate([c["x"][:5] for c in clients])
+    ey = np.concatenate([c["y"][:5] for c in clients])
+
+    def eval_fn(state):
+        logits = small.lenet_apply(
+            jax.tree.map(lambda x: x.astype(jnp.float32), state.w),
+            jnp.asarray(ex))
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ey)))
+        return {"eval_acc": acc}
+
+    w0 = small.lenet_init(jax.random.PRNGKey(0))
+    rcfg = RoundConfig(clients_per_round=M, local_steps=args.local_steps,
+                       lr=args.lr, placement="mesh",
+                       compute_dtype="float32")
+
+    for name, opt in [("FedAvg (eta=K/M)", fedavg(eta=K / M)),
+                      ("FedMom (eta=K/M, beta=0.9)",
+                       fedmom(eta=K / M, beta=0.9))]:
+        print(f"\n=== {name} ===")
+        trainer = FederatedTrainer(
+            loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg,
+            dataset=ds, sampler=UniformSampler(pop, M, seed=2),
+            state=opt.init(w0)).set_local_batch(10)
+        hist = trainer.run(args.rounds, log_every=25, eval_fn=eval_fn)
+        print(f"final: loss={hist[-1]['loss']:.4f} "
+              f"acc={hist[-1]['eval_acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""§Perf profiling tool: lower one (arch x shape x variant), print the
+loop-aware byte/flop attribution by jax op_name — the 'profile' that the
+hypothesis loop reads (no TPU wall-clock exists in this container).
+
+    PYTHONPATH=src python scripts/profile_combo.py qwen3-1.7b decode_32k [variant]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+
+from repro.configs import get_config
+from repro.launch import hlo_cost
+from repro.launch.dryrun import build_serve, build_train, rules_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import INPUT_SHAPES, placement_for
+from repro.sharding import axis_rules
+
+
+def main(arch, shape_name, variant="zero"):
+    cfg = get_config(arch)
+    if variant == "rwkv_chunk16":
+        cfg = cfg.replace(rwkv_chunk=16)
+    elif variant == "moe_vmap":
+        cfg = cfg.replace(moe_dispatch="vmap")
+    elif variant == "rglru_bf16":
+        cfg = cfg.replace(rglru_dtype="bfloat16")
+    elif variant == "remat_dots":
+        cfg = cfg.replace(remat_policy="dots")
+    elif variant == "rglru_gather":
+        cfg = cfg.replace(rglru_gate_gather=True)
+    elif variant == "moe_vmap_bf16":
+        cfg = cfg.replace(moe_dispatch="vmap")
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = rules_for(placement_for(arch), variant, shape.kind)
+    with axis_rules(mesh, rules):
+        build = build_train if shape.kind == "train" else build_serve
+        fn, args, _, geo = build(arch, cfg, shape, mesh, variant, rules)
+        with mesh:
+            compiled = fn.lower(*args).compile()
+    txt = compiled.as_text()
+    res = hlo_cost.analyze(txt)
+    print(f"== {arch} x {shape_name} [{variant}]  "
+          f"flops={res['flops']:.3e} bytes={res['bytes']:.3e} "
+          f"coll={res['collective_bytes']:.3e}")
+    print(f"   collectives: {res['collectives']}")
+    print(f"{'bytes':>12s} {'flops':>12s}  op_name")
+    for name, b, f in hlo_cost.profile(txt, top=30):
+        print(f"{b:12.3e} {f:12.3e}  {name}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,1 @@
+from repro.checkpoint.io import restore_state, save_state  # noqa: F401

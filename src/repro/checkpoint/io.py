@@ -1,0 +1,55 @@
+"""Server-state checkpointing (numpy archive + json tree structure).
+
+The server owns the only durable state in federated learning (w, momentum,
+round counter) — clients are stateless between rounds — so checkpointing the
+``ServerState`` pytree is the complete story.  Atomic via tmp+rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.server_opt import ServerState
+
+
+def _flatten_with_paths(tree) -> Tuple[list, list]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in path) for path, _ in flat]
+    leaves = [np.asarray(v) for _, v in flat]
+    return paths, leaves, treedef
+
+
+def save_state(path: str, state: ServerState, meta: dict | None = None):
+    paths, leaves, _ = _flatten_with_paths(state)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"leaf_{i}": leaf for i, leaf in enumerate(leaves)}
+    manifest = {"paths": paths, "meta": meta or {}, "n": len(leaves)}
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    os.close(fd)
+    try:
+        np.savez(tmp, manifest=json.dumps(manifest), **payload)
+        os.replace(tmp + ".npz", path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def restore_state(path: str, like: ServerState) -> Tuple[ServerState, dict]:
+    """Restores into the structure of ``like`` (asserting leaf paths match)."""
+    with np.load(path, allow_pickle=False) as z:
+        manifest = json.loads(str(z["manifest"]))
+        leaves = [z[f"leaf_{i}"] for i in range(manifest["n"])]
+    paths, _, treedef = _flatten_with_paths(like)
+    if paths != manifest["paths"]:
+        raise ValueError(
+            f"checkpoint structure mismatch: {manifest['paths'][:3]}... vs "
+            f"{paths[:3]}...")
+    flat_like = jax.tree.leaves(like)
+    leaves = [np.asarray(l, dtype=x.dtype) for l, x in zip(leaves, flat_like)]
+    state = jax.tree.unflatten(jax.tree.structure(like), leaves)
+    return state, manifest["meta"]

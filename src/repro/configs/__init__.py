@@ -1,0 +1,40 @@
+"""Architecture registry.
+
+Every assigned architecture is a module here exporting ``CONFIG``
+(a ``repro.models.config.ModelConfig`` with the exact numbers from the
+assignment, source cited) plus the paper's own two models.  Arch ids use the
+assignment spelling; module names are the sanitized versions.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "qwen3-14b": "qwen3_14b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-7b": "rwkv6_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "whisper-medium": "whisper_medium",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "grok-1-314b": "grok_1_314b",
+    "gemma3-1b": "gemma3_1b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch.endswith("-reduced"):
+        return get_config(arch[: -len("-reduced")]).reduced()
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,18 @@
+"""The paper's primary contribution: federated optimization as a
+biased-gradient method (server optimizers + client solver + round engine)."""
+from repro.core.round import RoundConfig, round_step  # noqa: F401
+from repro.core.sampling import (  # noqa: F401
+    ClientPopulation,
+    DiurnalSampler,
+    UniformSampler,
+)
+from repro.core.server_opt import (  # noqa: F401
+    ServerOpt,
+    ServerState,
+    fedadam,
+    fedavg,
+    fedavgm,
+    fedlamom,
+    fedmom,
+    fedyogi,
+)

@@ -1,0 +1,44 @@
+"""Client-side local solver — Algorithm 2 of the paper.
+
+``local_update`` receives the broadcast server model ``w_t`` and a stack of
+``H`` minibatches (one per local iteration, matching Alg. 2's fresh sample
+per step), runs H optimizer steps via ``lax.scan``, and returns the updated
+local model ``w^k_{t+1}`` plus per-step losses.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.local import LocalOpt, sgd
+
+LossFn = Callable[[Any, Any], Tuple[jax.Array, Any]]  # (params, batch)
+
+
+def local_update(loss_fn: LossFn, params: Any, batches: Any,
+                 lr: jax.Array, opt: LocalOpt = None):
+    """Run H local steps.  ``batches`` leaves have leading axis H.
+
+    Returns (params', mean_loss).
+    """
+    opt = opt or sgd()
+    opt_state = opt.init(params)
+    grad_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
+
+    def step(carry, batch):
+        p, s = carry
+        loss, g = grad_fn(p, batch)
+        upd, s = opt.update(g, s, p, lr)
+        p = jax.tree.map(lambda pi, ui: (pi + ui).astype(pi.dtype), p, upd)
+        return (p, s), loss
+
+    (params, _), losses = jax.lax.scan(step, (params, opt_state), batches)
+    return params, jnp.mean(losses)
+
+
+def local_gradient(loss_fn: LossFn, params: Any, batch: Any):
+    """Single gradient (FedSGD-style probing; used by benchmarks/fig4)."""
+    loss, g = jax.value_and_grad(lambda p: loss_fn(p, batch)[0])(params)
+    return g, loss

@@ -1,0 +1,71 @@
+"""Host-side client scheduling: uniform sampling of S_t (paper setting) plus
+a diurnal participation schedule (Bonawitz et al. 2019 report a large swing
+in available devices over 24h; we expose it as a time-varying M)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class ClientPopulation:
+    """K clients with sample counts n_k (unbalanced, non-IID per the data
+    partitioner)."""
+    counts: np.ndarray                     # [K] int
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.counts)
+
+    @property
+    def weights(self) -> np.ndarray:       # n_k / n
+        return self.counts / self.counts.sum()
+
+
+@dataclass
+class UniformSampler:
+    """S_t = a uniformly random set of M clients (paper §3.1)."""
+    population: ClientPopulation
+    m: int
+    seed: int = 0
+    _rng: np.random.Generator = field(init=False, repr=False, default=None)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample(self, t: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        idx = self._rng.choice(self.population.n_clients, size=self.m,
+                               replace=False)
+        return idx, self.population.weights[idx].astype(np.float32)
+
+
+@dataclass
+class DiurnalSampler:
+    """Time-varying participation: M(t) swings sinusoidally between
+    m_min and m_max with the given period (in rounds).  The round engine is
+    lowered for the max extent; inactive slots get zero weight, which the
+    biased-gradient aggregation handles natively (w^k = w_t contributes 0)."""
+    population: ClientPopulation
+    m_min: int
+    m_max: int
+    period: int = 1000
+    seed: int = 0
+    _rng: np.random.Generator = field(init=False, repr=False, default=None)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def m_at(self, t: int) -> int:
+        frac = 0.5 * (1 + math.sin(2 * math.pi * t / self.period))
+        return int(round(self.m_min + frac * (self.m_max - self.m_min)))
+
+    def sample(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
+        m_t = self.m_at(t)
+        idx = self._rng.choice(self.population.n_clients, size=self.m_max,
+                               replace=False)
+        w = self.population.weights[idx].astype(np.float32)
+        w[m_t:] = 0.0                      # padded slots contribute nothing
+        return idx, w

@@ -1,0 +1,52 @@
+"""Secure-aggregation-shaped masking (Bonawitz et al. 2017, simulation).
+
+In production federated learning the server may only see the *sum* of
+client updates, achieved by pairwise additive masks that cancel in the
+aggregate.  The optimizer-facing property — aggregation receives
+sum_k a_k (w_t - w^k) and nothing per-client — is exactly what the round
+engine's delta computation consumes, so secure aggregation slots in as a
+transformation of the per-client deltas *before* the weighted sum.
+
+This module implements the masking algebra (deterministic pairwise PRG
+masks that cancel) to demonstrate and test the API shape; real crypto
+(key agreement, dropout recovery) is out of scope and noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+
+def _pair_mask(key_ij: jax.Array, like: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(like)
+    keys = jax.random.split(key_ij, len(leaves))
+    masked = [jax.random.normal(k, x.shape, jnp.float32)
+              for k, x in zip(keys, leaves)]
+    return treedef.unflatten(masked)
+
+
+def mask_client_updates(root_key: jax.Array, updates: List[Any],
+                        weights: jax.Array) -> List[Any]:
+    """Adds pairwise-cancelling masks to the *weighted* per-client updates:
+    client i adds +m_ij for j>i and -m_ij for j<i, so the sum over the
+    cohort is unchanged while each individual update is blinded."""
+    n = len(updates)
+    masked = [jax.tree.map(lambda x: weights[i] * x.astype(jnp.float32),
+                           updates[i]) for i in range(n)]
+    for i in range(n):
+        for j in range(i + 1, n):
+            kij = jax.random.fold_in(jax.random.fold_in(root_key, i), j)
+            m = _pair_mask(kij, updates[i])
+            masked[i] = jax.tree.map(lambda a, b: a + b, masked[i], m)
+            masked[j] = jax.tree.map(lambda a, b: a - b, masked[j], m)
+    return masked
+
+
+def aggregate_masked(masked: List[Any]) -> Any:
+    """The only thing the server may compute: the sum."""
+    out = masked[0]
+    for m in masked[1:]:
+        out = jax.tree.map(lambda a, b: a + b, out, m)
+    return out

@@ -1,0 +1,11 @@
+from repro.data.federated import FederatedDataset  # noqa: F401
+from repro.data.partition import (  # noqa: F401
+    dirichlet_partition,
+    label_shard_partition,
+    lognormal_sizes,
+)
+from repro.data.synthetic import (  # noqa: F401
+    synthetic_femnist,
+    synthetic_shakespeare,
+    synthetic_token_clients,
+)

@@ -1,0 +1,64 @@
+"""Federated dataset container + round-batch assembly.
+
+``FederatedDataset`` owns per-client arrays and builds the [C, H, b, ...]
+round batches the engine consumes (Algorithm 2 samples a fresh minibatch per
+local step)."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.sampling import ClientPopulation
+
+
+class FederatedDataset:
+    """data: list over clients of dicts of arrays (first axis = samples),
+    e.g. {'x': [n_k,28,28,1], 'y': [n_k]} or {'tokens': [n_k, S]}."""
+
+    def __init__(self, data: List[Dict[str, np.ndarray]], seed: int = 0):
+        self.data = data
+        self._rng = np.random.default_rng(seed)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.data)
+
+    def counts(self) -> np.ndarray:
+        return np.array([len(next(iter(d.values()))) for d in self.data])
+
+    def population(self) -> ClientPopulation:
+        return ClientPopulation(counts=self.counts())
+
+    def round_batches(self, client_ids: Sequence[int], local_steps: int,
+                      batch_size: int) -> Dict[str, np.ndarray]:
+        """Stack [C, H, b, ...] batches (sampling with replacement when a
+        client has fewer than H*b samples, matching Alg. 2's random draws)."""
+        out: Dict[str, List[np.ndarray]] = {}
+        for k in client_ids:
+            d = self.data[k]
+            n_k = len(next(iter(d.values())))
+            need = local_steps * batch_size
+            idx = self._rng.choice(n_k, size=need, replace=(n_k < need))
+            for key, arr in d.items():
+                sel = arr[idx].reshape(
+                    (local_steps, batch_size) + arr.shape[1:])
+                out.setdefault(key, []).append(sel)
+        return {k: np.stack(v) for k, v in out.items()}
+
+
+def lm_clients_to_dataset(streams: List[np.ndarray], seq_len: int,
+                          seed: int = 0) -> FederatedDataset:
+    """Chop per-client token streams into (tokens, labels) LM examples."""
+    data = []
+    for s in streams:
+        n = (len(s) - 1) // seq_len
+        n = max(n, 1)
+        if len(s) < n * seq_len + 1:
+            reps = int(np.ceil((n * seq_len + 1) / len(s)))
+            s = np.tile(s, reps)
+        x = s[: n * seq_len].reshape(n, seq_len)
+        y = s[1: n * seq_len + 1].reshape(n, seq_len)
+        data.append({"tokens": x.astype(np.int32),
+                     "labels": y.astype(np.int32)})
+    return FederatedDataset(data, seed=seed)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel lives in its own subpackage with the required trio:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (shape plumbing, interpret switch)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+"""
+from repro.kernels.fedmom_update import ops as fedmom_ops  # noqa: F401
+from repro.kernels.flash_attention import ops as flash_ops  # noqa: F401
+from repro.kernels.rglru_scan import ops as rglru_ops  # noqa: F401
+from repro.kernels.rwkv6_scan import ops as rwkv6_ops  # noqa: F401

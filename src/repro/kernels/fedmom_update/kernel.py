@@ -1,0 +1,84 @@
+"""Fused FedMom server update (the paper's eq. (9) as one HBM pass).
+
+Unfused, the update
+    v' = w - eta * delta
+    w' = v' + beta * (v' - v)
+is three elementwise HLO ops: 6 HBM reads + 4 writes of the full parameter
+vector.  Fused, it is 3 reads (w, v, delta) + 2 writes (w', v') — a 2x cut
+on the server-update memory term, which is what dominates the server step
+for multi-billion-parameter states (see EXPERIMENTS.md §Perf).
+
+TPU mapping: a 1-D parameter stream is viewed as [rows, LANE] with
+LANE=128 (VPU lane width) and tiled [BLOCK_ROWS, 128] into VMEM.  Pure
+elementwise VPU work — no MXU — so the only roofline term is HBM bandwidth,
+which the fusion halves.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 256          # [256, 128] fp32 tile = 128 KiB per operand
+
+
+def _kernel(w_ref, v_ref, d_ref, wo_ref, vo_ref, *, eta: float, beta: float):
+    w = w_ref[...]
+    v = v_ref[...]
+    d = d_ref[...]
+    v_new = w - eta * d
+    wo_ref[...] = v_new + beta * (v_new - v)
+    vo_ref[...] = v_new
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "beta", "interpret"))
+def fused_update_flat(w: jax.Array, v: jax.Array, delta: jax.Array,
+                      eta: float, beta: float,
+                      interpret: bool = True):
+    """w/v/delta: [rows, 128] fp32 (row count multiple of BLOCK_ROWS)."""
+    rows = w.shape[0]
+    grid = (rows // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eta=eta, beta=beta),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(w.shape, w.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)],
+        interpret=interpret,
+    )(w, v, delta)
+    return out
+
+
+def fused_update_tree(w_tree, v_tree, d_tree, *, eta: float, beta: float,
+                      interpret: bool = True):
+    """Applies the fused update leaf-wise over parameter pytrees.
+
+    Leaves are flattened, padded to the tile grid, updated in one fused
+    kernel launch per leaf, and reshaped back.
+    """
+    eta = float(eta)
+    beta = float(beta)
+    leaves_w, treedef = jax.tree.flatten(w_tree)
+    leaves_v = treedef.flatten_up_to(v_tree)
+    leaves_d = treedef.flatten_up_to(d_tree)
+    out_w, out_v = [], []
+    tile = BLOCK_ROWS * LANE
+    for wl, vl, dl in zip(leaves_w, leaves_v, leaves_d):
+        shape = wl.shape
+        n = wl.size
+        pad = (-n) % tile
+        def prep(x):
+            flat = x.astype(jnp.float32).reshape(-1)
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            return flat.reshape(-1, LANE)
+        wn, vn = fused_update_flat(prep(wl), prep(vl), prep(dl), eta, beta,
+                                   interpret=interpret)
+        out_w.append(wn.reshape(-1)[:n].reshape(shape).astype(wl.dtype))
+        out_v.append(vn.reshape(-1)[:n].reshape(shape).astype(vl.dtype))
+    return treedef.unflatten(out_w), treedef.unflatten(out_v)

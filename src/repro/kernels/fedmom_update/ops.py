@@ -1,0 +1,24 @@
+"""Public wrapper for the fused FedMom server update.
+
+On TPU the Pallas kernel runs compiled; everywhere else (this CPU container)
+it runs in interpret mode, which executes the same kernel body in Python —
+the tests sweep shapes/dtypes against ref.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fedmom_update import kernel as _k
+from repro.kernels.fedmom_update import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_update_tree(w, v, delta, *, eta: float, beta: float,
+                      use_kernel: bool = True):
+    if not use_kernel:
+        return _ref.fedmom_update(w, v, delta, eta, beta)
+    return _k.fused_update_tree(w, v, delta, eta=eta, beta=beta,
+                                interpret=not _on_tpu())

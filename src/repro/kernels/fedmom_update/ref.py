@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused FedMom update."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedmom_update(w, v, delta, eta: float, beta: float):
+    """Returns (w', v') per Algorithm 3 steps 8-9."""
+    def one(wi, vi, di):
+        wi = wi.astype(jnp.float32)
+        vi = vi.astype(jnp.float32)
+        di = di.astype(jnp.float32)
+        v_new = wi - eta * di
+        w_new = v_new + beta * (v_new - vi)
+        return w_new, v_new
+
+    pairs = jax.tree.map(one, w, v, delta)
+    w_new = jax.tree.map(lambda p: p[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return w_new, v_new

@@ -1,0 +1,127 @@
+"""Blockwise (flash) causal / sliding-window attention, Pallas TPU.
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+  * tiles are MXU-aligned: block_q x d and block_k x d with d, block_* all
+    multiples of 128 (the smoke sweeps also exercise d=64 which TPU handles
+    via lane packing in interpret mode);
+  * the online-softmax running (m, l) statistics live in VMEM scratch that
+    persists across the innermost (kv) grid dimension — Pallas TPU grids
+    execute the last dimension sequentially per core, which replaces the
+    CUDA warp-level loop;
+  * fully-masked blocks (above the causal diagonal, or older than the
+    sliding window) are skipped with pl.when rather than branch divergence.
+
+Layout: q [BH, S, d], k/v [BH, T, d] (GQA expansion happens in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_STAT_LANES = 128          # m/l scratch padded to full lane width
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int,
+            block_q: int, block_k: int, nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    run = jnp.bool_(True)
+    if causal:
+        # skip blocks strictly above the diagonal
+        run = run & (k_start <= q_start + block_q - 1)
+    if window > 0:
+        # skip blocks entirely older than the window
+        run = run & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                        # [bq, 1]
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_cur)              # [bq, 1]
+        l_cur = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int = 0,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = True) -> jax.Array:
+    """q [BH, S, d], k/v [BH, T, d] -> [BH, S, d]."""
+    BH, S, d = q.shape
+    T = k.shape[1]
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    nq, nk = S // block_q, T // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((block_q, _STAT_LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""Public wrapper: model-layout attention -> flash kernel layout.
+
+Accepts GQA inputs q [B,S,Hq,d], k/v [B,T,Hkv,d]; expands KV groups, folds
+(B, H) and dispatches to the Pallas kernel (compiled on TPU, interpret mode
+elsewhere)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = _k.DEFAULT_BLOCK_Q,
+                    block_k: int = _k.DEFAULT_BLOCK_K,
+                    use_kernel: bool = True):
+    """q [B,S,Hq,d], k/v [B,T,Hkv,d] -> [B,S,Hq,d]."""
+    B, S, Hq, d = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    groups = Hq // Hkv
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, T, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, T, d)
+    if use_kernel:
+        of = _k.flash_attention_bhsd(
+            qf, kf, vf, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=not _on_tpu())
+    else:
+        of = _ref.attention_bhsd(qf, kf, vf, causal=causal, window=window)
+    return of.reshape(B, Hq, S, d).transpose(0, 2, 1, 3)

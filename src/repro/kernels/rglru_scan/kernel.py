@@ -1,0 +1,69 @@
+"""RG-LRU linear recurrence, Pallas TPU.
+
+    h_t = a_t * h_{t-1} + b_t        (per channel; a_t in (0,1))
+
+§Perf HC-3 showed the XLA associative-scan path spends its round budget on
+fp32 [B,S,R] HBM traffic (log2(S) combine passes + autodiff residuals).
+This kernel is the TPU answer for the forward: the sequence is processed in
+chunks with the carried state h resident in VMEM — one read of (a, b) and
+one write of h per element, the bandwidth lower bound.
+
+Grid (B, n_chunks): the chunk axis is sequential per core, so the [R]-wide
+state carries across chunk steps in VMEM scratch (same pattern as our
+rwkv6 kernel).  Inside a chunk a `fori_loop` walks the rows: elementwise
+VPU work on [1, R] lanes (R is a multiple of 128 for all configs).
+
+Layout: a/b [B, S, R] fp32 (gates precomputed), returns h [B, S, R].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _kernel(a_ref, b_ref, h_ref, state_ref, *, chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    def step(t, carry):
+        h = state_ref[...]                       # [1, R]
+        a_t = a_ref[0, t][None]                  # [1, R]
+        b_t = b_ref[0, t][None]
+        h = a_t * h + b_t
+        state_ref[...] = h
+        h_ref[0, t] = h[0]
+        return carry
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_bsr(a: jax.Array, b: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+              interpret: bool = True) -> jax.Array:
+    """a/b [B, S, R] fp32 -> h [B, S, R] fp32."""
+    B, S, R = a.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, R), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, R), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, R), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, R), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, R), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,19 @@
+"""Public wrapper for the RG-LRU scan kernel (gates precomputed)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru_scan import kernel as _k
+from repro.kernels.rglru_scan import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rglru_scan(a, b, *, chunk: int = _k.DEFAULT_CHUNK,
+               use_kernel: bool = True):
+    """a/b [B,S,R] -> h [B,S,R]; a = per-step decay, b = gated input."""
+    if not use_kernel:
+        return _ref.rglru_sequential(a, b)
+    return _k.rglru_bsr(a, b, chunk=chunk, interpret=not _on_tpu())

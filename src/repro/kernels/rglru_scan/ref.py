@@ -1,0 +1,20 @@
+"""Sequential oracle for the RG-LRU recurrence h_t = a_t h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_sequential(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a/b [B,S,R] -> h [B,S,R] (fp32 scan)."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    B, S, R = a.shape
+    h0 = jnp.zeros((B, R), jnp.float32)
+    _, hs = jax.lax.scan(
+        step, h0, (a.astype(jnp.float32).transpose(1, 0, 2),
+                   b.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,105 @@
+"""Chunked RWKV6 (Finch) time-mix recurrence, Pallas TPU.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t @ S_{t-1} + (r_t . u . k_t) v_t
+
+TPU adaptation of the (GPU-oriented) chunked linear-attention algorithm:
+
+  * the grid is (B*H, n_chunks) with the chunk dimension executed
+    sequentially per core; the inter-chunk recurrent state S [Dk, Dv] fp32
+    lives in VMEM scratch, exactly replacing the CUDA "state in registers /
+    shared memory" carry;
+  * all decay factors are formed as exp(L_i - L_j) with L the cumulative
+    log-decay and i >= j, so every exponent is <= 0 — no overflow for the
+    data-dependent decays (log w can be very negative in Finch);
+  * intra-chunk interactions use an explicit [C, C, Dk] masked tensor in
+    VMEM (C = 32): at head_dim 64 this is 256 KiB fp32 — far under VMEM —
+    and avoids the unstable exp(+L) matmul factorization;
+  * chunk length C=32 and Dk=Dv=64 keep the S-update matmul MXU-shaped.
+
+Layout: r/k [BH, S, Dk], v [BH, S, Dv], log_w [BH, S, Dk], u [BH, Dk].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 32
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
+            chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)            # [C, Dk]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)            # [C, Dv]
+    lw = lw_ref[0].astype(jnp.float32)          # [C, Dk], <= 0
+    u = u_ref[0].astype(jnp.float32)            # [Dk]
+
+    l_incl = jnp.cumsum(lw, axis=0)
+    l_excl = l_incl - lw
+    l_end = l_incl[-1]                          # [Dk]
+    s = s_ref[...]
+
+    # inter-chunk: o_i += (r_i * exp(L_excl_i)) @ S
+    r_dec = r * jnp.exp(l_excl)
+    o = jax.lax.dot_general(r_dec, s, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # intra-chunk: o_i += sum_{j<i} (r_i . exp(L_excl_i - L_incl_j) . k_j) v_j
+    ddiff = l_excl[:, None, :] - l_incl[None, :, :]          # [C, C, Dk]
+    ddiff = jnp.minimum(ddiff, 0.0)
+    att = jnp.sum(r[:, None, :] * jnp.exp(ddiff) * k[None, :, :], axis=-1)
+    ii = jax.lax.broadcasted_iota(jnp.int32, att.shape, 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, att.shape, 1)
+    att = jnp.where(ii > jj, att, 0.0)
+    o = o + jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # bonus (u) diagonal term
+    diag = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)
+    o = o + diag * v
+
+    # state: S' = diag(exp(L_end)) S + sum_j (k_j * exp(L_end - L_incl_j)) v_j^T
+    k_dec = k * jnp.exp(l_end[None, :] - l_incl)
+    s_ref[...] = jnp.exp(l_end)[:, None] * s + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_bhsd(r, k, v, log_w, u, *, chunk: int = DEFAULT_CHUNK,
+               interpret: bool = True):
+    """r/k [BH,S,Dk], v [BH,S,Dv], log_w [BH,S,Dk], u [BH,Dk]."""
+    BH, S, Dk = r.shape
+    Dv = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Dk), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, Dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, Dv), v.dtype),
+        scratch_shapes=[pltpu.VMEM((Dk, Dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_w, u)

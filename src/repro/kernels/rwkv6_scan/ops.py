@@ -1,0 +1,32 @@
+"""Public wrapper: model layout [B,S,H,D] -> kernel layout [B*H,S,D]."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan import kernel as _k
+from repro.kernels.rwkv6_scan import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rwkv6(r, k, v, log_w, u, *, chunk: int = _k.DEFAULT_CHUNK,
+          use_kernel: bool = True):
+    """r/k [B,S,H,Dk], v [B,S,H,Dv], log_w [B,S,H,Dk], u [H,Dk]
+    -> o [B,S,H,Dv]."""
+    B, S, H, Dk = r.shape
+    Dv = v.shape[-1]
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, x.shape[-1])
+
+    uf = jnp.broadcast_to(u[None], (B, H, Dk)).reshape(B * H, Dk)
+    if use_kernel:
+        of = _k.rwkv6_bhsd(fold(r), fold(k), fold(v), fold(log_w), uf,
+                           chunk=chunk, interpret=not _on_tpu())
+    else:
+        of, _ = _ref.rwkv6_sequential(fold(r), fold(k), fold(v),
+                                      fold(log_w), uf)
+    return of.reshape(B, H, S, Dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Sequential (per-token) RWKV6 recurrence oracle — exact, O(S) scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_sequential(r, k, v, log_w, u, state=None):
+    """r/k [BH,S,Dk], v [BH,S,Dv], log_w [BH,S,Dk], u [BH,Dk].
+    Returns (o [BH,S,Dv], final state [BH,Dk,Dv])."""
+    BH, S, Dk = r.shape
+    Dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((BH, Dk, Dv), jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, lwt = xs                   # [BH,Dk],[BH,Dk],[BH,Dv],[BH,Dk]
+        rt = rt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        wt = jnp.exp(lwt.astype(jnp.float32))
+        bonus = jnp.sum(rt * u.astype(jnp.float32) * kt, -1,
+                        keepdims=True) * vt
+        o = jnp.einsum("bk,bkv->bv", rt, s) + bonus
+        s = wt[..., None] * s + jnp.einsum("bk,bv->bkv", kt, vt)
+        return s, o
+
+    xs = (r.transpose(1, 0, 2), k.transpose(1, 0, 2),
+          v.transpose(1, 0, 2), log_w.transpose(1, 0, 2))
+    state, os_ = jax.lax.scan(step, state, xs)
+    return os_.transpose(1, 0, 2).astype(v.dtype), state

@@ -1,0 +1,422 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE
+(verified empirically: an 8-iteration ``lax.scan`` over a matmul reports 1
+matmul of FLOPs).  Our stacks scan over layer groups and local steps, so
+raw numbers undercount by the product of trip counts — and the same holds
+for collectives that live inside scanned layers (e.g. FSDP weight
+gathers).  This module parses the post-optimization HLO text and computes:
+
+  * flops            — dot/convolution FLOPs, recursing through fusions,
+                       calls and conditionals, multiplying while bodies by
+                       their ``known_trip_count``;
+  * bytes            — an HBM-traffic model: for every top-level op,
+                       result bytes + operand bytes (fusions counted at
+                       their call site = one read of inputs, one write of
+                       outputs — XLA's own model), loop-scaled;
+  * collectives      — per-kind {count, bytes} of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute,
+                       loop-scaled.
+
+The per-device (post-SPMD) module is analyzed, so all quantities are
+per-device.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch import hw
+
+_COMP_HEADER = re.compile(
+    r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s+\((?P<params>.*)\)\s+->.*\{")
+# NOTE: tuple types with >5 elements contain ``/*index=5*/`` comments (which
+# include '='), so the type group must be permissive; laziness stops it at
+# the first " op(" occurrence, which is the opcode.
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w\.\-]+)\s*=\s*(?P<type>\(?.*?\)?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)$")
+_SHAPE = re.compile(r"(?P<dtype>[a-z]\d*[a-z0-9]*)\[(?P<dims>[\d,]*)\]")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+}
+
+
+def _shapes_of(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE.finditer(type_str):
+        dims = [int(d) for d in m.group("dims").split(",") if d]
+        out.append((m.group("dtype"), dims))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * hw.BYTES.get(dt, 0)
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    op: str
+    type_str: str
+    rest: str                      # args + attributes
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, dict] = field(default_factory=lambda: {
+        k: {"count": 0.0, "bytes": 0.0} for k in COLLECTIVE_KINDS})
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        for k in COLLECTIVE_KINDS:
+            self.coll[k]["count"] += other.coll[k]["count"] * scale
+            self.coll[k]["bytes"] += other.coll[k]["bytes"] * scale
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.coll.values())
+
+    @property
+    def collective_count(self) -> float:
+        return sum(v["count"] for v in self.coll.values())
+
+
+def parse_module(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = _Computation(m.group("name"))
+                # parameters declared in the header: "x.1: f32[128,128]"
+                for pm in re.finditer(r"([\w\.\-]+):\s*([^,)]+)",
+                                      m.group("params")):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            op = _Op(m.group("name"), m.group("op"), m.group("type"),
+                     m.group("args"))
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._memo: Dict[str, Cost] = {}
+        entry = None
+        for name, c in self.comps.items():
+            if name.startswith("main") or ".main" in name:
+                entry = name
+        # fall back: ENTRY is the last computation in the file
+        self.entry = entry or list(self.comps)[-1]
+
+    # ------------------------------------------------------------------
+    def cost(self, comp_name: Optional[str] = None,
+             count_io: bool = True) -> Cost:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        if comp is None:
+            return total
+        self._memo[comp_name] = total   # guard (cycles do not occur)
+        for op in comp.ops:
+            total.add(self._op_cost(comp, op))
+        return total
+
+    # ------------------------------------------------------------------
+    def _operand_shapes(self, comp: _Computation, rest: str):
+        # operands are the %refs before the first attribute comma block
+        args = rest.split("),")[0]
+        shapes = []
+        for m in _OPERAND.finditer(args):
+            t = comp.symbols.get(m.group(1))
+            if t:
+                shapes.extend(_shapes_of(t))
+        return shapes
+
+    def _op_cost(self, comp: _Computation, op: _Op) -> Cost:
+        c = Cost()
+        result_shapes = _shapes_of(op.type_str)
+        result_bytes = _bytes_of(result_shapes)
+
+        if op.op == "while":
+            body = _BODY.search(op.rest)
+            trip = 1
+            tm = _TRIP.search(op.rest)
+            if tm:
+                trip = int(tm.group(1))
+            else:
+                cond = _COND.search(op.rest)
+                if cond:
+                    trip = self._cond_trip(cond.group(1))
+            if body:
+                c.add(self.cost(body.group(1)), scale=trip)
+            return c
+
+        if op.op == "conditional":
+            bm = _BRANCHES.search(op.rest)
+            if bm:
+                branches = _OPERAND.findall(bm.group(1)) or [
+                    s.strip().lstrip("%") for s in bm.group(1).split(",")]
+                costs = [self.cost(b) for b in branches]
+                if costs:
+                    # pessimistic: the most expensive branch
+                    c.add(max(costs, key=lambda x: x.flops + x.bytes))
+            return c
+
+        if op.op in ("fusion", "call", "custom-call", "map"):
+            cm = _CALLS.search(op.rest)
+            reads = None
+            if cm:
+                sub = self.cost(cm.group(1))
+                # flops & collectives propagate; internal bytes are VMEM
+                c.flops += sub.flops
+                for k in COLLECTIVE_KINDS:
+                    c.coll[k]["count"] += sub.coll[k]["count"]
+                    c.coll[k]["bytes"] += sub.coll[k]["bytes"]
+                reads = self._fusion_param_reads(cm.group(1))
+            if reads is None:
+                reads = _bytes_of(self._operand_shapes(comp, op.rest))
+            # HBM traffic at the call site
+            c.bytes += result_bytes + reads
+            return c
+
+        base = op.op.removesuffix("-start").removesuffix("-done")
+        if base in COLLECTIVE_KINDS:
+            if not op.op.endswith("-done"):
+                c.coll[base]["count"] += 1
+                c.coll[base]["bytes"] += result_bytes
+                c.bytes += result_bytes + _bytes_of(
+                    self._operand_shapes(comp, op.rest))
+            return c
+
+        if op.op == "dot":
+            operands = self._operand_shapes(comp, op.rest)
+            contract = 1
+            lm = _LHS_CONTRACT.search(op.rest)
+            if lm and operands:
+                lhs_dims = operands[0][1]
+                for d in lm.group(1).split(","):
+                    if d:
+                        contract *= lhs_dims[int(d)]
+            n_out = 1
+            for _, dims in result_shapes:
+                for d in dims:
+                    n_out *= d
+            c.flops += 2.0 * n_out * contract
+            c.bytes += result_bytes + _bytes_of(operands)
+            return c
+
+        if op.op == "convolution":
+            operands = self._operand_shapes(comp, op.rest)
+            n_out = 1
+            for _, dims in result_shapes:
+                for d in dims:
+                    n_out *= d
+            if len(operands) >= 2:
+                k = 1
+                for d in operands[1][1]:
+                    k *= d
+                # per output element: kernel work / output features
+                ofeat = max(result_shapes[0][1][-1], 1) if result_shapes \
+                    else 1
+                c.flops += 2.0 * n_out * max(k // max(ofeat, 1), 1)
+            c.bytes += result_bytes + _bytes_of(operands)
+            return c
+
+        if op.op in _SKIP_BYTES_OPS:
+            return c
+
+        # slice-family traffic models: these touch only the slice, not the
+        # whole operand buffer (counting the full operand would overcount a
+        # layer-stack dynamic-slice by n_layers and a KV-cache update by
+        # cache_len) --------------------------------------------------------
+        if op.op in ("dynamic-slice", "slice", "gather"):
+            c.bytes += 2 * result_bytes          # read slice + write result
+            return c
+        if op.op in ("dynamic-update-slice", "scatter"):
+            operands = self._operand_shapes(comp, op.rest)
+            upd = _bytes_of(operands[1:2]) if len(operands) > 1 \
+                else result_bytes
+            c.bytes += 2 * upd                   # read update + write window
+            return c
+
+        # generic elementwise / reduce / copy: one read + one write
+        c.bytes += result_bytes + _bytes_of(
+            self._operand_shapes(comp, op.rest))
+        return c
+
+    def _fusion_param_reads(self, callee: str) -> Optional[float]:
+        """Effective read bytes of a fused computation's parameters: a
+        parameter consumed ONLY by slice-family ops contributes just the
+        sliced bytes (e.g. the per-iteration dynamic-slice of a stacked
+        layer-parameter array reads 1/n_layers of it), otherwise its full
+        size."""
+        comp = self.comps.get(callee)
+        if comp is None:
+            return None
+        # parameter name -> full bytes
+        params: Dict[str, float] = {}
+        for o in comp.ops:
+            if o.op == "parameter":
+                params[o.name] = _bytes_of(_shapes_of(o.type_str))
+        if not params:
+            return 0.0
+        sliced: Dict[str, float] = {k: 0.0 for k in params}
+        full: Dict[str, bool] = {k: False for k in params}
+        for o in comp.ops:
+            if o.op == "parameter":
+                continue
+            refs = [r for r in _OPERAND.findall(o.rest.split("),")[0])
+                    if r in params]
+            if not refs:
+                continue
+            if o.op in ("dynamic-slice", "slice", "gather"):
+                sliced[refs[0]] += _bytes_of(_shapes_of(o.type_str))
+                for r in refs[1:]:
+                    full[r] = True
+            else:
+                for r in refs:
+                    full[r] = True
+        total = 0.0
+        for name, fb in params.items():
+            if full[name]:
+                total += fb
+            else:
+                total += min(sliced[name], fb)
+        return total
+
+    def _cond_trip(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if not comp:
+            return 1
+        best = 1
+        for op in comp.ops:
+            if op.op == "constant":
+                m = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+
+def analyze(text: str) -> dict:
+    model = HloCostModel(text)
+    c = model.cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": c.collective_bytes,
+        "collective_count": c.collective_count,
+        "collectives": {k: dict(v) for k, v in c.coll.items()
+                        if v["count"]},
+    }
+
+
+_META_NAME = re.compile(r'op_name="([^"]*)"')
+
+
+def profile(text: str, top: int = 25) -> List[Tuple[str, float, float]]:
+    """Attribute bytes/flops to jax-level op_names (the §Perf 'profile'):
+    walks the call graph accumulating per-computation invocation scales,
+    then groups each op's local cost by its metadata op_name.
+
+    Returns [(op_name_prefix, bytes, flops)] sorted by bytes desc.
+    """
+    model = HloCostModel(text)
+    scales: Dict[str, float] = {model.entry: 1.0}
+    order = [model.entry]
+    seen = {model.entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        comp = model.comps.get(name)
+        if comp is None:
+            continue
+        s = scales[name]
+        for op in comp.ops:
+            sub = None
+            mult = 1.0
+            if op.op == "while":
+                b = _BODY.search(op.rest)
+                if b:
+                    sub = b.group(1)
+                    tm = _TRIP.search(op.rest)
+                    mult = int(tm.group(1)) if tm else 1
+            elif op.op in ("fusion", "call", "map"):
+                cmm = _CALLS.search(op.rest)
+                if cmm:
+                    sub = cmm.group(1)
+            if sub:
+                scales[sub] = scales.get(sub, 0.0) + s * mult
+                if sub not in seen:
+                    seen.add(sub)
+                    order.append(sub)
+
+    groups: Dict[str, List[float]] = {}
+    for name, comp in model.comps.items():
+        s = scales.get(name, 0.0)
+        if s == 0.0:
+            continue
+        for op in comp.ops:
+            if op.op in ("while",):
+                continue
+            oc = model._op_cost(comp, op)
+            # do not double count callee flops at the call site
+            local_bytes = oc.bytes
+            local_flops = oc.flops if op.op == "dot" or op.op == "convolution" else 0.0
+            if local_bytes == 0 and local_flops == 0:
+                continue
+            m = _META_NAME.search(op.rest)
+            key = (m.group(1) if m else op.op)
+            # trim parameter-specific suffixes
+            key = re.sub(r"\[.*", "", key)[:110]
+            g = groups.setdefault(key, [0.0, 0.0])
+            g[0] += local_bytes * s
+            g[1] += local_flops * s
+    rows = sorted(((k, v[0], v[1]) for k, v in groups.items()),
+                  key=lambda r: -r[1])
+    return rows[:top]

@@ -1,0 +1,12 @@
+"""Hardware constants for the roofline analysis (TPU v5e per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+BYTES = {
+    "f32": 4, "f16": 2, "bf16": 2, "f64": 8,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}

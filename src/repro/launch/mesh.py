@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state.  TPU v5e numbers (roofline constants) live in
+repro.launch.hw.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the locally available devices (CPU tests/examples)."""
+    n = jax.device_count()
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,160 @@
+"""Input ShapeDtypeStruct stand-ins + PartitionSpecs for every
+(architecture x input-shape x mesh) combination.
+
+Nothing here allocates: params, caches and batches are ShapeDtypeStructs;
+the dry-run lowers against them.  The modality frontends are stubbed per
+the assignment carve-out — audio supplies [*, ENC_LEN, d_frontend] frame
+embeddings, VLM supplies [*, VLM_PATCHES, d_frontend] patch embeddings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import ENC_LEN, VLM_PATCHES
+
+_DP = ("pod", "data")  # filtered against the live mesh
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+# architectures whose replica cannot fit one 'model' mesh slice -> the round
+# engine runs in scan (virtual-client, FSDP) placement
+SCAN_PLACEMENT = {"qwen2-vl-72b", "grok-1-314b"}
+
+# long_500k applicability (see DESIGN.md §4): run only for architectures
+# with no unbounded-context attention cache OR a bounded sliding-window /
+# few-global-layer design.
+LONG_OK = {"rwkv6-7b", "recurrentgemma-9b", "gemma3-1b"}
+
+
+def placement_for(arch: str) -> str:
+    return "scan" if arch in SCAN_PLACEMENT else "mesh"
+
+
+def shape_applicable(arch: str, cfg: ModelConfig, shape: InputShape
+                     ) -> tuple:
+    """(ok, reason)."""
+    if shape.name == "long_500k" and arch not in LONG_OK:
+        return False, ("full-attention arch: 500k decode cache is unbounded-"
+                       "context; skipped per assignment rule (DESIGN.md §4)")
+    return True, ""
+
+
+def _dp(mesh) -> tuple:
+    return tuple(a for a in _DP if a in mesh.axis_names)
+
+
+def round_geometry(shape: InputShape, placement: str, mesh) -> tuple:
+    """(C clients, H local steps, b per-step client batch)."""
+    H = 4
+    if placement == "mesh":
+        C = 1
+        for a in _dp(mesh):
+            C *= mesh.shape[a]
+    else:
+        dp = 1
+        for a in _dp(mesh):
+            dp *= mesh.shape[a]
+        # few, large virtual clients; per-step batch shards the dp axes
+        C = max(1, 64 // dp)  # 4 on 256 chips, 2 on 512
+    b = shape.global_batch // (C * H)
+    assert b >= 1, (shape.name, C, H)
+    assert C * H * b == shape.global_batch
+    return C, H, b
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def train_batch_specs(arch: str, cfg: ModelConfig, shape: InputShape,
+                      placement: str, mesh):
+    """Returns (batches_sds, batches_pspec, weights_sds, weights_pspec).
+
+    Batch leaves have leading [C, H]; the per-step batch matches what
+    ``transformer.loss_fn`` consumes.
+    """
+    C, H, b = round_geometry(shape, placement, mesh)
+    S = shape.seq
+    dp = _dp(mesh)
+    if placement == "mesh":
+        lead = P(dp, None)        # clients axis sharded
+        bpos = P(dp, None, None)  # for [C,H,b,...] leaves: batch unsharded
+        def leaf_spec(extra_rank):
+            return P(dp, None, *([None] * extra_rank))
+    else:
+        def leaf_spec(extra_rank):
+            # [C, H, b, ...]: shard the per-client batch dim over data
+            return P(None, None, dp, *([None] * (extra_rank - 1)))
+
+    sds = {
+        "tokens": _i32((C, H, b, S)),
+        "labels": _i32((C, H, b, S)),
+    }
+    spec = {
+        "tokens": leaf_spec(2),
+        "labels": leaf_spec(2),
+    }
+    if cfg.family == "vlm":
+        sds["patches"] = _f32((C, H, b, VLM_PATCHES, cfg.d_frontend))
+        spec["patches"] = leaf_spec(3)
+        sds["mrope_positions"] = _i32((C, H, 3, b, S))
+        spec["mrope_positions"] = (P(dp, None, None, None, None)
+                                   if placement == "mesh"
+                                   else P(None, None, None, dp, None))
+        sds["loss_mask"] = _f32((C, H, b, S))
+        spec["loss_mask"] = leaf_spec(2)
+    if cfg.enc_dec:
+        sds["frames"] = _f32((C, H, b, ENC_LEN, cfg.d_frontend))
+        spec["frames"] = leaf_spec(3)
+    weights_sds = _f32((C,))
+    weights_spec = P(dp) if placement == "mesh" else P()
+    return sds, spec, weights_sds, weights_spec
+
+
+def serve_batch_specs(arch: str, cfg: ModelConfig, shape: InputShape, mesh):
+    """Prefill/decode request batches.  Returns (sds, pspec) trees plus the
+    decode position scalar when kind == decode."""
+    B = shape.global_batch
+    S = shape.seq
+    dp = _dp(mesh)
+    bax = dp if B > 1 else None   # batch=1 (long_500k) cannot shard batch
+    if shape.kind == "prefill":
+        sds = {"tokens": _i32((B, S))}
+        spec = {"tokens": P(bax, None)}
+        if cfg.family == "vlm":
+            sds["patches"] = _f32((B, VLM_PATCHES, cfg.d_frontend))
+            spec["patches"] = P(bax, None, None)
+            sds["mrope_positions"] = _i32((3, B, S))
+            spec["mrope_positions"] = P(None, bax, None)
+        if cfg.enc_dec:
+            sds["frames"] = _f32((B, ENC_LEN, cfg.d_frontend))
+            spec["frames"] = P(bax, None, None)
+        return sds, spec
+    # decode: one token per sequence
+    sds = {"tokens": _i32((B, 1)), "pos": _i32(())}
+    spec = {"tokens": P(bax, None), "pos": P()}
+    return sds, spec

@@ -1,0 +1,87 @@
+"""Federated training driver (the runnable end-to-end loop).
+
+Couples the host-side scheduler (client sampling, round-batch assembly,
+checkpointing, logging) with the jitted round engine.  Used by the examples
+and the paper-reproduction benchmarks; the same driver scales from the
+paper's LeNet to the assigned-architecture reduced configs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_state
+from repro.core import RoundConfig, round_step
+from repro.core.sampling import UniformSampler
+from repro.core.server_opt import ServerOpt, ServerState
+from repro.data.federated import FederatedDataset
+
+
+@dataclass
+class FederatedTrainer:
+    loss_fn: Callable                  # (params, batch) -> (loss, metrics)
+    server_opt: ServerOpt
+    rcfg: RoundConfig
+    dataset: FederatedDataset
+    sampler: UniformSampler
+    state: ServerState
+    param_axes: Optional[Any] = None
+    lr_schedule: Optional[Callable] = None   # round t -> gamma_t
+                                             # (Corollary 3.3 schedules)
+    ckpt_path: Optional[str] = None
+    ckpt_every: int = 0
+    history: list = field(default_factory=list)
+    _step: Optional[Callable] = None
+
+    def __post_init__(self):
+        rcfg, axes = self.rcfg, self.param_axes
+        loss_fn, opt = self.loss_fn, self.server_opt
+
+        @jax.jit
+        def step(state, batches, weights, lr):
+            return round_step(loss_fn, opt, state, batches, weights, rcfg,
+                              param_axes=axes, lr=lr)
+
+        self._step = step
+
+    def run(self, n_rounds: int, log_every: int = 50,
+            eval_fn: Optional[Callable] = None, verbose: bool = True):
+        rcfg = self.rcfg
+        t_start = time.time()
+        for t in range(n_rounds):
+            idx, weights = self.sampler.sample(t)
+            batches = self.dataset.round_batches(
+                idx, rcfg.local_steps, self.local_batch_size())
+            batches = jax.tree.map(jnp.asarray, batches)
+            lr_t = (self.rcfg.lr if self.lr_schedule is None
+                    else float(self.lr_schedule(t)))
+            self.state, metrics = self._step(
+                self.state, batches, jnp.asarray(weights),
+                jnp.float32(lr_t))
+            rec = {"round": t, "loss": float(metrics["loss"]),
+                   "delta_norm": float(metrics["delta_norm"])}
+            if eval_fn is not None and (t % log_every == 0
+                                        or t == n_rounds - 1):
+                rec.update(eval_fn(self.state))
+            self.history.append(rec)
+            if verbose and (t % log_every == 0 or t == n_rounds - 1):
+                extra = " ".join(f"{k}={v:.4f}" for k, v in rec.items()
+                                 if k not in ("round",))
+                print(f"  round {t:5d}  {extra}  "
+                      f"({time.time() - t_start:.1f}s)")
+            if (self.ckpt_path and self.ckpt_every
+                    and t % self.ckpt_every == 0 and t > 0):
+                save_state(self.ckpt_path, self.state, {"round": t})
+        return self.history
+
+    def local_batch_size(self) -> int:
+        return getattr(self, "_local_batch", 10)
+
+    def set_local_batch(self, b: int):
+        self._local_batch = b
+        return self

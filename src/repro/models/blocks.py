@@ -1,0 +1,552 @@
+"""Residual blocks for every block kind (ATTN / LOCAL / RGLRU / RWKV), with
+a unified ``init_block`` / ``apply_block`` interface so the transformer
+assembly can scan heterogeneous layer patterns.
+
+``apply_block(p, cfg, kind, x, ctx)`` returns ``(x, new_cache, aux)`` where
+``ctx`` carries mode ('train' | 'prefill' | 'decode'), rope tables, the
+per-block cache, decode position, and (enc-dec) encoder output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ATTN, LOCAL, RGLRU, RWKV, ModelConfig
+from repro.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# declarative parameter construction: every init returns (params, axes) trees
+# with identical structure; axes leaves are tuples of logical axis names.
+# ---------------------------------------------------------------------------
+class KeyGen:
+    """Splits keys for materialized init; ``KeyGen(None)`` puts the builders
+    in *abstract* mode where every leaf is a ShapeDtypeStruct (no memory) —
+    used to derive logical-axis trees and dry-run input specs for models that
+    cannot fit on the host."""
+
+    def __init__(self, key):
+        self._key = key
+
+    @property
+    def abstract(self) -> bool:
+        return self._key is None
+
+    def __call__(self):
+        if self._key is None:
+            return None
+        self._key, k = jax.random.split(self._key)
+        return k
+
+
+def _dense(kg: KeyGen, shape, axes, dtype, scale: Optional[float] = None):
+    if kg.abstract:
+        return jax.ShapeDtypeStruct(shape, dtype), axes
+    fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+    if scale is None:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    arr = jax.random.normal(kg(), shape, dtype=jnp.float32) * scale
+    return arr.astype(dtype), axes
+
+
+def _normal(kg: KeyGen, shape, axes, dtype, stddev: float):
+    if kg.abstract:
+        return jax.ShapeDtypeStruct(shape, dtype), axes
+    arr = jax.random.normal(kg(), shape, jnp.float32) * stddev
+    return arr.astype(dtype), axes
+
+
+def _zeros(shape, axes, dtype, *, kg: Optional[KeyGen] = None):
+    if kg is not None and kg.abstract:
+        return jax.ShapeDtypeStruct(shape, dtype), axes
+    return jnp.zeros(shape, dtype), axes
+
+
+def _const(val_fn, shape, axes, dtype, *, kg: Optional[KeyGen] = None):
+    """val_fn: () -> array, evaluated only in materialized mode."""
+    if kg is not None and kg.abstract:
+        return jax.ShapeDtypeStruct(shape, dtype), axes
+    v = val_fn() if callable(val_fn) else val_fn
+    return jnp.asarray(v, dtype), axes
+
+
+def split_pt(pairs: dict):
+    """{'name': (param, axes)} -> (params, axes) twin trees."""
+    params, axes = {}, {}
+    for name, v in pairs.items():
+        if isinstance(v, tuple) and len(v) == 2 and isinstance(v[1], (tuple, dict)):
+            if isinstance(v[1], dict):
+                params[name], axes[name] = v
+            else:
+                params[name], axes[name] = v
+        elif isinstance(v, dict):
+            params[name], axes[name] = split_pt(v)
+        else:
+            raise TypeError(f"{name}: {type(v)}")
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE params
+# ---------------------------------------------------------------------------
+def init_mlp(kg: KeyGen, cfg: ModelConfig, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.moe:
+        E = cfg.moe.n_experts
+        pairs = {
+            "router": _dense(kg, (D, E), ("embed", "expert"), jnp.float32),
+            "wi_up": _dense(kg, (E, D, F), ("expert", "embed", "expert_mlp"), dtype),
+            "wo": _dense(kg, (E, F, D), ("expert", "expert_mlp", "embed"), dtype),
+        }
+        if cfg.act in ("swiglu", "geglu"):
+            pairs["wi_gate"] = _dense(kg, (E, D, F),
+                                      ("expert", "embed", "expert_mlp"), dtype)
+        return split_pt(pairs)
+    pairs = {
+        "wi_up": _dense(kg, (D, F), ("embed", "mlp"), dtype),
+        "wo": _dense(kg, (F, D), ("mlp", "embed"), dtype),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        pairs["wi_gate"] = _dense(kg, (D, F), ("embed", "mlp"), dtype)
+    return split_pt(pairs)
+
+
+def apply_mlp(p: dict, cfg: ModelConfig, x: jax.Array):
+    if cfg.moe:
+        return L.moe_apply(p, x, n_experts=cfg.moe.n_experts,
+                           top_k=cfg.moe.top_k,
+                           capacity_factor=cfg.moe.capacity_factor,
+                           act=cfg.act, dispatch=cfg.moe_dispatch)
+    return L.mlp_apply(p, x, cfg.act), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# attention blocks (global + sliding window, optional cross-attention)
+# ---------------------------------------------------------------------------
+def init_attn_params(kg: KeyGen, cfg: ModelConfig, dtype, *, kv_heads=None):
+    D, Hq, Dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    Hkv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    pairs = {
+        "wq": _dense(kg, (D, Hq, Dh), ("embed", "heads", "head_dim"), dtype),
+        "wk": _dense(kg, (D, Hkv, Dh), ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": _dense(kg, (D, Hkv, Dh), ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": _dense(kg, (Hq, Dh, D), ("heads", "head_dim", "embed"), dtype),
+    }
+    if cfg.qkv_bias:
+        pairs["bq"] = _zeros((Hq, Dh), ("heads", "head_dim"), dtype, kg=kg)
+        pairs["bk"] = _zeros((Hkv, Dh), ("kv_heads", "head_dim"), dtype, kg=kg)
+        pairs["bv"] = _zeros((Hkv, Dh), ("kv_heads", "head_dim"), dtype, kg=kg)
+    if cfg.qk_norm:
+        pairs["q_norm"] = _zeros((Dh,), ("head_dim",), jnp.float32, kg=kg)
+        pairs["k_norm"] = _zeros((Dh,), ("head_dim",), jnp.float32, kg=kg)
+    return split_pt(pairs)
+
+
+def init_block(kg: KeyGen, cfg: ModelConfig, kind: str, dtype, *,
+               cross: bool = False):
+    D = cfg.d_model
+    if kind in (ATTN, LOCAL):
+        sub = {
+            "ln1": _zeros((D,), ("embed",), jnp.float32, kg=kg),
+            "attn": init_attn_params(kg, cfg, dtype),
+            "ln2": _zeros((D,), ("embed",), jnp.float32, kg=kg),
+            "mlp": init_mlp(kg, cfg, dtype),
+        }
+        if cross:
+            sub["lnx"] = _zeros((D,), ("embed",), jnp.float32, kg=kg)
+            sub["xattn"] = init_attn_params(kg, cfg, dtype,
+                                            kv_heads=cfg.n_heads)
+        return split_pt(sub)
+    if kind == RGLRU:
+        R, W = cfg.rnn_d, cfg.conv_width
+
+        def lam_init():
+            # softplus^-1 of -log(a)/c with a ~ U(0.9, 0.999)
+            a = jax.random.uniform(kg(), (R,), minval=0.9, maxval=0.999)
+            return jnp.log(jnp.expm1(-jnp.log(a) / L._RGLRU_C))
+
+        sub = {
+            "ln1": _zeros((D,), ("embed",), jnp.float32, kg=kg),
+            "w_x": _dense(kg, (D, R), ("embed", "rnn"), dtype),
+            "w_y": _dense(kg, (D, R), ("embed", "rnn"), dtype),
+            "conv_w": _dense(kg, (W, R), ("conv", "rnn"), dtype,
+                             scale=1.0 / math.sqrt(W)),
+            "conv_b": _zeros((R,), ("rnn",), dtype, kg=kg),
+            "lam": _const(lam_init, (R,), ("rnn",), jnp.float32, kg=kg),
+            "w_a": _dense(kg, (R, R), (None, "rnn"), dtype),
+            "w_i": _dense(kg, (R, R), (None, "rnn"), dtype),
+            "w_o": _dense(kg, (R, D), ("rnn", "embed"), dtype),
+            "ln2": _zeros((D,), ("embed",), jnp.float32, kg=kg),
+            "mlp": init_mlp(kg, cfg, dtype),
+        }
+        return split_pt(sub)
+    if kind == RWKV:
+        H = cfg.d_model // cfg.rwkv_head_dim
+        Dh = cfg.rwkv_head_dim
+        Lo = cfg.rwkv_decay_lora
+        F = cfg.d_ff
+        sub = {
+            "ln1": _zeros((D,), ("embed",), jnp.float32, kg=kg),
+            "tm": split_pt({
+                "mu": _const(lambda: 0.5 * jnp.ones((5, D)), (5, D),
+                             (None, "embed"), jnp.float32, kg=kg),
+                "w_r": _dense(kg, (D, H, Dh), ("embed", "heads", "head_dim"), dtype),
+                "w_k": _dense(kg, (D, H, Dh), ("embed", "heads", "head_dim"), dtype),
+                "w_v": _dense(kg, (D, H, Dh), ("embed", "heads", "head_dim"), dtype),
+                "w_g": _dense(kg, (D, H, Dh), ("embed", "heads", "head_dim"), dtype),
+                # decay base: per-channel ramp in log-decay space
+                "w0": _const(lambda: jnp.linspace(-6.0, -0.3, D).reshape(H, Dh),
+                             (H, Dh), ("heads", "head_dim"), jnp.float32, kg=kg),
+                "lora_a": _dense(kg, (D, Lo), ("embed", "lora"), dtype),
+                "lora_b": _dense(kg, (Lo, H, Dh), ("lora", "heads", "head_dim"),
+                                 dtype, scale=1e-2),
+                "u": _zeros((H, Dh), ("heads", "head_dim"), jnp.float32, kg=kg),
+                "ln_x": _zeros((H, Dh), ("heads", "head_dim"), jnp.float32, kg=kg),
+                "w_o": _dense(kg, (H, Dh, D), ("heads", "head_dim", "embed"), dtype),
+            }),
+            "ln2": _zeros((D,), ("embed",), jnp.float32, kg=kg),
+            "cm": split_pt({
+                "mu": _const(lambda: 0.5 * jnp.ones((2, D)), (2, D),
+                             (None, "embed"), jnp.float32, kg=kg),
+                "w_r": _dense(kg, (D, D), (None, "embed"), dtype),
+                "w_k": _dense(kg, (D, F), ("embed", "mlp"), dtype),
+                "w_v": _dense(kg, (F, D), ("mlp", "embed"), dtype),
+            }),
+        }
+        return split_pt(sub)
+    raise ValueError(kind)
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array, rope):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = L.head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope is not None:
+        sin, cos = rope
+        q = L.apply_rope(q, sin, cos)
+        k = L.apply_rope(k, sin, cos)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _attn_mix(p: dict, cfg: ModelConfig, kind: str, x: jax.Array, ctx: dict):
+    """Self-attention mixing with cache handling.  Returns (out, new_cache)."""
+    mode = ctx["mode"]
+    rope = ctx.get("rope")
+    cache = ctx.get("cache")
+    window = cfg.window if kind == LOCAL else 0
+    q, k, v = _project_qkv(p, cfg, x, rope)
+    B, S = x.shape[0], x.shape[1]
+
+    def self_attn(q, k, v, causal):
+        if (cfg.attention_impl == "pallas"
+                and q.shape[1] == k.shape[1]      # self-attention, no cache
+                and q.shape[1] % 128 == 0):
+            from repro.kernels.flash_attention import ops as flash_ops
+            return flash_ops.flash_attention(q, k, v, causal=causal,
+                                             window=window)
+        return L.attention(q, k, v, causal=causal, window=window,
+                           q_chunk=ctx.get("q_chunk", 1024))
+
+    if mode == "train":
+        out = self_attn(q, k, v, ctx.get("causal", True))
+        return out, None
+
+    if mode == "prefill":
+        out = self_attn(q, k, v, True)
+        if kind == ATTN:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            return out, {"k": ck, "v": cv}
+        # local: keep the last min(S, window) positions in a ring buffer
+        W = cache["k"].shape[1]
+        keep = min(S, W)
+        pos = jnp.arange(S - keep, S)
+        slots = pos % W
+        ck = cache["k"].at[:, slots].set(k[:, -keep:].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(v[:, -keep:].astype(cache["v"].dtype))
+        cpos = cache["pos"].at[slots].set(pos)
+        return out, {"k": ck, "v": cv, "pos": cpos}
+
+    # decode: S == 1
+    pos = ctx["pos"]
+    if kind == ATTN:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        out = L.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                          causal=True, q_offset=pos, kv_len=pos + 1)
+        return out, {"k": ck, "v": cv}
+    W = cache["k"].shape[1]
+    slot = pos % W
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+    out = L.attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                      causal=True, q_offset=pos, window=window,
+                      k_positions=cpos)
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def _cross_mix(p: dict, cfg: ModelConfig, x: jax.Array, ctx: dict):
+    """Encoder-decoder cross attention (full heads, no rope, non-causal)."""
+    mode = ctx["mode"]
+    cache = ctx.get("cache")
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if mode in ("train", "prefill"):
+        enc = ctx["enc_out"]
+        k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+        if cfg.qkv_bias:
+            k = k + p["bk"]
+            v = v + p["bv"]
+        out = L.attention(q, k, v, causal=False)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"xk": k.astype(cache["xk"].dtype),
+                         "xv": v.astype(cache["xv"].dtype)}
+        return out, new_cache
+    # decode: cross k/v were cached at prefill
+    out = L.attention(q, cache["xk"].astype(q.dtype),
+                      cache["xv"].astype(q.dtype), causal=False)
+    return out, {"xk": cache["xk"], "xv": cache["xv"]}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block
+# ---------------------------------------------------------------------------
+def _rglru_mix(p: dict, cfg: ModelConfig, x: jax.Array, ctx: dict):
+    mode = ctx["mode"]
+    cache = ctx.get("cache")
+    y_gate = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    u = shard(u, "batch", "seq", "rnn")
+    conv_state = cache["conv"] if mode == "decode" else None
+    u, conv_state = L.causal_conv1d(p["conv_w"], p["conv_b"], u, conv_state)
+    if mode == "decode":
+        h, h_last = L.rglru_step(p, u, cache["h"])
+    else:
+        h, h_last = L.rglru_scan(p, u,
+                                 scan_dtype=jnp.dtype(cfg.rglru_dtype),
+                                 gate_gather=cfg.rglru_gate_gather)
+        h_last = h_last.astype(jnp.float32)
+    out = (h * y_gate) @ p["w_o"]
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"h": h_last, "conv": conv_state}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time mix + channel mix)
+# ---------------------------------------------------------------------------
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x [B,S,D] -> x shifted right by one token; position 0 gets ``prev``
+    (decode carry) or zeros."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _rwkv_time_mix(p: dict, cfg: ModelConfig, x: jax.Array, ctx: dict):
+    mode = ctx["mode"]
+    cache = ctx.get("cache")
+    H, Dh = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    prev = cache["tm_prev"].astype(x.dtype) if mode == "decode" else None
+    xs = _token_shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    # static per-component token-shift interpolation (Finch's ddlerp LoRA is
+    # applied to the decay only; see DESIGN.md numerics notes)
+    xr, xk, xv, xw, xg = (x + mu[i] * (xs - x) for i in range(5))
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["w_r"])
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["w_v"])
+    g = jnp.einsum("bsd,dhk->bshk", xg, p["w_g"])
+    # data-dependent decay (the Finch hallmark): log w = -exp(w0 + lora(xw))
+    lora = jnp.einsum("bsl,lhk->bshk", jnp.tanh(xw @ p["lora_a"]), p["lora_b"])
+    log_w = -jnp.exp(jnp.clip(
+        p["w0"].astype(jnp.float32) + lora.astype(jnp.float32), -20.0, 8.0))
+    if mode == "decode":
+        o, state = L.rwkv6_step(r, k, v, log_w, p["u"], cache["s"])
+    elif cfg.rwkv_impl == "pallas" and mode == "train":
+        from repro.kernels.rwkv6_scan import ops as rwkv6_ops
+        o = rwkv6_ops.rwkv6(r, k, v, log_w, p["u"],
+                            chunk=ctx.get("rwkv_chunk", cfg.rwkv_chunk))
+        state = None
+    else:
+        o, state = L.rwkv6_chunked(r, k, v, log_w, p["u"],
+                                   chunk=ctx.get("rwkv_chunk", cfg.rwkv_chunk))
+    o = L.head_rms_norm(o, p["ln_x"], cfg.norm_eps)
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["w_o"])
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"s": state, "tm_prev": x[:, -1].astype(jnp.float32)}
+    return out, new_cache
+
+
+def _rwkv_channel_mix(p: dict, cfg: ModelConfig, x: jax.Array, ctx: dict):
+    mode = ctx["mode"]
+    cache = ctx.get("cache")
+    prev = cache["cm_prev"].astype(x.dtype) if mode == "decode" else None
+    xs = _token_shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    xr = x + mu[0] * (xs - x)
+    xk = x + mu[1] * (xs - x)
+    rgate = jax.nn.sigmoid(xr @ p["w_r"])
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    kk = shard(kk, "batch", "seq", "mlp")
+    out = rgate * (kk @ p["w_v"])
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"cm_prev": x[:, -1].astype(jnp.float32)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# unified block apply
+# ---------------------------------------------------------------------------
+def apply_block(p: dict, cfg: ModelConfig, kind: str, x: jax.Array,
+                ctx: dict):
+    """Returns (x, new_cache, moe_aux_loss)."""
+    aux = jnp.float32(0.0)
+    cache = ctx.get("cache") or {}
+
+    if kind in (ATTN, LOCAL):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        sub_ctx = dict(ctx, cache=cache.get("self"))
+        mix, self_cache = _attn_mix(p["attn"], cfg, kind, h, sub_ctx)
+        x = x + jnp.einsum("bshk,hkd->bsd", mix, p["attn"]["wo"])
+        new_cache = {}
+        if self_cache is not None:
+            new_cache["self"] = self_cache
+        if "xattn" in p:
+            h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+            sub_ctx = dict(ctx, cache=cache.get("cross"))
+            mix, cross_cache = _cross_mix(p["xattn"], cfg, h, sub_ctx)
+            x = x + jnp.einsum("bshk,hkd->bsd", mix, p["xattn"]["wo"])
+            if cross_cache is not None:
+                new_cache["cross"] = cross_cache
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, aux = apply_mlp(p["mlp"], cfg, h)
+        x = x + y
+        x = shard(x, "batch", "seq", "embed")
+        return x, (new_cache or None), aux
+
+    if kind == RGLRU:
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        sub_ctx = dict(ctx, cache=cache.get("rnn"))
+        mix, rnn_cache = _rglru_mix(p, cfg, h, sub_ctx)
+        x = x + mix
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, aux = apply_mlp(p["mlp"], cfg, h)
+        x = x + y
+        x = shard(x, "batch", "seq", "embed")
+        return x, ({"rnn": rnn_cache} if rnn_cache is not None else None), aux
+
+    if kind == RWKV:
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        sub_ctx = dict(ctx, cache=cache.get("tm"))
+        mix, tm_cache = _rwkv_time_mix(p["tm"], cfg, h, sub_ctx)
+        x = x + mix
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        sub_ctx = dict(ctx, cache=cache.get("cm"))
+        y, cm_cache = _rwkv_channel_mix(p["cm"], cfg, h, sub_ctx)
+        x = x + y
+        x = shard(x, "batch", "seq", "embed")
+        new_cache = None
+        if tm_cache is not None or cm_cache is not None:
+            new_cache = {"tm": tm_cache, "cm": cm_cache}
+        return x, new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-block cache construction (shapes only; zeros)
+# ---------------------------------------------------------------------------
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype, *, cross_len: int = 0, abstract: bool = False):
+    """Returns (cache, axes) twin trees for one block."""
+    kg = KeyGen(None) if abstract else None
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    if kind == ATTN:
+        c = {
+            "self": {
+                "k": _zeros((batch, max_len, Hkv, Dh),
+                            ("batch", "seq", "kv_heads", "head_dim"), dtype,
+                            kg=kg),
+                "v": _zeros((batch, max_len, Hkv, Dh),
+                            ("batch", "seq", "kv_heads", "head_dim"), dtype,
+                            kg=kg),
+            }
+        }
+    elif kind == LOCAL:
+        W = min(cfg.window, max_len) if cfg.window else max_len
+        c = {
+            "self": {
+                "k": _zeros((batch, W, Hkv, Dh),
+                            ("batch", "seq", "kv_heads", "head_dim"), dtype,
+                            kg=kg),
+                "v": _zeros((batch, W, Hkv, Dh),
+                            ("batch", "seq", "kv_heads", "head_dim"), dtype,
+                            kg=kg),
+                "pos": _const(lambda: -jnp.ones((W,)), (W,), ("seq",),
+                              jnp.int32, kg=kg),
+            }
+        }
+    elif kind == RGLRU:
+        R, W = cfg.rnn_d, cfg.conv_width
+        c = {
+            "rnn": {
+                "h": _zeros((batch, R), ("batch", "rnn"), jnp.float32, kg=kg),
+                "conv": _zeros((batch, W - 1, R), ("batch", None, "rnn"),
+                               dtype, kg=kg),
+            }
+        }
+    elif kind == RWKV:
+        H, Dh6 = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+        c = {
+            "tm": {
+                "s": _zeros((batch, H, Dh6, Dh6),
+                            ("batch", "heads", "head_dim", None),
+                            jnp.float32, kg=kg),
+                "tm_prev": _zeros((batch, cfg.d_model), ("batch", "embed"),
+                                  jnp.float32, kg=kg),
+            },
+            "cm": {
+                "cm_prev": _zeros((batch, cfg.d_model), ("batch", "embed"),
+                                  jnp.float32, kg=kg),
+            },
+        }
+    else:
+        raise ValueError(kind)
+    if cross_len:
+        c["cross"] = {
+            "xk": _zeros((batch, cross_len, cfg.n_heads, Dh),
+                         ("batch", "seq", "heads", "head_dim"), dtype, kg=kg),
+            "xv": _zeros((batch, cross_len, cfg.n_heads, Dh),
+                         ("batch", "seq", "heads", "head_dim"), dtype, kg=kg),
+        }
+    return split_pt(c)

@@ -1,0 +1,125 @@
+"""The paper's own experiment models: LeNet (FEMNIST digit/char recognition,
+LeCun et al. 1998) and a 1-layer 128-unit character-level LSTM (Kim et al.
+2016) for Shakespeare next-char prediction — §5.1 of the paper.
+
+Pure-function init/apply pairs compatible with the federated round engine
+(loss_fn(params, batch) -> (loss, metrics))."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import (
+    FEMNIST_CLASSES,
+    SHAKESPEARE_SEQ,
+    SHAKESPEARE_VOCAB,
+)
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+    scale = scale or 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# LeNet
+# ---------------------------------------------------------------------------
+def lenet_init(key, n_classes: int = FEMNIST_CLASSES):
+    ks = jax.random.split(key, 4)
+    return {
+        "conv1": _dense_init(ks[0], (5, 5, 1, 6)),
+        "b1": jnp.zeros((6,)),
+        "conv2": _dense_init(ks[1], (5, 5, 6, 16)),
+        "b2": jnp.zeros((16,)),
+        "fc1": _dense_init(ks[2], (16 * 4 * 4, 120)),
+        "bf1": jnp.zeros((120,)),
+        "fc2": _dense_init(ks[3], (120, n_classes)),
+        "bf2": jnp.zeros((n_classes,)),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def lenet_apply(params, x):
+    """x [B,28,28,1] -> logits [B,n_classes]."""
+    h = jnp.tanh(_conv(x, params["conv1"], params["b1"]))   # 24x24x6
+    h = _maxpool(h)                                          # 12x12x6
+    h = jnp.tanh(_conv(h, params["conv2"], params["b2"]))   # 8x8x16
+    h = _maxpool(h)                                          # 4x4x16
+    h = h.reshape(h.shape[0], -1)
+    h = jnp.tanh(h @ params["fc1"] + params["bf1"])
+    return h @ params["fc2"] + params["bf2"]
+
+
+def lenet_loss(params, batch):
+    logits = lenet_apply(params, batch["x"])
+    labels = batch["y"]
+    nll = (jax.nn.logsumexp(logits, -1)
+           - jnp.take_along_axis(logits, labels[:, None], -1)[:, 0])
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# char-LSTM (1 layer, 128 units, tied 8-dim char embedding per LEAF)
+# ---------------------------------------------------------------------------
+LSTM_HIDDEN = 128
+CHAR_EMBED = 8
+
+
+def lstm_init(key, vocab: int = SHAKESPEARE_VOCAB,
+              hidden: int = LSTM_HIDDEN, embed: int = CHAR_EMBED):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": _dense_init(ks[0], (vocab, embed), scale=0.1),
+        "wx": _dense_init(ks[1], (embed, 4 * hidden)),
+        "wh": _dense_init(ks[2], (hidden, 4 * hidden)),
+        "b": jnp.zeros((4 * hidden,)),
+        "head": _dense_init(ks[3], (hidden, vocab)),
+        "head_b": jnp.zeros((vocab,)),
+    }
+
+
+def lstm_apply(params, tokens):
+    """tokens [B,S] -> logits [B,S,V]."""
+    B, S = tokens.shape
+    H = params["wh"].shape[0]
+    x = params["embed"][tokens]                    # [B,S,E]
+
+    def cell(carry, xt):
+        h, c = carry
+        z = xt @ params["wx"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = (jnp.zeros((B, H)), jnp.zeros((B, H)))
+    _, hs = jax.lax.scan(cell, h0, x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)                     # [B,S,H]
+    return hs @ params["head"] + params["head_b"]
+
+
+def lstm_loss(params, batch):
+    logits = lstm_apply(params, batch["tokens"])
+    labels = batch["labels"]
+    nll = (jax.nn.logsumexp(logits, -1)
+           - jnp.take_along_axis(logits, labels[..., None], -1)[..., 0])
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

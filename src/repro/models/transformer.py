@@ -1,0 +1,373 @@
+"""Architecture assembly: embedding, (optionally scanned) heterogeneous block
+stacks, enc-dec wiring, KV/recurrent caches, and the training loss.
+
+Public API (all pure functions over explicit pytrees):
+
+    init(cfg, key)                      -> (params, logical_axes)
+    abstract_params(cfg)                -> (ShapeDtypeStructs, logical_axes)
+    apply(params, cfg, batch)           -> (logits, aux)        # train
+    loss_fn(params, cfg, batch)         -> (loss, metrics)
+    init_cache(cfg, batch, max_len)     -> (cache, logical_axes)
+    prefill(params, cfg, batch, cache)  -> (logits_last, cache)
+    decode_step(params, cfg, cache, tokens, pos) -> (logits, cache)
+
+Parameters for models too large to materialize (grok-1-314b et al.) are only
+ever built in *abstract* mode (ShapeDtypeStruct leaves) — the multi-pod
+dry-run lowers against those specs without allocating.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models.config import ATTN, ModelConfig
+from repro.sharding import shard
+
+# encoder sequence length for the stubbed audio frontend (whisper-medium
+# natively produces 1500 frames; rounded to a TPU-friendly 1536)
+ENC_LEN = 1536
+# number of (stubbed) image patch embeddings prepended for VLM inputs
+VLM_PATCHES = 256
+
+_IS_AXES = (lambda x: isinstance(x, tuple)
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_axes(axes_tree):
+    return jax.tree.map(lambda a: ("layers",) + a, axes_tree,
+                        is_leaf=_IS_AXES)
+
+
+def _stack_abstract(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _build(cfg: ModelConfig, key: Optional[jax.Array]):
+    kg = B.KeyGen(key)
+    dtype = _dtype(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    pairs = {
+        "embed": B._normal(kg, (V, D), ("vocab", "embed"), jnp.float32,
+                           stddev=0.02),
+        "final_norm": B._zeros((D,), ("embed",), jnp.float32, kg=kg),
+    }
+    if not cfg.tie_embeddings:
+        pairs["lm_head"] = B._dense(kg, (D, V), ("embed", "vocab"), dtype)
+    if cfg.pos == "learned":
+        pairs["pos_emb"] = B._normal(kg, (cfg.max_position, D),
+                                     (None, "embed"), jnp.float32, stddev=0.02)
+    if cfg.d_frontend:
+        pairs["frontend_proj"] = B._dense(
+            kg, (cfg.d_frontend, D), (None, "embed"), dtype)
+        if cfg.enc_dec and cfg.pos == "learned":
+            pairs["enc_pos_emb"] = B._normal(
+                kg, (ENC_LEN, D), (None, "embed"), jnp.float32, stddev=0.02)
+
+    def group_params(key):
+        kg2 = B.KeyGen(key)
+        sub = {f"b{i}": B.init_block(kg2, cfg, kind, dtype, cross=cfg.enc_dec)
+               for i, kind in enumerate(cfg.layer_pattern)}
+        return B.split_pt(sub)
+
+    scanned = cfg.scan_layers and cfg.n_groups > 1
+    if scanned:
+        g_abs, g_axes = group_params(None)  # abstract probe (kg2 abstract)
+        if kg.abstract:
+            gp = _stack_abstract(g_abs, cfg.n_groups)
+        else:
+            keys = jax.random.split(kg(), cfg.n_groups)
+            gp = jax.vmap(lambda k: group_params(k)[0])(keys)
+        pairs["groups"] = (gp, _stack_axes(g_axes))
+        rem_kinds = cfg.kinds_of_remainder()
+    else:
+        rem_kinds = tuple(cfg.layer_pattern[i % cfg.pattern_period]
+                          for i in range(cfg.n_layers))
+    if rem_kinds:
+        rem = {f"l{i}": B.init_block(B.KeyGen(kg()), cfg, kind, dtype,
+                                     cross=cfg.enc_dec)
+               for i, kind in enumerate(rem_kinds)}
+        pairs["rem"] = B.split_pt(rem)
+
+    if cfg.enc_dec:
+        def enc_params(key):
+            return B.init_block(B.KeyGen(key), cfg, ATTN, dtype, cross=False)
+        n_enc = cfg.n_enc_layers
+        if cfg.scan_layers and n_enc > 1:
+            e_abs, e_axes = enc_params(None)
+            if kg.abstract:
+                ep = _stack_abstract(e_abs, n_enc)
+            else:
+                keys = jax.random.split(kg(), n_enc)
+                ep = jax.vmap(lambda k: enc_params(k)[0])(keys)
+            pairs["encoder"] = (ep, _stack_axes(e_axes))
+        else:
+            enc = {f"l{i}": enc_params(kg()) for i in range(n_enc)}
+            pairs["encoder"] = B.split_pt(enc)
+        pairs["enc_final_norm"] = B._zeros((D,), ("embed",), jnp.float32,
+                                           kg=kg)
+
+    return B.split_pt(pairs)
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    return _build(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return _build(cfg, None)
+
+
+def logical_axes(cfg: ModelConfig):
+    return _build(cfg, None)[1]
+
+
+# ---------------------------------------------------------------------------
+# rope helpers
+# ---------------------------------------------------------------------------
+def _make_rope(cfg: ModelConfig, positions: jax.Array,
+               mrope_positions: Optional[jax.Array] = None):
+    if cfg.pos != "rope":
+        return None
+    if cfg.mrope and mrope_positions is not None:
+        return L.mrope_tables(mrope_positions, cfg.d_head, cfg.rope_theta,
+                              cfg.mrope_sections)
+    return L.rope_tables(positions, cfg.d_head, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# stack application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+def _apply_stack(params: dict, cfg: ModelConfig, x: jax.Array, ctx: dict,
+                 cache: Optional[dict]):
+    """Runs all decoder blocks.  Returns (x, new_cache, moe_aux)."""
+    aux = jnp.float32(0.0)
+    new_cache = {}
+    use_cache = cache is not None
+
+    if "groups" in params:
+        kinds = cfg.layer_pattern
+
+        def group_fn(x, gp, gcache):
+            a = jnp.float32(0.0)
+            ncache = {}
+            for i, kind in enumerate(kinds):
+                bctx = dict(ctx, cache=(gcache[f"b{i}"] if gcache else None))
+                x, c, da = B.apply_block(gp[f"b{i}"], cfg, kind, x, bctx)
+                a = a + da
+                if c is not None:
+                    ncache[f"b{i}"] = c
+            return x, ncache, a
+
+        if use_cache:
+            def scan_fn(carry, xs):
+                x, a = carry
+                gp, gc = xs
+                x, nc, da = group_fn(x, gp, gc)
+                return (x, a + da), nc
+            (x, aux), nc = jax.lax.scan(
+                scan_fn, (x, aux), (params["groups"], cache["groups"]))
+            new_cache["groups"] = nc
+        else:
+            fn = lambda x, gp: group_fn(x, gp, None)  # noqa: E731
+            if cfg.remat:
+                policy = (jax.checkpoint_policies
+                          .dots_with_no_batch_dims_saveable
+                          if cfg.remat_policy == "dots" else None)
+                fn = jax.checkpoint(fn, policy=policy)
+
+            def scan_fn(carry, gp):
+                x, a = carry
+                x, _, da = fn(x, gp)
+                return (x, a + da), None
+            (x, aux), _ = jax.lax.scan(scan_fn, (x, aux), params["groups"])
+        rem_kinds = cfg.kinds_of_remainder()
+    else:
+        rem_kinds = tuple(cfg.layer_pattern[i % cfg.pattern_period]
+                          for i in range(cfg.n_layers))
+
+    if "rem" in params:
+        rem_cache = cache.get("rem") if use_cache else None
+        nrem = {}
+        for i, kind in enumerate(rem_kinds):
+            bctx = dict(ctx, cache=(rem_cache[f"l{i}"] if rem_cache else None))
+            x, c, da = B.apply_block(params["rem"][f"l{i}"], cfg, kind, x,
+                                     bctx)
+            aux = aux + da
+            if c is not None:
+                nrem[f"l{i}"] = c
+        if nrem:
+            new_cache["rem"] = nrem
+
+    return x, (new_cache or None), aux
+
+
+def _encode(params: dict, cfg: ModelConfig, frames: jax.Array):
+    """Whisper-style encoder over stubbed frame embeddings [B,T,d_frontend]."""
+    x = frames.astype(_dtype(cfg)) @ params["frontend_proj"]
+    if "enc_pos_emb" in params:
+        x = x + params["enc_pos_emb"][: x.shape[1]].astype(x.dtype)[None]
+    x = shard(x, "batch", "seq", "embed")
+    ctx = {"mode": "train", "rope": None, "causal": False}
+    enc = params["encoder"]
+    if "l0" in enc:  # unscanned per-layer dict
+        for i in range(cfg.n_enc_layers):
+            x, _, _ = B.apply_block(enc[f"l{i}"], cfg, ATTN, x, ctx)
+    else:
+        def scan_fn(x, gp):
+            y, _, _ = B.apply_block(gp, cfg, ATTN, x, ctx)
+            return y, None
+        fn = jax.checkpoint(scan_fn) if cfg.remat else scan_fn
+        x, _ = jax.lax.scan(fn, x, enc)
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _embed_inputs(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    tokens = batch["tokens"]
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    if cfg.pos == "learned":
+        S = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_emb"], 0, S, 0)
+        x = x + pe.astype(x.dtype)[None]
+    if cfg.family == "vlm" and "patches" in batch:
+        proj = batch["patches"].astype(_dtype(cfg)) @ params["frontend_proj"]
+        x = jax.lax.dynamic_update_slice(x, proj, (0, 0, 0))
+    return shard(x, "batch", "seq", "embed")
+
+
+def _logits(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = x @ params["lm_head"]
+    return shard(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# train forward + loss
+# ---------------------------------------------------------------------------
+def apply(params: dict, cfg: ModelConfig, batch: dict,
+          *, q_chunk: int = 1024) -> Tuple[jax.Array, jax.Array]:
+    tokens = batch["tokens"]
+    Bsz, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (Bsz, S))
+    rope = _make_rope(cfg, positions, batch.get("mrope_positions"))
+    ctx = {"mode": "train", "rope": rope, "causal": True, "q_chunk": q_chunk}
+    if cfg.enc_dec:
+        ctx["enc_out"] = _encode(params, cfg, batch["frames"])
+    x = _embed_inputs(params, cfg, batch)
+    x, _, aux = _apply_stack(params, cfg, x, ctx, cache=None)
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict):
+    logits, aux = apply(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, dtype=jnp.float32)
+    mask = mask.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - true_logit) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    if cfg.moe:
+        loss = loss + cfg.moe.aux_loss_weight * aux / max(cfg.n_layers, 1)
+    metrics = {"loss": loss, "aux": aux, "tokens": jnp.sum(mask)}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               *, dtype=None, abstract: bool = False):
+    """(cache, logical_axes) twin trees for the whole stack."""
+    dtype = dtype or _dtype(cfg)
+    cross_len = ENC_LEN if cfg.enc_dec else 0
+
+    def one(kind):
+        return B.init_block_cache(cfg, kind, batch, max_len, dtype,
+                                  cross_len=cross_len, abstract=abstract)
+
+    pairs = {}
+    if cfg.scan_layers and cfg.n_groups > 1:
+        sub_p, sub_a = {}, {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            c, a = one(kind)
+            if abstract:
+                sub_p[f"b{i}"] = _stack_abstract(c, cfg.n_groups)
+            else:
+                sub_p[f"b{i}"] = jax.tree.map(
+                    lambda z: jnp.broadcast_to(
+                        z, (cfg.n_groups,) + z.shape).copy(), c)
+            sub_a[f"b{i}"] = _stack_axes(a)
+        pairs["groups"] = (sub_p, sub_a)
+        rem_kinds = cfg.kinds_of_remainder()
+    else:
+        rem_kinds = tuple(cfg.layer_pattern[i % cfg.pattern_period]
+                          for i in range(cfg.n_layers))
+    if rem_kinds:
+        rp, ra = {}, {}
+        for i, kind in enumerate(rem_kinds):
+            rp[f"l{i}"], ra[f"l{i}"] = one(kind)
+        pairs["rem"] = (rp, ra)
+    return B.split_pt(pairs)
+
+
+# ---------------------------------------------------------------------------
+# prefill & decode
+# ---------------------------------------------------------------------------
+def prefill(params: dict, cfg: ModelConfig, batch: dict, cache: dict,
+            *, q_chunk: int = 1024):
+    tokens = batch["tokens"]
+    Bsz, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (Bsz, S))
+    rope = _make_rope(cfg, positions, batch.get("mrope_positions"))
+    ctx = {"mode": "prefill", "rope": rope, "q_chunk": q_chunk}
+    if cfg.enc_dec:
+        ctx["enc_out"] = _encode(params, cfg, batch["frames"])
+    x = _embed_inputs(params, cfg, batch)
+    x, new_cache, _ = _apply_stack(params, cfg, x, ctx, cache=cache)
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits[:, 0], new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array, pos: jax.Array):
+    """One token step.  tokens [B,1] int32, pos scalar int32 (absolute).
+    Returns (logits [B,V] fp32, new_cache)."""
+    Bsz = tokens.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos[None, None], (Bsz, 1))
+    mpos = None
+    if cfg.mrope:
+        mpos = jnp.broadcast_to(pos[None, None, None], (3, Bsz, 1))
+    rope = _make_rope(cfg, positions, mpos)
+    ctx = {"mode": "decode", "rope": rope, "pos": pos}
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    if cfg.pos == "learned":
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_emb"], pos, 1, 0)
+        x = x + pe.astype(x.dtype)[None]
+    x = shard(x, "batch", "seq", "embed")
+    x, new_cache, _ = _apply_stack(params, cfg, x, ctx, cache=cache)
+    logits = _logits(params, cfg, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,1 @@
+from repro.optim.local import LocalOpt, adam, momentum, sgd  # noqa: F401

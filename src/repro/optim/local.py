@@ -1,0 +1,76 @@
+"""Local (client-side) optimizers.
+
+Algorithm 2 of the paper uses plain SGD; the paper notes the local solver
+"can also be any gradient-based method" — momentum and Adam are provided and
+exercised in tests/ablations.  All are pure (init, update) pairs over pytrees
+so they run inside ``lax.scan`` local-step loops.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LocalOpt:
+    name: str
+    init: Callable[[Any], Any]                 # params -> opt_state
+    update: Callable[[Any, Any, Any, Any], Tuple[Any, Any]]
+    # (grads, opt_state, params, lr) -> (updates, opt_state')
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd() -> LocalOpt:
+    return LocalOpt(
+        name="sgd",
+        init=lambda params: (),
+        update=lambda g, s, p, lr: (_tmap(lambda gi: -lr * gi, g), s),
+    )
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> LocalOpt:
+    def init(params):
+        return _tmap(jnp.zeros_like, params)
+
+    def update(g, m, p, lr):
+        m = _tmap(lambda mi, gi: beta * mi + gi, m, g)
+        if nesterov:
+            upd = _tmap(lambda mi, gi: -lr * (beta * mi + gi), m, g)
+        else:
+            upd = _tmap(lambda mi: -lr * mi, m)
+        return upd, m
+
+    return LocalOpt("momentum", init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> LocalOpt:
+    def init(params):
+        z = _tmap(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(g, s, p, lr):
+        t = s["t"] + 1
+        m = _tmap(lambda mi, gi: b1 * mi + (1 - b1)
+                  * gi.astype(jnp.float32), s["m"], g)
+        v = _tmap(lambda vi, gi: b2 * vi + (1 - b2)
+                  * jnp.square(gi.astype(jnp.float32)), s["v"], g)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = _tmap(
+            lambda mi, vi, pi: (-lr * (mi / bc1)
+                                / (jnp.sqrt(vi / bc2) + eps)).astype(pi.dtype),
+            m, v, p)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return LocalOpt("adam", init, update)
+
+
+def get(name: str, **kw) -> LocalOpt:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name](**kw)

@@ -1,0 +1,65 @@
+"""Batched serving engine: prefill + token-by-token decode over the model
+zoo's KV/recurrent caches.  The decode step is jitted once with a donated
+cache so serving runs in-place; sampling is greedy or temperature."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class GenerateResult:
+    tokens: np.ndarray          # [B, prompt + generated]
+    logprobs: np.ndarray        # [B, generated]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "temperature"),
+                   donate_argnames=("cache",))
+def _decode_one(params, cfg: ModelConfig, cache, tokens, pos, key,
+                temperature: float):
+    logits, cache = T.decode_step(params, cfg, cache, tokens, pos)
+    if temperature and temperature > 0.0:
+        nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(logits, axis=-1)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    lp = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
+    return nxt[:, None].astype(jnp.int32), cache, lp
+
+
+def generate(params, cfg: ModelConfig, prompts: jax.Array, max_new: int,
+             *, temperature: float = 0.0,
+             key: Optional[jax.Array] = None,
+             extras: Optional[dict] = None) -> GenerateResult:
+    """prompts [B, S0] int32.  Returns prompt+generated tokens."""
+    B, S0 = prompts.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    cache, _ = T.init_cache(cfg, B, S0 + max_new)
+    batch = {"tokens": prompts, **(extras or {})}
+    logits, cache = T.prefill(params, cfg, batch, cache)
+    if temperature and temperature > 0.0:
+        key, k0 = jax.random.split(key)
+        nxt = jax.random.categorical(k0, logits / temperature, axis=-1)
+    else:
+        nxt = jnp.argmax(logits, axis=-1)
+    cur = nxt[:, None].astype(jnp.int32)
+
+    toks = [np.asarray(prompts), np.asarray(cur)]
+    lps = []
+    for i in range(max_new - 1):
+        key, k = jax.random.split(key)
+        cur, cache, lp = _decode_one(params, cfg, cache, cur,
+                                     jnp.int32(S0 + i), k, temperature)
+        toks.append(np.asarray(cur))
+        lps.append(np.asarray(lp))
+    lps.append(np.zeros((B,), np.float32))
+    return GenerateResult(tokens=np.concatenate(toks, axis=1),
+                          logprobs=np.stack(lps, axis=1))

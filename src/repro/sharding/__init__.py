@@ -1,0 +1,14 @@
+from repro.sharding.rules import (  # noqa: F401
+    AxisRules,
+    FED_MESH_RULES,
+    FSDP_RULES,
+    REPLICATED_SERVER_RULES,
+    axis_rules,
+    current_mesh,
+    logical_sharding,
+    logical_spec,
+    shard,
+    shard_tree,
+    spmd_client_axes,
+    tree_shardings,
+)

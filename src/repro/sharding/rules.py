@@ -1,0 +1,190 @@
+"""Logical-axis sharding.
+
+Model and optimizer code never names mesh axes directly; it names *logical*
+axes ('batch', 'embed', 'heads', ...).  A rule table maps logical axes to mesh
+axes; ``shard(x, *axes)`` applies a ``with_sharding_constraint`` when a mesh
+is active and is a no-op otherwise (so the same model code runs in CPU unit
+tests and in the 512-chip dry-run).
+
+Rule tables:
+
+- ``FED_MESH_RULES``  — federated ``mesh`` placement: active clients tile the
+  ('pod','data') axes, each client's replica is tensor-parallel on 'model'.
+- ``FSDP_RULES``      — ``scan`` placement for 72B/314B: parameters are
+  fully sharded over ('pod','data') x 'model'; clients are sequential.
+- ``REPLICATED_SERVER_RULES`` — paper-faithful baseline where the server
+  master state is replicated over ('pod','data') (only 'model'-sharded).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRules = Mapping[str, object]  # logical axis -> mesh axis | tuple | None
+
+# Mesh-axis names; 'pod' only exists on the multi-pod mesh.  Rules reference
+# ('pod', 'data') and are filtered against the live mesh's axis names.
+_DP = ("pod", "data")
+
+FED_MESH_RULES: AxisRules = {
+    "clients": _DP,        # leading axis of per-client params/batches
+    "batch": _DP,          # serving batch
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "moe_group": None,     # group axis of the grouped MoE dispatch
+    "capacity": None,
+    "rnn": "model",
+    "conv": None,
+    "layers": None,
+    "lora": None,
+    # server master/momentum state: ZeRO-shard the embed dim over data
+    "opt_embed": _DP,
+}
+
+# FSDP / scan placement: weights sharded over data on 'embed' too.
+FSDP_RULES: AxisRules = dict(
+    FED_MESH_RULES,
+    embed=_DP,
+    clients=None,          # clients are a scan axis, not a mesh axis
+    moe_group=_DP,         # align token-routing groups with the data shards
+)
+
+# Paper-faithful replicated server state (baseline for the ZeRO hillclimb).
+REPLICATED_SERVER_RULES: AxisRules = dict(FED_MESH_RULES, opt_embed=None)
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[AxisRules] = None
+
+
+_ctx = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[AxisRules]):
+    prev = (_ctx.mesh, _ctx.rules)
+    _ctx.mesh, _ctx.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ctx.mesh
+
+
+def _filter_axes(entry, mesh_axes) -> object:
+    """Drop mesh axes that don't exist on the live mesh ('pod' on 1-pod)."""
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in mesh_axes else None
+    got = tuple(a for a in entry if a in mesh_axes)
+    if not got:
+        return None
+    return got if len(got) > 1 else got[0]
+
+
+def logical_spec(axes: Sequence[Optional[str]], rules: AxisRules,
+                 mesh: Mesh, shape: Optional[Sequence[int]] = None) -> P:
+    """Map logical axes to a PartitionSpec.
+
+    When ``shape`` is given, mesh axes that do not evenly divide a dimension
+    are dropped (from the innermost axis outward) — jit in_shardings require
+    even divisibility.  E.g. kv_heads=1 over a 16-way 'model' axis degrades
+    to replication, which is the correct MQA semantics; a (2, ...) 'clients'
+    dim over ('pod','data')=(2,16) keeps 'pod' and drops 'data'.
+    """
+    mesh_axes = set(mesh.axis_names)
+    used: set = set()
+    out = []
+    for i, ax in enumerate(axes):
+        entry = None if ax is None else rules.get(ax)
+        entry = _filter_axes(entry, mesh_axes)
+        # a mesh axis may appear at most once in a PartitionSpec
+        if entry is not None:
+            flat = (entry,) if isinstance(entry, str) else tuple(entry)
+            flat = tuple(a for a in flat if a not in used)
+            if shape is not None:
+                while flat:
+                    prod = 1
+                    for a in flat:
+                        prod *= mesh.shape[a]
+                    if shape[i] % prod == 0:
+                        break
+                    flat = flat[:-1]
+            used.update(flat)
+            entry = (flat if len(flat) > 1 else (flat[0] if flat else None))
+        out.append(entry)
+    return P(*out)
+
+
+def logical_sharding(axes: Sequence[Optional[str]], rules: AxisRules,
+                     mesh: Mesh,
+                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(axes, rules, mesh, shape))
+
+
+def shard(x, *axes: Optional[str]):
+    """Constrain ``x``'s sharding by logical axes (no-op outside a mesh)."""
+    if _ctx.mesh is None or _ctx.rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"rank mismatch: {axes} vs shape {x.shape}")
+    spec = logical_spec(axes, _ctx.rules, _ctx.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ctx.mesh, spec))
+
+
+def shard_tree(tree, axes_tree, prefix: tuple = ()):
+    """Constrain a whole pytree by its logical-axes twin tree (no-op outside
+    a mesh).  ``prefix`` prepends logical axes (e.g. ('clients',) for
+    per-client replicated params)."""
+    if _ctx.mesh is None or _ctx.rules is None:
+        return tree
+
+    def one(x, axes):
+        return shard(x, *(prefix + tuple(axes)))
+
+    return jax.tree.map(one, tree, axes_tree)
+
+
+def spmd_client_axes() -> object:
+    """Mesh axes the 'clients' logical axis maps to on the live mesh (for
+    ``jax.vmap(..., spmd_axis_name=...)``), or None outside a mesh."""
+    if _ctx.mesh is None or _ctx.rules is None:
+        return None
+    entry = _filter_axes(_ctx.rules.get("clients"), set(_ctx.mesh.axis_names))
+    return entry
+
+
+def tree_shardings(logical_tree, rules: AxisRules, mesh: Mesh,
+                   sds_tree=None):
+    """Map a pytree of logical-axis tuples to NamedShardings.  Pass the
+    matching ShapeDtypeStruct tree to enable divisibility-aware dropping
+    (required for jit in_shardings)."""
+    is_axes = (lambda x: isinstance(x, tuple) and
+               all(a is None or isinstance(a, str) for a in x))
+    if sds_tree is None:
+        return jax.tree.map(
+            lambda axes: logical_sharding(axes, rules, mesh),
+            logical_tree, is_leaf=is_axes)
+    flat_axes, treedef = jax.tree.flatten(logical_tree, is_leaf=is_axes)
+    flat_sds = treedef.flatten_up_to(sds_tree)
+    out = [logical_sharding(a, rules, mesh, s.shape)
+           for a, s in zip(flat_axes, flat_sds)]
+    return treedef.unflatten(out)

@@ -1,0 +1,96 @@
+"""Data pipeline properties (hypothesis where it matters)."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.data import (
+    FederatedDataset,
+    dirichlet_partition,
+    label_shard_partition,
+    lognormal_sizes,
+    synthetic_femnist,
+    synthetic_shakespeare,
+    synthetic_token_clients,
+)
+from repro.data.federated import lm_clients_to_dataset
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 6),
+       st.integers(0, 2**31 - 1))
+def test_label_shard_partition_is_exact_partition(n_clients, shards, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n_clients * shards * 7)
+    parts = label_shard_partition(labels, n_clients, shards, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)   # no dup, no drop
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.floats(0.05, 5.0), st.integers(0, 2**31 - 1))
+def test_dirichlet_partition_covers_everything(n_clients, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 5, size=300)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=seed)
+    covered = np.unique(np.concatenate(parts))
+    assert len(covered) == 300                      # every sample assigned
+    assert all(len(p) >= 2 for p in parts)          # min_per_client
+
+
+def test_dirichlet_skew_increases_with_smaller_alpha():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, size=5000)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 10, alpha, seed=1)
+        # mean per-client entropy of label distribution
+        ents = []
+        for p in parts:
+            c = np.bincount(labels[p], minlength=10) + 1e-9
+            q = c / c.sum()
+            ents.append(-(q * np.log(q)).sum())
+        return np.mean(ents)
+
+    assert skew(0.05) < skew(10.0)
+
+
+def test_lognormal_sizes_match_paper_table2():
+    for mean, std in [(224.5, 87.8), (4136.85, 7226.20)]:
+        sizes = lognormal_sizes(20_000, mean, std, seed=3)
+        assert abs(sizes.mean() - mean) / mean < 0.05
+        assert abs(sizes.std() - std) / std < 0.15
+
+
+def test_synthetic_femnist_learnable_structure():
+    clients, counts = synthetic_femnist(n_clients=10, seed=0)
+    assert all(c["x"].shape[1:] == (28, 28, 1) for c in clients)
+    assert all(len(c["x"]) == n for c, n in zip(clients, counts))
+    # same-class images more similar than different-class (prototypes work)
+    c = clients[0]
+    ys = c["y"]
+    if len(np.unique(ys)) >= 2:
+        cls = np.unique(ys)[0]
+        a = c["x"][ys == cls]
+        b = c["x"][ys != cls]
+        if len(a) >= 2:
+            within = np.linalg.norm(a[0] - a[1])
+            across = np.linalg.norm(a[0] - b[0])
+            assert within < across * 1.5
+
+
+def test_round_batches_shapes():
+    clients, _ = synthetic_femnist(n_clients=6, seed=1)
+    ds = FederatedDataset(clients, seed=0)
+    batches = ds.round_batches([0, 3, 5], local_steps=4, batch_size=7)
+    assert batches["x"].shape == (3, 4, 7, 28, 28, 1)
+    assert batches["y"].shape == (3, 4, 7)
+
+
+def test_lm_dataset_labels_are_shifted_tokens():
+    streams = synthetic_token_clients(3, vocab=50, tokens_per_client=101,
+                                      seed=0)
+    ds = lm_clients_to_dataset(streams, seq_len=20, seed=0)
+    d = ds.data[0]
+    np.testing.assert_array_equal(d["tokens"][0][1:], d["labels"][0][:-1])

@@ -1,0 +1,179 @@
+"""Layer-level properties: attention chunking, recurrences, rope, MoE."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models import layers as L
+
+
+def test_attention_q_chunking_invariant():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 192, 4, 32))   # 192 forces chunk fallback
+    k = jax.random.normal(ks[1], (2, 192, 2, 32))
+    v = jax.random.normal(ks[2], (2, 192, 2, 32))
+    a = L.attention(q, k, v, causal=True, q_chunk=10_000)
+    b = L.attention(q, k, v, causal=True, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_attention_sliding_window_equals_masked_dense():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 2, 16))
+    v = jax.random.normal(ks[2], (1, 64, 2, 16))
+    win = L.attention(q, k, v, causal=True, window=8)
+    # dense reference with explicit mask
+    import math
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(16)
+    i = jnp.arange(64)[:, None]
+    j = jnp.arange(64)[None, :]
+    mask = (j <= i) & (j > i - 8)
+    s = jnp.where(mask[None, None], s, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(win), np.asarray(ref), atol=1e-5)
+
+
+def test_attention_decode_kv_len_masks_tail():
+    """Decode attends only to the first kv_len cache slots."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 1, 2, 16))
+    k = jax.random.normal(ks[1], (2, 32, 2, 16))
+    v = jax.random.normal(ks[2], (2, 32, 2, 16))
+    out = L.attention(q, k, v, causal=True, q_offset=9, kv_len=10)
+    out_trunc = L.attention(q, k[:, :10], v[:, :10], causal=True, q_offset=9)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_trunc),
+                               atol=1e-5)
+    # garbage beyond kv_len must not affect the result
+    k2 = k.at[:, 10:].set(1e3)
+    out2 = L.attention(q, k2, v, causal=True, q_offset=9, kv_len=10)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    pos = jnp.arange(16)[None]
+    sin, cos = L.rope_tables(pos, 32, 10_000.0)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 2, 32))
+    y = L.apply_rope(x, sin, cos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 32))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, 32))
+    def dot_at(p):
+        s, c = L.rope_tables(jnp.asarray([[p]]), 32, 10_000.0)
+        s2, c2 = L.rope_tables(jnp.asarray([[p + 3]]), 32, 10_000.0)
+        return float(jnp.sum(L.apply_rope(q, s, c) * L.apply_rope(v, s2, c2)))
+    assert abs(dot_at(0) - dot_at(7)) < 1e-4
+
+
+def test_mrope_sections_match_1d_for_equal_positions():
+    """With t=h=w position ids, M-RoPE degrades to standard RoPE."""
+    B, S, Dh = 1, 8, 32
+    pos = jnp.arange(S)[None]
+    m_pos = jnp.stack([pos, pos, pos])
+    s1, c1 = L.rope_tables(pos, Dh, 10_000.0)
+    s2, c2 = L.mrope_tables(m_pos, Dh, 10_000.0, (4, 6, 6))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-6)
+
+
+def test_rglru_scan_equals_step_by_step():
+    R, B, S = 16, 2, 12
+    kg = jax.random.split(jax.random.PRNGKey(6), 4)
+    p = {
+        "w_a": jax.random.normal(kg[0], (R, R)) * 0.1,
+        "w_i": jax.random.normal(kg[1], (R, R)) * 0.1,
+        "lam": jax.random.normal(kg[2], (R,)),
+    }
+    u = jax.random.normal(kg[3], (B, S, R))
+    y_scan, h_last = L.rglru_scan(p, u)
+    h = jnp.zeros((B, R))
+    outs = []
+    for t in range(S):
+        y, h = L.rglru_step(p, u[:, t:t + 1], h)
+        outs.append(y[:, 0])
+    y_seq = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_causal_conv1d_streaming_matches_batch():
+    W, R, B, S = 4, 8, 2, 10
+    kg = jax.random.split(jax.random.PRNGKey(7), 3)
+    w = jax.random.normal(kg[0], (W, R))
+    b = jax.random.normal(kg[1], (R,)) * 0.1
+    x = jax.random.normal(kg[2], (B, S, R))
+    y_full, _ = L.causal_conv1d(w, b, x)
+    state = jnp.zeros((B, W - 1, R))
+    ys = []
+    for t in range(S):
+        y, state = L.causal_conv1d(w, b, x[:, t:t + 1], state)
+        ys.append(y[:, 0])
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.stack(ys, 1)), atol=1e-5)
+
+
+def test_rwkv6_chunked_matches_step_decode():
+    B, S, H, D = 1, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    r = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, D)))
+    u = 0.1 * jax.random.normal(ks[4], (H, D))
+    o_chunk, s_chunk = L.rwkv6_chunked(r, k, v, lw, u, chunk=16)
+    s = jnp.zeros((B, H, D, D))
+    outs = []
+    for t in range(S):
+        o, s = L.rwkv6_step(r[:, t:t+1], k[:, t:t+1], v[:, t:t+1],
+                            lw[:, t:t+1], u, s)
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(o_chunk),
+                               np.asarray(jnp.stack(outs, 1)), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(s),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_moe_grouping_invariance_and_aux_range():
+    """Group size must not change results when capacity is ample."""
+    E, k, D, F = 4, 2, 16, 32
+    kg = jax.random.split(jax.random.PRNGKey(9), 4)
+    p = {
+        "router": jax.random.normal(kg[0], (D, E)),
+        "wi_gate": jax.random.normal(kg[1], (E, D, F)) * 0.1,
+        "wi_up": jax.random.normal(kg[2], (E, D, F)) * 0.1,
+        "wo": jax.random.normal(kg[3], (E, F, D)) * 0.1,
+    }
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 64, D))
+    y1, a1 = L.moe_apply(p, x, n_experts=E, top_k=k, capacity_factor=8.0,
+                         act="swiglu", group_size=32)
+    y2, a2 = L.moe_apply(p, x, n_experts=E, top_k=k, capacity_factor=8.0,
+                         act="swiglu", group_size=100_000)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    assert float(a2) >= 1.0 - 1e-3   # aux >= 1 (=1 at perfect balance)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor << 1 some tokens are dropped (combine weight 0),
+    never duplicated."""
+    E, k, D, F = 4, 1, 8, 16
+    kg = jax.random.split(jax.random.PRNGKey(11), 4)
+    p = {
+        "router": jax.random.normal(kg[0], (D, E)),
+        "wi_gate": jax.random.normal(kg[1], (E, D, F)) * 0.1,
+        "wi_up": jax.random.normal(kg[2], (E, D, F)) * 0.1,
+        "wo": jax.random.normal(kg[3], (E, F, D)) * 0.1,
+    }
+    x = jax.random.normal(jax.random.PRNGKey(12), (1, 64, D))
+    y, _ = L.moe_apply(p, x, n_experts=E, top_k=k, capacity_factor=0.1,
+                       act="swiglu")
+    dropped = np.mean(np.all(np.asarray(y) == 0.0, axis=-1))
+    assert dropped > 0.2

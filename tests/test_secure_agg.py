@@ -1,0 +1,55 @@
+"""Secure-aggregation masking: masks cancel in the sum; individual updates
+are blinded; the federated round is unchanged under masking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.secure_agg import aggregate_masked, mask_client_updates
+
+
+def _updates(n=4, d=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.normal(size=d), jnp.float32)}
+            for _ in range(n)], jnp.asarray(rng.uniform(0.1, 0.3, size=n),
+                                            jnp.float32)
+
+
+def test_masks_cancel_in_aggregate():
+    ups, weights = _updates()
+    key = jax.random.PRNGKey(0)
+    masked = mask_client_updates(key, ups, weights)
+    agg = aggregate_masked(masked)
+    expect = jax.tree.map(
+        lambda *xs: sum(w * x for w, x in zip(weights, xs)), *ups)
+    np.testing.assert_allclose(np.asarray(agg["w"]),
+                               np.asarray(expect["w"]), atol=1e-4)
+
+
+def test_individual_updates_are_blinded():
+    ups, weights = _updates()
+    masked = mask_client_updates(jax.random.PRNGKey(0), ups, weights)
+    for i in range(len(ups)):
+        plain = weights[i] * ups[i]["w"]
+        assert not np.allclose(np.asarray(masked[i]["w"]),
+                               np.asarray(plain), atol=1e-3)
+
+
+def test_different_keys_different_masks_same_sum():
+    ups, weights = _updates()
+    a = aggregate_masked(mask_client_updates(jax.random.PRNGKey(1), ups,
+                                             weights))
+    b = aggregate_masked(mask_client_updates(jax.random.PRNGKey(2), ups,
+                                             weights))
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               atol=1e-4)
+
+
+def test_diurnal_sampler_varies_m():
+    from repro.core import ClientPopulation, DiurnalSampler
+    import numpy as np
+    pop = ClientPopulation(counts=np.full(100, 10))
+    s = DiurnalSampler(pop, m_min=4, m_max=16, period=100, seed=0)
+    ms = [int((s.sample(t)[1] > 0).sum()) for t in range(100)]
+    assert min(ms) <= 6 and max(ms) >= 14   # swings across the range
+    idx, w = s.sample(0)
+    assert len(idx) == 16                    # lowered for the max extent

@@ -1,0 +1,170 @@
+"""Unit + property tests for the paper's server-optimizer family."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import RoundConfig, round_step, server_opt as so
+from repro.core.client import local_update
+from repro.core.round import model_averaging_reference
+from repro.optim import sgd
+
+
+def tree_allclose(a, b, atol=1e-5):
+    return all(np.allclose(x, y, atol=atol)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def quad_loss(params, batch):
+    """f_k(w) = 0.5 ||w - c_k||^2 with per-client optimum c_k."""
+    err = jax.tree.map(lambda w, c: w - c, params, batch["c"])
+    loss = 0.5 * sum(jnp.sum(jnp.square(e)) for e in jax.tree.leaves(err))
+    return loss, {}
+
+
+@st.composite
+def _weights_and_dim(draw):
+    m = draw(st.integers(1, 6))
+    d = draw(st.integers(1, 8))
+    w = draw(st.lists(st.floats(1e-3, 1.0), min_size=m, max_size=m))
+    return np.asarray(w, np.float32), d
+
+
+@settings(max_examples=30, deadline=None)
+@given(_weights_and_dim(), st.integers(0, 2**31 - 1))
+def test_eq2_equals_eq3(wd, seed):
+    """Model averaging (eq. 2) == biased-gradient step (eq. 3), for any
+    active-client weights n_k/n and any local models."""
+    weights, d = wd
+    m = len(weights)
+    rng = np.random.default_rng(seed)
+    w_t = {"w": jnp.asarray(rng.normal(size=d), jnp.float32)}
+    local_models = {"w": jnp.asarray(rng.normal(size=(m, d)), jnp.float32)}
+    # normalize so sum of weights <= 1 (they are n_k/n of a subset)
+    weights = jnp.asarray(weights / max(weights.sum(), 1.0))
+
+    # eq. 3 route: delta = sum a_k (w_t - w_k); w' = w_t - delta
+    delta = jax.tree.map(
+        lambda w0, wk: jnp.einsum("c,cd->d", weights, w0[None] - wk),
+        w_t, local_models)
+    eq3 = jax.tree.map(lambda w0, dl: w0 - dl, w_t, delta)
+    eq2 = model_averaging_reference(w_t, local_models, weights)
+    assert tree_allclose(eq2, eq3, atol=1e-5)
+
+
+def test_fedmom_beta0_equals_fedavg():
+    w0 = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+          "b": jnp.ones(4)}
+    delta = jax.tree.map(lambda x: 0.1 * (x + 1.0), w0)
+    for eta in (1.0, 3.0):
+        s_avg = so.fedavg(eta=eta).init(w0)
+        s_mom = so.fedmom(eta=eta, beta=0.0).init(w0)
+        s_avg = so.fedavg(eta=eta).update(s_avg, delta)
+        s_mom = so.fedmom(eta=eta, beta=0.0).update(s_mom, delta)
+        assert tree_allclose(s_avg.w, s_mom.w)
+
+
+def test_fedmom_matches_algorithm3_two_rounds():
+    """Hand-rolled Alg. 3 recursion vs the implementation, two rounds."""
+    w0 = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    opt = so.fedmom(eta=2.0, beta=0.9)
+    state = opt.init(w0)
+    d1 = {"w": jnp.asarray([0.1, 0.2, -0.1])}
+    d2 = {"w": jnp.asarray([-0.3, 0.0, 0.05])}
+    v0 = w0["w"]
+    v1 = w0["w"] - 2.0 * d1["w"]
+    w1 = v1 + 0.9 * (v1 - v0)
+    state = opt.update(state, d1)
+    assert np.allclose(state.w["w"], w1)
+    v2 = w1 - 2.0 * d2["w"]
+    w2 = v2 + 0.9 * (v2 - v1)
+    state = opt.update(state, d2)
+    assert np.allclose(state.w["w"], w2, atol=1e-6)
+
+
+def test_fedsgd_is_fedavg_with_h1():
+    """H=1 local SGD + FedAvg(eta) == one server gradient step of size
+    eta*gamma on the weighted average client gradient."""
+    rng = np.random.default_rng(0)
+    d, m, gamma, eta = 5, 3, 0.1, 4.0
+    w0 = {"w": jnp.asarray(rng.normal(size=d), jnp.float32)}
+    targets = jnp.asarray(rng.normal(size=(m, 1, d)), jnp.float32)
+    weights = jnp.asarray([0.2, 0.3, 0.1])
+    batches = {"c": {"w": targets}}   # leading [C, H=1]
+    rcfg = RoundConfig(clients_per_round=m, local_steps=1, lr=gamma,
+                       placement="mesh", compute_dtype="float32")
+    opt = so.fedavg(eta=eta)
+    state, _ = round_step(quad_loss, opt, opt.init(w0), batches, weights,
+                          rcfg)
+    # analytic: grad_k = w0 - c_k
+    grads = w0["w"][None] - targets[:, 0]
+    expect = w0["w"] - eta * gamma * jnp.einsum("c,cd->d", weights, grads)
+    assert np.allclose(state.w["w"], expect, atol=1e-5)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("fedavg", dict(eta=2.0)),
+    ("fedmom", dict(eta=2.0, beta=0.9)),
+    ("fedavgm", dict(eta=1.0, beta=0.9)),
+    ("fedadam", dict(eta=0.3)),
+    ("fedyogi", dict(eta=0.3)),
+    ("fedlamom", dict(eta=2.0, beta=0.9)),
+])
+def test_all_server_opts_converge_on_quadratic(name, kw):
+    """Full participation (M=K) so the only dynamics are the optimizer's —
+    every member of the biased-gradient family must drive w to the weighted
+    optimum."""
+    rng = np.random.default_rng(1)
+    K, H, d = 8, 4, 6
+    targets = rng.normal(size=(K, d)).astype(np.float32)
+    counts = rng.integers(5, 50, size=K)
+    wts = counts / counts.sum()
+    opt = so.get(name, **kw)
+    w0 = {"w": jnp.zeros(d)}
+    state = opt.init(w0)
+    rcfg = RoundConfig(clients_per_round=K, local_steps=H, lr=0.02,
+                       placement="mesh", compute_dtype="float32")
+    for t in range(150):
+        batches = {"c": {"w": jnp.asarray(
+            np.repeat(targets[:, None], H, 1))}}
+        state, metrics = round_step(
+            quad_loss, opt, state, batches,
+            jnp.asarray(wts, jnp.float32), rcfg)
+    # the client-loss has a heterogeneity floor (clients disagree on the
+    # optimum); the correct convergence criterion is distance to the
+    # weighted optimum w* = sum (n_k/n) c_k
+    wstar = (wts[:, None] * targets).sum(0)
+    assert (np.linalg.norm(state.w["w"] - wstar)
+            < 0.5 * np.linalg.norm(wstar)), name
+
+
+def test_fedmom_fused_kernel_matches_unfused():
+    rng = np.random.default_rng(3)
+    w0 = {"a": jnp.asarray(rng.normal(size=(37, 5)), jnp.float32),
+          "b": jnp.asarray(rng.normal(size=(130,)), jnp.float32)}
+    delta = jax.tree.map(lambda x: 0.05 * x, w0)
+    s1 = so.fedmom(eta=1.5, beta=0.9).init(w0)
+    s2 = so.fedmom(eta=1.5, beta=0.9, use_fused_kernel=True).init(w0)
+    for _ in range(3):
+        s1 = so.fedmom(eta=1.5, beta=0.9).update(s1, delta)
+        s2 = so.fedmom(eta=1.5, beta=0.9,
+                       use_fused_kernel=True).update(s2, delta)
+    assert tree_allclose(s1.w, s2.w, atol=1e-5)
+    assert tree_allclose(s1.extra["v"], s2.extra["v"], atol=1e-5)
+
+
+def test_inactive_clients_contribute_nothing():
+    """Zero-weight (padded / inactive) clients leave the server unmoved —
+    the w^k = w_t convention of eq. (2)."""
+    w0 = {"w": jnp.asarray([1.0, 2.0])}
+    rcfg = RoundConfig(clients_per_round=2, local_steps=2, lr=0.1,
+                       placement="mesh", compute_dtype="float32")
+    batches = {"c": {"w": jnp.asarray(
+        np.random.default_rng(0).normal(size=(2, 2, 2)), jnp.float32)}}
+    opt = so.fedavg(eta=1.0)
+    state, _ = round_step(quad_loss, opt, opt.init(w0), batches,
+                          jnp.zeros(2), rcfg)
+    assert tree_allclose(state.w, w0)

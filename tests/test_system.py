@@ -1,0 +1,116 @@
+"""End-to-end behaviour tests for the paper's system.
+
+These certify the paper's empirical claims at test scale:
+  1. the federated pipeline trains (loss decreases) on non-IID data;
+  2. FedMom reaches a lower loss than FedAvg in the same number of rounds
+     (the paper's headline result, Fig. 5);
+  3. the serving path generates deterministically under greedy decoding;
+  4. the whole loop works for a reduced assigned architecture end-to-end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    RoundConfig,
+    UniformSampler,
+    fedavg,
+    fedmom,
+)
+from repro.data import FederatedDataset, synthetic_femnist
+from repro.data.federated import lm_clients_to_dataset
+from repro.data.synthetic import synthetic_token_clients
+from repro.launch.train import FederatedTrainer
+from repro.models import small
+from repro.models import transformer as T
+from repro.serve import generate
+
+
+def _femnist_trainer(opt, rounds=40, seed=0):
+    clients, _ = synthetic_femnist(n_clients=20, seed=seed)
+    ds = FederatedDataset(clients, seed=seed + 1)
+    pop = ds.population()
+    w0 = small.lenet_init(jax.random.PRNGKey(0))
+    rcfg = RoundConfig(clients_per_round=2, local_steps=8, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    tr = FederatedTrainer(
+        loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
+        sampler=UniformSampler(pop, 2, seed=seed + 2),
+        state=opt.init(w0)).set_local_batch(10)
+    return tr.run(rounds, log_every=10_000, verbose=False)
+
+
+def _tail(hist, k=5):
+    return float(np.mean([h["loss"] for h in hist[-k:]]))
+
+
+def test_federated_training_reduces_loss():
+    hist = _femnist_trainer(fedavg(eta=10.0))
+    assert _tail(hist) < hist[0]["loss"] * 0.5
+
+
+def test_fedmom_beats_fedavg_in_rounds_to_loss():
+    """Paper Fig. 5: FedMom converges faster than FedAvg (same gamma, H)."""
+    h_avg = _femnist_trainer(fedavg(eta=10.0), rounds=40)
+    h_mom = _femnist_trainer(fedmom(eta=10.0, beta=0.9), rounds=40)
+    assert _tail(h_mom) < _tail(h_avg)
+
+
+def test_greedy_generation_deterministic():
+    cfg = get_config("qwen3-1.7b").reduced()
+    params, _ = T.init(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                 cfg.vocab)
+    a = generate(params, cfg, prompts, 8, temperature=0.0)
+    b = generate(params, cfg, prompts, 8, temperature=0.0)
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert a.tokens.shape == (2, 24)
+
+
+def test_end_to_end_reduced_arch_federated_lm():
+    """Full pipeline on a reduced assigned arch: data -> rounds -> loss
+    drops; then the trained server weights serve generation."""
+    cfg = get_config("gemma3-1b").reduced().replace(dtype="float32")
+    params, axes = T.init(cfg, jax.random.PRNGKey(0))
+    streams = synthetic_token_clients(8, cfg.vocab, 4000, seed=0, skew=2.0)
+    ds = lm_clients_to_dataset(streams, seq_len=32, seed=1)
+    pop = ds.population()
+    opt = fedmom(eta=pop.n_clients / 2, beta=0.9)
+    rcfg = RoundConfig(clients_per_round=2, local_steps=2, lr=0.2,
+                       placement="mesh", compute_dtype="float32")
+
+    def loss_fn(p, b):
+        return T.loss_fn(p, cfg, b)
+
+    tr = FederatedTrainer(loss_fn=loss_fn, server_opt=opt, rcfg=rcfg,
+                          dataset=ds, sampler=UniformSampler(pop, 2, seed=2),
+                          state=opt.init(params),
+                          param_axes=axes).set_local_batch(4)
+    hist = tr.run(25, log_every=10_000, verbose=False)
+    assert _tail(hist, 3) < hist[0]["loss"], (hist[0], hist[-1])
+
+    trained = jax.tree.map(lambda x: x.astype(jnp.float32), tr.state.w)
+    out = generate(trained, cfg, jnp.zeros((1, 8), jnp.int32), 4)
+    assert out.tokens.shape == (1, 12)
+
+
+def test_diurnal_participation_end_to_end():
+    """Time-varying client participation (Bonawitz-style diurnal swing):
+    the engine is lowered for the max extent; inactive slots get weight 0
+    and must not derail training."""
+    from repro.core import DiurnalSampler
+    clients, _ = synthetic_femnist(n_clients=30, seed=3)
+    ds = FederatedDataset(clients, seed=4)
+    pop = ds.population()
+    opt = fedmom(eta=10.0, beta=0.9)
+    rcfg = RoundConfig(clients_per_round=6, local_steps=5, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    tr = FederatedTrainer(
+        loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
+        sampler=DiurnalSampler(pop, m_min=2, m_max=6, period=20, seed=5),
+        state=opt.init(small.lenet_init(jax.random.PRNGKey(0)))
+    ).set_local_batch(10)
+    hist = tr.run(30, log_every=10_000, verbose=False)
+    assert _tail(hist, 5) < hist[0]["loss"]
