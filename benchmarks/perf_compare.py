@@ -2,6 +2,13 @@
 collective deltas and the three roofline terms side by side.
 
     PYTHONPATH=src python -m benchmarks.perf_compare results/hillclimb.jsonl
+
+Driver lane: measure the per-round host overhead the scanned multi-round
+driver (round-engine v2, ``FederatedTrainer.run_scanned``) removes relative
+to the per-round Python loop, at the paper's small round sizes:
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --drivers \
+        [--model lenet|linreg] [--rounds 100] [--chunk-rounds 25]
 """
 from __future__ import annotations
 
@@ -55,5 +62,106 @@ def main(paths):
         print()
 
 
+def _driver_setup(model: str, m: int, local_steps: int, batch: int,
+                  fused: bool):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (DeviceUniformSampler, RoundConfig, fedmom)
+    from repro.data import FederatedDataset, synthetic_femnist
+    from repro.launch.train import FederatedTrainer
+
+    if model == "lenet":
+        from repro.models import small
+        clients, _ = synthetic_femnist(n_clients=20, seed=0)
+        loss_fn = small.lenet_loss
+        w0 = small.lenet_init(jax.random.PRNGKey(0))
+    else:
+        rng = np.random.default_rng(0)
+        d = 32
+        clients = []
+        for _ in range(20):
+            n = int(rng.integers(60, 120))
+            x = rng.normal(size=(n, d)).astype(np.float32)
+            y = (x @ rng.normal(size=d)).astype(np.float32)
+            clients.append({"x": x, "y": y})
+
+        def loss_fn(params, b):
+            pred = b["x"] @ params["w"] + params["b"]
+            return jnp.mean(jnp.square(pred - b["y"])), {}
+
+        w0 = {"w": jnp.zeros(d), "b": jnp.zeros(())}
+
+    ds = FederatedDataset(clients, seed=1)
+    rcfg = RoundConfig(clients_per_round=m, local_steps=local_steps,
+                       lr=0.05, placement="mesh", compute_dtype="float32")
+    opt = fedmom(eta=2.0, beta=0.9, use_fused_kernel=fused)
+
+    def make():
+        return FederatedTrainer(
+            loss_fn=loss_fn, server_opt=opt, rcfg=rcfg,
+            dataset=FederatedDataset(list(ds.data), seed=1),
+            sampler=DeviceUniformSampler(ds.population(), m, seed=2),
+            state=opt.init(w0)).set_local_batch(batch)
+    return make
+
+
+def bench_drivers(argv):
+    """Python-loop driver vs scanned multi-round driver, wall-clock/round."""
+    import argparse
+    import time
+
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--drivers", action="store_true")
+    ap.add_argument("--model", choices=("lenet", "linreg"), default="lenet")
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--m", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=10)
+    ap.add_argument("--chunk-rounds", type=int, default=25)
+    ap.add_argument("--fused-server", action="store_true",
+                    help="route FedMom through the fused Pallas update")
+    args = ap.parse_args(argv)
+
+    make = _driver_setup(args.model, args.m, args.local_steps, args.batch,
+                         args.fused_server)
+
+    def sync(tr):
+        jax.tree.leaves(tr.state.w)[0].block_until_ready()
+
+    lanes = {}
+    for name in ("python-loop", "scanned"):
+        def go(tr, n):
+            if name == "python-loop":
+                tr.run(n, verbose=False)
+            else:
+                tr.run_scanned(n, chunk_rounds=args.chunk_rounds,
+                               verbose=False)
+            sync(tr)
+        # jit caches live on the trainer's own wrappers, so warmup and the
+        # timed pass must share ONE trainer (reset state between); the
+        # warmup covers the full schedule because a ragged last chunk is
+        # its own compile.
+        tr = make()
+        init_state = tr.server_opt.init(tr.state.w)
+        go(tr, args.rounds)
+        tr.state, tr.history = init_state, []
+        t0 = time.perf_counter()
+        go(tr, args.rounds)
+        lanes[name] = (time.perf_counter() - t0) / args.rounds
+        print(f"  {name:12s} {lanes[name] * 1e3:8.3f} ms/round "
+              f"({args.rounds} rounds, {args.model}, M={args.m}, "
+              f"H={args.local_steps}, b={args.batch})")
+    py, sc = lanes["python-loop"], lanes["scanned"]
+    print(f"  scanned removes {(py - sc) * 1e3:.3f} ms/round of host "
+          f"overhead ({py / sc:.2f}x speedup at this round size)")
+
+
 if __name__ == "__main__":
-    main(sys.argv[1:] or ["results/hillclimb.jsonl"])
+    if "--drivers" in sys.argv[1:]:
+        bench_drivers(sys.argv[1:])
+    else:
+        main(sys.argv[1:] or ["results/hillclimb.jsonl"])

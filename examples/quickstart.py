@@ -5,6 +5,13 @@ Trains LeNet on synthetic non-IID FEMNIST with M=2 active clients per round
 optimizers.  Runs in ~1 minute on CPU.
 
     PYTHONPATH=src python examples/quickstart.py [--rounds 150]
+
+``--scanned`` switches to round-engine v2: chunks of rounds compiled as one
+lax.scan (on-device-sampled client sets, host prefetch), same trajectory,
+less host overhead.  ``--fused-server`` independently routes FedMom through
+the fused Pallas server update (a win on TPU; interpret mode on CPU).
+``--hetero`` additionally gives each client a random H_k <= H of local work
+per round (the straggler / partial-work scenario).
 """
 import argparse
 
@@ -12,7 +19,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import RoundConfig, UniformSampler, fedavg, fedmom
+from repro.core import (
+    DeviceUniformSampler,
+    RoundConfig,
+    UniformSampler,
+    fedavg,
+    fedmom,
+)
 from repro.data import FederatedDataset, synthetic_femnist
 from repro.launch.train import FederatedTrainer
 from repro.models import small
@@ -25,6 +38,15 @@ def main():
     ap.add_argument("--m", type=int, default=2, help="active clients/round")
     ap.add_argument("--local-steps", type=int, default=10)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--scanned", action="store_true",
+                    help="round-engine v2: compiled multi-round chunks")
+    ap.add_argument("--fused-server", action="store_true",
+                    help="route FedMom through the fused Pallas update "
+                         "(compiled on TPU; interpret mode — slower — on "
+                         "CPU)")
+    ap.add_argument("--chunk-rounds", type=int, default=25)
+    ap.add_argument("--hetero", action="store_true",
+                    help="random per-client local work H_k <= H per round")
     args = ap.parse_args()
 
     clients, counts = synthetic_femnist(n_clients=args.clients, seed=0)
@@ -48,15 +70,30 @@ def main():
                        lr=args.lr, placement="mesh",
                        compute_dtype="float32")
 
+    hetero_fn = None
+    if args.hetero:
+        def hetero_fn(t):
+            return np.random.default_rng(1000 + t).integers(
+                1, args.local_steps + 1, size=M)
+
     for name, opt in [("FedAvg (eta=K/M)", fedavg(eta=K / M)),
                       ("FedMom (eta=K/M, beta=0.9)",
-                       fedmom(eta=K / M, beta=0.9))]:
-        print(f"\n=== {name} ===")
+                       fedmom(eta=K / M, beta=0.9,
+                              use_fused_kernel=args.fused_server))]:
+        print(f"\n=== {name}{' [scanned]' if args.scanned else ''}"
+              f"{' [hetero H_k]' if args.hetero else ''} ===")
+        sampler = (DeviceUniformSampler(pop, M, seed=2) if args.scanned
+                   else UniformSampler(pop, M, seed=2))
         trainer = FederatedTrainer(
             loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg,
-            dataset=ds, sampler=UniformSampler(pop, M, seed=2),
+            dataset=ds, sampler=sampler, hetero_steps_fn=hetero_fn,
             state=opt.init(w0)).set_local_batch(10)
-        hist = trainer.run(args.rounds, log_every=25, eval_fn=eval_fn)
+        if args.scanned:
+            hist = trainer.run_scanned(args.rounds,
+                                       chunk_rounds=args.chunk_rounds,
+                                       eval_fn=eval_fn)
+        else:
+            hist = trainer.run(args.rounds, log_every=25, eval_fn=eval_fn)
         print(f"final: loss={hist[-1]['loss']:.4f} "
               f"acc={hist[-1]['eval_acc']:.3f}")
 

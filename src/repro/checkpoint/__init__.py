@@ -1,1 +1,6 @@
-from repro.checkpoint.io import restore_state, save_state  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    append_metrics,
+    latest_round,
+    restore_state,
+    save_state,
+)

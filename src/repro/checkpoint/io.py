@@ -39,6 +39,30 @@ def save_state(path: str, state: ServerState, meta: dict | None = None):
             os.remove(tmp)
 
 
+def append_metrics(path: str, records: list):
+    """Append per-round metric records as JSON lines (durable training log).
+
+    Both drivers use it: the per-round driver writes one record per round,
+    the scanned driver one batch of records per chunk — a chunk-granular,
+    crash-consistent log that pairs with the per-chunk ``save_state`` calls
+    (replaying the jsonl from the checkpointed round reconstructs history).
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "a") as f:
+        for rec in records:
+            f.write(json.dumps(rec) + "\n")
+
+
+def latest_round(path: str) -> int:
+    """Round recorded in a checkpoint's metadata (-1 when absent/unset)."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            manifest = json.loads(str(z["manifest"]))
+        return int(manifest.get("meta", {}).get("round", -1))
+    except FileNotFoundError:
+        return -1
+
+
 def restore_state(path: str, like: ServerState) -> Tuple[ServerState, dict]:
     """Restores into the structure of ``like`` (asserting leaf paths match)."""
     with np.load(path, allow_pickle=False) as z:

@@ -18,8 +18,15 @@ LossFn = Callable[[Any, Any], Tuple[jax.Array, Any]]  # (params, batch)
 
 
 def local_update(loss_fn: LossFn, params: Any, batches: Any,
-                 lr: jax.Array, opt: LocalOpt = None):
+                 lr: jax.Array, opt: LocalOpt = None,
+                 step_mask: jax.Array = None):
     """Run H local steps.  ``batches`` leaves have leading axis H.
+
+    ``step_mask``: optional [H] {0,1} — heterogeneous H_k support.  A masked
+    step freezes both the parameters and the local optimizer state, so a
+    client with mask [1,1,0,...,0] produces *exactly* the model it would
+    after H_k=2 steps of the unmasked loop (stragglers / partial work).
+    Masked-step losses are excluded from the mean.
 
     Returns (params', mean_loss).
     """
@@ -34,8 +41,21 @@ def local_update(loss_fn: LossFn, params: Any, batches: Any,
         p = jax.tree.map(lambda pi, ui: (pi + ui).astype(pi.dtype), p, upd)
         return (p, s), loss
 
-    (params, _), losses = jax.lax.scan(step, (params, opt_state), batches)
-    return params, jnp.mean(losses)
+    if step_mask is None:
+        (params, _), losses = jax.lax.scan(step, (params, opt_state), batches)
+        return params, jnp.mean(losses)
+
+    def masked_step(carry, xs):
+        batch, active = xs
+        (p_new, s_new), loss = step(carry, batch)
+        keep = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(active, n, o), new, old)
+        return (keep(p_new, carry[0]), keep(s_new, carry[1])), loss * active
+
+    active = step_mask.astype(jnp.float32)
+    (params, _), losses = jax.lax.scan(
+        masked_step, (params, opt_state), (batches, active))
+    return params, jnp.sum(losses) / jnp.maximum(jnp.sum(active), 1.0)
 
 
 def local_gradient(loss_fn: LossFn, params: Any, batch: Any):

@@ -1,0 +1,103 @@
+"""Round-engine v2: R federated rounds as ONE compiled ``lax.scan``.
+
+The per-round driver (`FederatedTrainer.run`) re-enters Python every round —
+host sampling, `jnp.asarray` staging and a blocking metrics sync per round.
+For the small rounds the paper benchmarks (LeNet / Shakespeare, milliseconds
+of device work per round) that host overhead dominates wall-clock and hides
+the FedMom speedup.  Here the whole round sequence is traced once:
+
+    state, metrics = scan_rounds(loss_fn, opt, state, batches, weights, rcfg)
+
+with ``batches`` pre-staged as [R, C, H, ...] (a *chunk* of rounds assembled
+by the host prefetch queue in ``launch/train.py``), ``weights`` [R, C], and
+optional per-round stepsizes [R] and heterogeneous-H_k step masks [R, C, H].
+Every round reuses ``round_step`` verbatim, so all placement (`mesh`/`scan`)
+and masking semantics — and the trajectory itself — are identical to the
+per-round driver's (tests/test_multiround.py certifies allclose over 20+
+rounds for FedAvg and FedMom).
+
+Sampling can also move on-device: ``scan_rounds_sampled`` folds the round
+index into a PRNG key per round (``Sampler.sample_device``) and gathers that
+round's client weights inside the scan — zero host round-trips for the
+weight stream.  (Batch *data* for the sampled clients is still assembled on
+host, since per-client datasets live in host memory; the prefetch queue
+overlaps that assembly with device compute.)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.round import RoundConfig, round_step
+from repro.core.server_opt import ServerOpt, ServerState
+
+
+def scan_rounds(loss_fn: Callable, server_opt: ServerOpt, state: ServerState,
+                batches: Any, weights: jax.Array, rcfg: RoundConfig,
+                param_axes: Optional[Any] = None,
+                lrs: Optional[jax.Array] = None,
+                step_masks: Optional[jax.Array] = None) -> tuple:
+    """Run ``R = weights.shape[0]`` rounds as a single ``lax.scan``.
+
+    ``batches`` leaves: [R, C, H, ...]; ``weights``: [R, C];
+    ``lrs``: optional [R] per-round gamma_t; ``step_masks``: optional
+    [R, C, H].  Returns (final_state, metrics) with metrics leaves stacked
+    over the round axis ([R] ``loss``/``delta_norm``/``round``).  The
+    per-client ``losses`` stream is dropped from the carry-out to keep the
+    transferred metrics O(R), not O(R*C).
+    """
+    if lrs is None:
+        lrs = jnp.full((weights.shape[0],), rcfg.lr, jnp.float32)
+
+    def body(st, xs):
+        if step_masks is None:
+            b, w, lr = xs
+            m = None
+        else:
+            b, w, lr, m = xs
+        st, metrics = round_step(loss_fn, server_opt, st, b, w, rcfg,
+                                 param_axes=param_axes, lr=lr, step_mask=m)
+        del metrics["losses"]
+        return st, metrics
+
+    xs = ((batches, weights, lrs) if step_masks is None
+          else (batches, weights, lrs, step_masks))
+    return jax.lax.scan(body, state, xs)
+
+
+def scan_rounds_sampled(loss_fn: Callable, server_opt: ServerOpt,
+                        state: ServerState, batches: Any, sampler,
+                        key: jax.Array, t0: jax.Array, rcfg: RoundConfig,
+                        param_axes: Optional[Any] = None,
+                        lrs: Optional[jax.Array] = None,
+                        step_masks: Optional[jax.Array] = None) -> tuple:
+    """Like ``scan_rounds`` but draws S_t weights ON DEVICE inside the scan.
+
+    ``sampler.sample_device(key, t)`` must be traceable (see
+    ``core/sampling.py``); round ``t0 + r`` uses the weights it returns.
+    ``batches`` must have been assembled (on host) for the *same* client
+    indices the device draw produces — ``DeviceUniformSampler.sample`` is
+    the replay that guarantees it.
+    """
+    R = jax.tree.leaves(batches)[0].shape[0]
+    if lrs is None:
+        lrs = jnp.full((R,), rcfg.lr, jnp.float32)
+    rounds = t0 + jnp.arange(R, dtype=jnp.int32)
+
+    def body(st, xs):
+        if step_masks is None:
+            b, t, lr = xs
+            m = None
+        else:
+            b, t, lr, m = xs
+        _, w = sampler.sample_device(key, t)
+        st, metrics = round_step(loss_fn, server_opt, st, b, w, rcfg,
+                                 param_axes=param_axes, lr=lr, step_mask=m)
+        del metrics["losses"]
+        return st, metrics
+
+    xs = ((batches, rounds, lrs) if step_masks is None
+          else (batches, rounds, lrs, step_masks))
+    return jax.lax.scan(body, state, xs)

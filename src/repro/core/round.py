@@ -51,13 +51,21 @@ def _cast_tree(tree, dtype):
 def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
                batches: Any, weights: jax.Array, rcfg: RoundConfig,
                param_axes: Optional[Any] = None,
-               lr: Optional[jax.Array] = None) -> tuple:
+               lr: Optional[jax.Array] = None,
+               step_mask: Optional[jax.Array] = None) -> tuple:
     """One federated round.
 
     ``batches``: pytree with leading axes [C, H, ...] (C clients x H local
     minibatches).  ``weights``: [C] fp32, the n_k/n of the sampled clients.
     ``lr``: dynamic client stepsize gamma_t (overrides rcfg.lr) — the
     decreasing schedules of Corollary 3.3 pass it per round.
+    ``step_mask``: optional [C, H] {0,1} — heterogeneous local work H_k per
+    client (stragglers report after H_k < H steps).  Aggregation keeps the
+    raw n_k/n weights: eq. (3) is exact under partial work because a
+    fully-masked client returns w^k = w_t and contributes zero to delta_t —
+    identical to eq. (2) leaving its weight mass on w_t.  Only the *metrics*
+    reweight (renormalized over clients that did any work), so the reported
+    loss is not diluted by inactive slots.
     Returns (new_state, metrics).
     """
     C = weights.shape[0]
@@ -66,8 +74,8 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
     w_c = _cast_tree(state.w, jnp.dtype(rcfg.compute_dtype))
     ddt = jnp.dtype(rcfg.delta_dtype)
 
-    def one_client(p, b):
-        return client_lib.local_update(loss_fn, p, b, lr, opt)
+    def one_client(p, b, m=None):
+        return client_lib.local_update(loss_fn, p, b, lr, opt, step_mask=m)
 
     if rcfg.placement == "mesh":
         local0 = jax.tree.map(
@@ -77,7 +85,10 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
         spmd = spmd_client_axes()
         vmapped = jax.vmap(one_client, spmd_axis_name=spmd) if spmd \
             else jax.vmap(one_client)
-        final, losses = vmapped(local0, batches)
+        if step_mask is None:
+            final, losses = vmapped(local0, batches)
+        else:
+            final, losses = vmapped(local0, batches, step_mask)
         if param_axes is not None:
             final = shard_tree(final, param_axes, prefix=("clients",))
         delta = jax.tree.map(
@@ -87,22 +98,31 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
             w_c, final)
     elif rcfg.placement == "scan":
         def body(acc, xs):
-            b_k, a_k = xs
-            wk, loss = one_client(w_c, b_k)
+            if step_mask is None:
+                b_k, a_k = xs
+                m_k = None
+            else:
+                b_k, a_k, m_k = xs
+            wk, loss = one_client(w_c, b_k, m_k)
             acc = jax.tree.map(
                 lambda d, w0, wkl: d + a_k.astype(ddt)
                 * (w0 - wkl).astype(ddt),
                 acc, w_c, wk)
             return acc, loss
         delta0 = jax.tree.map(lambda x: jnp.zeros(x.shape, ddt), w_c)
-        delta, losses = jax.lax.scan(body, delta0, (batches, weights))
+        xs = ((batches, weights) if step_mask is None
+              else (batches, weights, step_mask))
+        delta, losses = jax.lax.scan(body, delta0, xs)
     else:
         raise ValueError(rcfg.placement)
 
     new_state = server_opt.update(state, delta)
-    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+    eff_w = weights
+    if step_mask is not None:
+        eff_w = weights * (jnp.sum(step_mask, axis=1) > 0)
+    wsum = jnp.maximum(jnp.sum(eff_w), 1e-12)
     metrics = {
-        "loss": jnp.sum(weights * losses) / wsum,
+        "loss": jnp.sum(eff_w * losses) / wsum,
         "losses": losses,
         "delta_norm": _global_norm(delta),
         "round": state.t,

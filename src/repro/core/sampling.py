@@ -1,6 +1,23 @@
-"""Host-side client scheduling: uniform sampling of S_t (paper setting) plus
-a diurnal participation schedule (Bonawitz et al. 2019 report a large swing
-in available devices over 24h; we expose it as a time-varying M)."""
+"""Client scheduling: uniform sampling of S_t (paper setting) plus a diurnal
+participation schedule (Bonawitz et al. 2019 report a large swing in
+available devices over 24h; we expose it as a time-varying M).
+
+Two sampling paths with identical semantics:
+
+* **host** (``sample(t)``): numpy, called from the Python round loop;
+* **device** (``sample_device(key, t)``): ``jax.random``-based and fully
+  traceable, so the scanned multi-round driver can sample *inside* the
+  compiled ``lax.scan`` without re-entering Python.
+
+The two paths are NOT interchangeable on the stateful samplers: the host
+``sample`` of ``UniformSampler``/``DiurnalSampler`` consumes a sequential
+numpy RNG stream, while ``sample_device`` is keyed by (key, t) — same
+distribution, different draws.  Code that pairs device-drawn weights with
+host-assembled batches (``scan_rounds_sampled``) must use a ``Device*``
+sampler, whose host path *replays* the device draw exactly
+(``DeviceUniformSampler``, ``DeviceDiurnalSampler``); the
+trajectory-equivalence tests rely on this.
+"""
 from __future__ import annotations
 
 import math
@@ -41,6 +58,42 @@ class UniformSampler:
                                replace=False)
         return idx, self.population.weights[idx].astype(np.float32)
 
+    def sample_device(self, key, t):
+        """Traceable S_t draw: fold the round index into ``key`` and take the
+        first M entries of a device-side permutation of [0, K).  Usable
+        inside jit/scan (``t`` may be a tracer); the draw depends only on
+        (key, t), never on host RNG state."""
+        import jax
+        import jax.numpy as jnp
+
+        kt = jax.random.fold_in(key, t)
+        idx = jax.random.permutation(kt, self.population.n_clients)[: self.m]
+        w = jnp.asarray(self.population.weights, jnp.float32)[idx]
+        return idx, w
+
+
+class _DeviceReplayMixin:
+    """Host path = eager replay of ``sample_device(PRNGKey(seed), t)``.
+
+    The per-round Python driver and the compiled scanned driver therefore
+    sample identical client sets round for round, which is what makes their
+    trajectories bit-comparable.  Draws are keyed by (seed, t) alone, so
+    rounds can be sampled out of order (the prefetch queue does)."""
+
+    def base_key(self):
+        import jax
+
+        return jax.random.PRNGKey(self.seed)
+
+    def sample(self, t: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+        idx, w = self.sample_device(self.base_key(), t)
+        return np.asarray(idx), np.asarray(w, np.float32)
+
+
+@dataclass
+class DeviceUniformSampler(_DeviceReplayMixin, UniformSampler):
+    """Uniform sampler with the host-replays-device contract."""
+
 
 @dataclass
 class DiurnalSampler:
@@ -69,3 +122,28 @@ class DiurnalSampler:
         w = self.population.weights[idx].astype(np.float32)
         w[m_t:] = 0.0                      # padded slots contribute nothing
         return idx, w
+
+    def sample_device(self, key, t):
+        """Traceable diurnal draw: the engine is lowered for m_max slots and
+        a device-computed ``arange < M(t)`` mask zeroes the inactive tail.
+        Keyed by (key, t) — does NOT replay the stateful host ``sample``;
+        use ``DeviceDiurnalSampler`` when host batch assembly must match."""
+        import jax
+        import jax.numpy as jnp
+
+        kt = jax.random.fold_in(key, t)
+        idx = jax.random.permutation(
+            kt, self.population.n_clients)[: self.m_max]
+        frac = 0.5 * (1.0 + jnp.sin(
+            2.0 * jnp.pi * jnp.asarray(t, jnp.float32) / self.period))
+        m_t = jnp.round(
+            self.m_min + frac * (self.m_max - self.m_min)).astype(jnp.int32)
+        w = jnp.asarray(self.population.weights, jnp.float32)[idx]
+        w = jnp.where(jnp.arange(self.m_max) < m_t, w, 0.0)
+        return idx, w
+
+
+@dataclass
+class DeviceDiurnalSampler(_DeviceReplayMixin, DiurnalSampler):
+    """Diurnal sampler with the host-replays-device contract: required when
+    pairing ``sample_device`` weights with host-assembled batches."""

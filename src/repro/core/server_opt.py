@@ -47,7 +47,10 @@ class ServerOpt:
     # (w, extra, delta, t) -> (w', extra')
 
     def init(self, w0) -> ServerState:
-        w0 = _tmap(lambda x: x.astype(jnp.float32), w0)
+        # Always copy: the scanned driver donates ServerState buffers, and
+        # astype(float32) on an already-f32 leaf would alias the caller's w0
+        # (whose buffers would then be deleted by the first donated chunk).
+        w0 = _tmap(lambda x: jnp.array(x, jnp.float32), w0)
         return ServerState(w=w0, extra=self.init_extra(w0),
                            t=jnp.zeros((), jnp.int32))
 
@@ -98,9 +101,20 @@ def fedmom(eta: float = 1.0, beta: float = 0.9, *,
 # ---------------------------------------------------------------------------
 # beyond-paper members of the biased-gradient family
 # ---------------------------------------------------------------------------
-def fedavgm(eta: float = 1.0, beta: float = 0.9) -> ServerOpt:
-    """Heavy-ball (Polyak) server momentum on the biased gradient."""
+def fedavgm(eta: float = 1.0, beta: float = 0.9, *,
+            use_fused_kernel: bool = False) -> ServerOpt:
+    """Heavy-ball (Polyak) server momentum on the biased gradient.
+
+    ``use_fused_kernel`` routes the update through the fused Pallas stream
+    (kernels/fedmom_update, ``kind='fedavgm'``) — one HBM pass over the
+    whole parameter tree instead of two unfused tree ops.
+    """
     def apply(w, extra, delta, t):
+        if use_fused_kernel:
+            from repro.kernels import fedmom_ops
+            w_new, m_new = fedmom_ops.fused_avgm_tree(
+                w, extra["m"], delta, eta=eta, beta=beta)
+            return w_new, {"m": m_new}
         m = _tmap(lambda mi, di: beta * mi + di, extra["m"], delta)
         return _tmap(lambda wi, mi: wi - eta * mi, w, m), {"m": m}
     return ServerOpt("fedavgm", lambda w: {"m": _zeros_like_f32(w)}, apply)

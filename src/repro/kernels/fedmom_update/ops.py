@@ -18,7 +18,17 @@ def _on_tpu() -> bool:
 
 def fused_update_tree(w, v, delta, *, eta: float, beta: float,
                       use_kernel: bool = True):
+    """FedMom (Nesterov): one fused launch over the whole parameter tree."""
     if not use_kernel:
         return _ref.fedmom_update(w, v, delta, eta, beta)
     return _k.fused_update_tree(w, v, delta, eta=eta, beta=beta,
                                 interpret=not _on_tpu())
+
+
+def fused_avgm_tree(w, m, delta, *, eta: float, beta: float,
+                    use_kernel: bool = True):
+    """FedAvgM (heavy-ball): same fused stream, different update body."""
+    if not use_kernel:
+        return _ref.fedavgm_update(w, m, delta, eta, beta)
+    return _k.fused_update_tree(w, m, delta, eta=eta, beta=beta,
+                                kind="fedavgm", interpret=not _on_tpu())

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused FedMom update."""
+"""Pure-jnp oracles for the fused server updates (FedMom + FedAvgM)."""
 from __future__ import annotations
 
 import jax
@@ -21,3 +21,20 @@ def fedmom_update(w, v, delta, eta: float, beta: float):
     v_new = jax.tree.map(lambda p: p[1], pairs,
                          is_leaf=lambda x: isinstance(x, tuple))
     return w_new, v_new
+
+
+def fedavgm_update(w, m, delta, eta: float, beta: float):
+    """Returns (w', m') for the heavy-ball server update."""
+    def one(wi, mi, di):
+        wi = wi.astype(jnp.float32)
+        mi = mi.astype(jnp.float32)
+        di = di.astype(jnp.float32)
+        m_new = beta * mi + di
+        return wi - eta * m_new, m_new
+
+    pairs = jax.tree.map(one, w, m, delta)
+    w_new = jax.tree.map(lambda p: p[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return w_new, m_new

@@ -4,19 +4,49 @@ Couples the host-side scheduler (client sampling, round-batch assembly,
 checkpointing, logging) with the jitted round engine.  Used by the examples
 and the paper-reproduction benchmarks; the same driver scales from the
 paper's LeNet to the assigned-architecture reduced configs.
+
+Two execution paths over the SAME algorithm (trajectory-equivalent, see
+tests/test_multiround.py):
+
+* ``run(n_rounds)`` — round-engine v1: one jitted ``round_step`` per round,
+  host Python between rounds.  Simple, observable, and the right tool when
+  every round needs an eval or an external scheduling decision.
+* ``run_scanned(n_rounds, chunk_rounds=C)`` — round-engine v2: rounds are
+  executed in chunks of ``C`` as a single jitted ``lax.scan``
+  (``core/multiround.scan_rounds``) with the ``ServerState`` donated between
+  chunks, while a background producer thread assembles the next chunk's
+  round batches (a bounded prefetch queue).  Host work per round drops to
+  ~zero: one dispatch, one metrics sync and one checkpoint *per chunk*
+  instead of per round — the paper's small-round LeNet/Shakespeare settings
+  are exactly where that dominates (see ``benchmarks/perf_compare.py
+  --drivers`` for numbers).
+
+Heterogeneous local work (stragglers / partial work): set
+``hetero_steps_fn(t) -> [C] ints`` and each round's clients run only their
+first H_k of the H staged local steps, via the step-mask path of
+``round_step`` (weights stay n_k/n — eq. (3) is exact under partial work).
+Both drivers honor it identically.
+
+Sampling: any sampler with ``sample(t)`` works; a ``DeviceUniformSampler``
+additionally guarantees the host draw replays the device draw
+(``sample_device``), keeping the two drivers and the fully on-device
+``scan_rounds_sampled`` path on one trajectory.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_state
-from repro.core import RoundConfig, round_step
+from repro.checkpoint import append_metrics, save_state
+from repro.core import RoundConfig, round_step, scan_rounds
 from repro.core.sampling import UniformSampler
 from repro.core.server_opt import ServerOpt, ServerState
 from repro.data.federated import FederatedDataset
@@ -33,10 +63,15 @@ class FederatedTrainer:
     param_axes: Optional[Any] = None
     lr_schedule: Optional[Callable] = None   # round t -> gamma_t
                                              # (Corollary 3.3 schedules)
+    hetero_steps_fn: Optional[Callable] = None  # round t -> [C] ints H_k
     ckpt_path: Optional[str] = None
     ckpt_every: int = 0
+    metrics_path: Optional[str] = None       # durable per-round jsonl log
     history: list = field(default_factory=list)
     _step: Optional[Callable] = None
+    _step_masked: Optional[Callable] = None
+    _scan_chunk: Optional[Callable] = None
+    _scan_chunk_masked: Optional[Callable] = None
 
     def __post_init__(self):
         rcfg, axes = self.rcfg, self.param_axes
@@ -47,28 +82,81 @@ class FederatedTrainer:
             return round_step(loss_fn, opt, state, batches, weights, rcfg,
                               param_axes=axes, lr=lr)
 
-        self._step = step
+        @jax.jit
+        def step_masked(state, batches, weights, lr, mask):
+            return round_step(loss_fn, opt, state, batches, weights, rcfg,
+                              param_axes=axes, lr=lr, step_mask=mask)
 
+        @partial(jax.jit, donate_argnums=(0,))
+        def chunk(state, batches, weights, lrs):
+            return scan_rounds(loss_fn, opt, state, batches, weights, rcfg,
+                               param_axes=axes, lrs=lrs)
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def chunk_masked(state, batches, weights, lrs, masks):
+            return scan_rounds(loss_fn, opt, state, batches, weights, rcfg,
+                               param_axes=axes, lrs=lrs, step_masks=masks)
+
+        self._step = step
+        self._step_masked = step_masked
+        self._scan_chunk = chunk
+        self._scan_chunk_masked = chunk_masked
+
+    # ------------------------------------------------------------------
+    # host-side round assembly (shared by both drivers and the prefetcher)
+    # ------------------------------------------------------------------
+    def _round_inputs(self, t: int):
+        """Sample S_t and assemble its [C, H, b, ...] batches + knobs."""
+        idx, weights = self.sampler.sample(t)
+        batches = self.dataset.round_batches(
+            idx, self.rcfg.local_steps, self.local_batch_size())
+        lr_t = (self.rcfg.lr if self.lr_schedule is None
+                else float(self.lr_schedule(t)))
+        mask = None
+        if self.hetero_steps_fn is not None:
+            h_k = np.asarray(self.hetero_steps_fn(t))
+            mask = (np.arange(self.rcfg.local_steps)[None, :]
+                    < h_k[:, None]).astype(np.float32)
+        return batches, np.asarray(weights, np.float32), lr_t, mask
+
+    def _assemble_chunk(self, t_lo: int, t_hi: int):
+        """Stack rounds [t_lo, t_hi) into [R, C, H, ...] scan inputs."""
+        bs, ws, lrs, ms = [], [], [], []
+        for t in range(t_lo, t_hi):
+            b, w, lr_t, m = self._round_inputs(t)
+            bs.append(b)
+            ws.append(w)
+            lrs.append(lr_t)
+            ms.append(m)
+        batches = jax.tree.map(lambda *x: np.stack(x), *bs)
+        masks = None if ms[0] is None else np.stack(ms)
+        return (batches, np.stack(ws), np.asarray(lrs, np.float32), masks)
+
+    # ------------------------------------------------------------------
+    # v1: one dispatch per round
+    # ------------------------------------------------------------------
     def run(self, n_rounds: int, log_every: int = 50,
             eval_fn: Optional[Callable] = None, verbose: bool = True):
-        rcfg = self.rcfg
         t_start = time.time()
         for t in range(n_rounds):
-            idx, weights = self.sampler.sample(t)
-            batches = self.dataset.round_batches(
-                idx, rcfg.local_steps, self.local_batch_size())
+            batches, weights, lr_t, mask = self._round_inputs(t)
             batches = jax.tree.map(jnp.asarray, batches)
-            lr_t = (self.rcfg.lr if self.lr_schedule is None
-                    else float(self.lr_schedule(t)))
-            self.state, metrics = self._step(
-                self.state, batches, jnp.asarray(weights),
-                jnp.float32(lr_t))
+            if mask is None:
+                self.state, metrics = self._step(
+                    self.state, batches, jnp.asarray(weights),
+                    jnp.float32(lr_t))
+            else:
+                self.state, metrics = self._step_masked(
+                    self.state, batches, jnp.asarray(weights),
+                    jnp.float32(lr_t), jnp.asarray(mask))
             rec = {"round": t, "loss": float(metrics["loss"]),
                    "delta_norm": float(metrics["delta_norm"])}
             if eval_fn is not None and (t % log_every == 0
                                         or t == n_rounds - 1):
                 rec.update(eval_fn(self.state))
             self.history.append(rec)
+            if self.metrics_path:
+                append_metrics(self.metrics_path, [rec])
             if verbose and (t % log_every == 0 or t == n_rounds - 1):
                 extra = " ".join(f"{k}={v:.4f}" for k, v in rec.items()
                                  if k not in ("round",))
@@ -77,6 +165,97 @@ class FederatedTrainer:
             if (self.ckpt_path and self.ckpt_every
                     and t % self.ckpt_every == 0 and t > 0):
                 save_state(self.ckpt_path, self.state, {"round": t})
+        return self.history
+
+    # ------------------------------------------------------------------
+    # v2: chunked lax.scan with host prefetch
+    # ------------------------------------------------------------------
+    def run_scanned(self, n_rounds: int, chunk_rounds: int = 25,
+                    prefetch: int = 2, eval_fn: Optional[Callable] = None,
+                    verbose: bool = True):
+        """Round-engine v2 (see module docstring).
+
+        ``chunk_rounds`` trades checkpoint/metrics granularity against
+        dispatch overhead; the last chunk may be ragged (its own compile).
+        ``prefetch`` bounds the queue of host-assembled chunks, overlapping
+        round-batch assembly for chunk i+1 with device compute of chunk i.
+
+        Eval cadence differs from ``run``: rounds inside a chunk execute in
+        one compiled scan, so ``eval_fn`` can only observe chunk-boundary
+        states — it runs once per chunk (on the last round's state), not on
+        a ``log_every`` grid.  The *training* trajectory is unaffected.
+        """
+        spans = [(s, min(s + chunk_rounds, n_rounds))
+                 for s in range(0, n_rounds, chunk_rounds)]
+        q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
+        failure: list = []
+        stop = threading.Event()
+
+        def produce():
+            try:
+                for s, e in spans:
+                    item = self._assemble_chunk(s, e)
+                    while not stop.is_set():     # never block past a dead
+                        try:                     # consumer (see finally:)
+                            q.put(item, timeout=0.2)
+                            break
+                        except queue.Full:
+                            pass
+                    if stop.is_set():
+                        return
+            except BaseException as exc:   # surface in the consumer
+                failure.append(exc)
+                stop.set()
+
+        producer = threading.Thread(target=produce, daemon=True)
+        producer.start()
+        t_start = time.time()
+        try:
+            for s, e in spans:
+                while True:
+                    if failure:
+                        raise failure[0]
+                    try:
+                        item = q.get(timeout=0.2)
+                        break
+                    except queue.Empty:
+                        pass
+                batches, weights, lrs, masks = item
+                batches = jax.tree.map(jnp.asarray, batches)
+                if masks is None:
+                    self.state, metrics = self._scan_chunk(
+                        self.state, batches, jnp.asarray(weights),
+                        jnp.asarray(lrs))
+                else:
+                    self.state, metrics = self._scan_chunk_masked(
+                        self.state, batches, jnp.asarray(weights),
+                        jnp.asarray(lrs), jnp.asarray(masks))
+                losses = np.asarray(metrics["loss"])  # one sync per chunk
+                dnorms = np.asarray(metrics["delta_norm"])
+                recs = [{"round": t, "loss": float(losses[i]),
+                         "delta_norm": float(dnorms[i])}
+                        for i, t in enumerate(range(s, e))]
+                if eval_fn is not None:
+                    recs[-1].update(eval_fn(self.state))
+                self.history.extend(recs)
+                if self.metrics_path:
+                    append_metrics(self.metrics_path, recs)
+                if verbose:
+                    print(f"  rounds {s:5d}..{e - 1:5d}  "
+                          f"loss={recs[-1]['loss']:.4f} "
+                          f"delta_norm={recs[-1]['delta_norm']:.4f}  "
+                          f"({time.time() - t_start:.1f}s)")
+                # same cadence as run(): save when a round t > 0 with
+                # t % ckpt_every == 0 falls inside this chunk; plus one
+                # final save so a scanned run always ends restorable
+                due = self.ckpt_every and any(
+                    t > 0 and t % self.ckpt_every == 0
+                    for t in range(s, e))
+                if self.ckpt_path and (due or e == n_rounds):
+                    save_state(self.ckpt_path, self.state, {"round": e - 1})
+        finally:
+            stop.set()                   # unblock + retire the producer
+            producer.join()
         return self.history
 
     def local_batch_size(self) -> int:

@@ -1,0 +1,96 @@
+"""Property-check shim: real hypothesis when installed, seeded-numpy fallback.
+
+The tier-1 suite must collect and run from a clean environment that has only
+``jax`` + ``pytest`` (the CI image, and this container).  This module exposes
+the subset of the hypothesis surface the tests use — ``given``, ``settings``
+and ``st`` (``integers``/``floats``/``lists``/``composite``) — backed by real
+hypothesis when it is importable, and otherwise by a deterministic fallback
+that re-runs the test body over ``max_examples`` cases drawn from a numpy
+Generator seeded from the test's qualified name (stable across runs and
+machines, independent of test execution order).
+
+Test modules import from here instead of from hypothesis directly::
+
+    from _propcheck import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis.strategies as st  # noqa: F401
+    from hypothesis import given, settings  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        """A draw-function wrapper mirroring hypothesis' lazy strategies."""
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            """``@st.composite`` — the wrapped fn receives ``draw`` first."""
+            def factory(*args, **kw):
+                return _Strategy(
+                    lambda rng: fn(lambda s: s.draw(rng), *args, **kw))
+            return factory
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, deadline=None, **_kw):
+        """Records ``max_examples`` on the (already ``given``-wrapped) test."""
+        def deco(fn):
+            fn._pc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies: _Strategy):
+        """Re-runs the test over deterministically drawn example tuples.
+
+        Deliberately does NOT ``functools.wraps`` — copying ``__wrapped__``
+        would expose the strategy-bound parameters to pytest's fixture
+        resolver.  The wrapper's ``*args`` signature hides them.
+        """
+        def deco(fn):
+            def run(*args, **kw):
+                # ``settings`` may be the outer decorator (attribute lands
+                # on ``run``) or the inner one (attribute lands on ``fn``);
+                # hypothesis accepts both orders, so honor both.
+                n = getattr(run, "_pc_max_examples",
+                            getattr(fn, "_pc_max_examples", 10))
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(*args, *(s.draw(rng) for s in strategies), **kw)
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(run, attr, getattr(fn, attr))
+            return run
+        return deco

@@ -1,8 +1,8 @@
-"""Data pipeline properties (hypothesis where it matters)."""
-import hypothesis.strategies as st
+"""Data pipeline properties (property-based where it matters; real hypothesis
+when installed, seeded fallback otherwise — see tests/_propcheck.py)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.data import (
     FederatedDataset,

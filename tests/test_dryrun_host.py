@@ -11,6 +11,8 @@ from repro.core import RoundConfig, round_step, fedmom
 from repro.models import transformer as T
 from repro.sharding import FED_MESH_RULES, axis_rules, tree_shardings
 
+pytestmark = pytest.mark.slow   # transformer lowering: minutes, not seconds
+
 
 def test_round_under_mesh_context_matches_plain():
     """Running the round inside a (trivial) mesh with sharding constraints

@@ -33,6 +33,91 @@ def test_fedmom_kernel_sweep(shape, dtype, eta, beta):
                                np.asarray(v2["p"], np.float32), atol=atol)
 
 
+def _mixed_tree(seed=0):
+    """One pytree hitting every padding/reshape edge at once: ragged sizes
+    (not multiples of the 256x128 tile), a bf16 leaf, and a scalar leaf."""
+    rng = np.random.default_rng(seed)
+    w = {"ragged": jnp.asarray(rng.normal(size=(513, 9)), jnp.float32),
+         "big": jnp.asarray(rng.normal(size=(256 * 128 + 1,)), jnp.float32),
+         "bf16": jnp.asarray(rng.normal(size=(37, 5)), jnp.bfloat16),
+         "scalar": jnp.asarray(rng.normal(), jnp.float32)}
+    v = jax.tree.map(lambda x: x + jnp.ones((), x.dtype), w)
+    d = jax.tree.map(lambda x: (0.05 * x.astype(jnp.float32)).astype(x.dtype),
+                     w)
+    return w, v, d
+
+
+def _assert_tree_close(a, b, atol):
+    for ka in a:
+        np.testing.assert_allclose(np.asarray(a[ka], np.float32),
+                                   np.asarray(b[ka], np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("fuse_tree", [True, False])
+def test_fedmom_kernel_mixed_tree_edges(fuse_tree):
+    """Ragged + bf16 + scalar leaves in one tree, packed single-launch vs
+    per-leaf launches vs the unfused v'=w-eta*d; w'=v'+beta*(v'-v) oracle."""
+    w, v, d = _mixed_tree(1)
+    w1, v1 = fm_k.fused_update_tree(w, v, d, eta=1.5, beta=0.9,
+                                    fuse_tree=fuse_tree)
+    w2, v2 = fm_ref.fedmom_update(w, v, d, 1.5, 0.9)
+    # output dtypes must follow the input leaves, not the f32 stream
+    assert all(w1[k].dtype == w[k].dtype for k in w)
+    _assert_tree_close(w1, w2, atol=5e-2)    # bf16 leaf bounds the tol
+    _assert_tree_close(v1, v2, atol=5e-2)
+    for k in ("ragged", "big", "scalar"):    # fp32 leaves are tight
+        np.testing.assert_allclose(np.asarray(w1[k]), np.asarray(w2[k]),
+                                   atol=1e-5)
+
+
+def test_fedmom_packed_equals_per_leaf_exactly():
+    """Leaf boundaries are invisible to an elementwise update: the packed
+    single-launch stream must agree with per-leaf launches bitwise."""
+    w, v, d = _mixed_tree(2)
+    w1, v1 = fm_k.fused_update_tree(w, v, d, eta=2.0, beta=0.7,
+                                    fuse_tree=True)
+    w2, v2 = fm_k.fused_update_tree(w, v, d, eta=2.0, beta=0.7,
+                                    fuse_tree=False)
+    for k in w:
+        np.testing.assert_array_equal(np.asarray(w1[k]), np.asarray(w2[k]))
+        np.testing.assert_array_equal(np.asarray(v1[k]), np.asarray(v2[k]))
+
+
+@pytest.mark.parametrize("shape", [(7,), (513, 9), (1, 1), (256 * 128,)])
+@pytest.mark.parametrize("eta,beta", [(1.0, 0.9), (0.3, 0.0)])
+def test_fedavgm_kernel_sweep(shape, eta, beta):
+    ks = jax.random.split(jax.random.PRNGKey(hash((shape, eta)) % 2**31), 3)
+    w = {"p": jax.random.normal(ks[0], shape)}
+    m = {"p": jax.random.normal(ks[1], shape)}
+    d = {"p": 0.01 * jax.random.normal(ks[2], shape)}
+    w1, m1 = fm_k.fused_update_tree(w, m, d, eta=eta, beta=beta,
+                                    kind="fedavgm")
+    w2, m2 = fm_ref.fedavgm_update(w, m, d, eta, beta)
+    np.testing.assert_allclose(np.asarray(w1["p"]), np.asarray(w2["p"]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1["p"]), np.asarray(m2["p"]),
+                               atol=1e-5)
+
+
+def test_fedavgm_server_opt_fused_matches_unfused():
+    from repro.core import server_opt as so
+    rng = np.random.default_rng(3)
+    w0 = {"a": jnp.asarray(rng.normal(size=(37, 5)), jnp.float32),
+          "b": jnp.asarray(rng.normal(size=(130,)), jnp.float32)}
+    delta = jax.tree.map(lambda x: 0.05 * x, w0)
+    s1 = so.fedavgm(eta=0.7, beta=0.9).init(w0)
+    s2 = so.fedavgm(eta=0.7, beta=0.9, use_fused_kernel=True).init(w0)
+    for _ in range(3):
+        s1 = so.fedavgm(eta=0.7, beta=0.9).update(s1, delta)
+        s2 = so.fedavgm(eta=0.7, beta=0.9,
+                        use_fused_kernel=True).update(s2, delta)
+    for k in w0:
+        np.testing.assert_allclose(np.asarray(s1.w[k]), np.asarray(s2.w[k]),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s1.extra["m"][k]),
+                                   np.asarray(s2.extra["m"][k]), atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

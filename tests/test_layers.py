@@ -1,10 +1,8 @@
 """Layer-level properties: attention chunking, recurrences, rope, MoE."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.models import layers as L
 

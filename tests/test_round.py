@@ -100,6 +100,40 @@ def test_local_update_momentum_differs_from_sgd():
     assert not tree_allclose(p_sgd, p_mom, atol=1e-6)
 
 
+def test_eq2_model_averaging_equals_eq3_round_partial_hetero():
+    """Regression pin: eq. (2) model averaging == the eq. (3) biased-gradient
+    round implemented by ``round_step``, under BOTH partial participation
+    (sum of n_k/n < 1: the inactive mass stays on w_t) and heterogeneous
+    per-client work H_k (step masks).  FedAvg with eta=1 IS model averaging,
+    so the w' the engine produces must equal averaging the explicitly
+    computed local models."""
+    from repro.core.round import model_averaging_reference
+    params, batches, _ = _setup(seed=7)
+    C, H = 4, 3
+    weights = jnp.asarray([0.15, 0.25, 0.05, 0.2], jnp.float32)  # sum < 1
+    h_k = np.array([3, 1, 0, 2])            # one client does zero work
+    mask = (np.arange(H)[None, :] < h_k[:, None]).astype(np.float32)
+    rcfg = RoundConfig(clients_per_round=C, local_steps=H, lr=0.1,
+                       placement="mesh", compute_dtype="float32")
+    opt = so.fedavg(eta=1.0)
+    state, _ = round_step(linreg_loss, opt, opt.init(params), batches,
+                          weights, rcfg, step_mask=jnp.asarray(mask))
+
+    # explicit local models: client c runs its first H_k steps; a client
+    # with H_k = 0 stays at w_t (the eq. (2) convention for inactive ones)
+    locals_ = []
+    for c in range(C):
+        if h_k[c] == 0:
+            locals_.append(params)
+            continue
+        bc = jax.tree.map(lambda x: x[c, :h_k[c]], batches)
+        wk, _ = local_update(linreg_loss, params, bc, jnp.float32(0.1))
+        locals_.append(wk)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
+    eq2 = model_averaging_reference(params, stacked, weights)
+    assert tree_allclose(state.w, eq2, atol=1e-5)
+
+
 def test_dynamic_lr_overrides_static():
     """gamma_t passed per round (Corollary 3.3 schedules) must override
     the static RoundConfig.lr."""

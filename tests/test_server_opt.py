@@ -1,11 +1,9 @@
 """Unit + property tests for the paper's server-optimizer family."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core import RoundConfig, round_step, server_opt as so
 from repro.core.client import local_update

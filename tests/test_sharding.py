@@ -48,7 +48,10 @@ def test_divisibility_fallback():
     mesh axes — kv_heads=1 over model=16 degrades to replication (MQA),
     40 heads over 16 likewise, while divisible dims keep their sharding."""
     from jax.sharding import AbstractMesh
-    amesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    try:   # jax >= 0.5: (axis_sizes, axis_names)
+        amesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    except TypeError:   # jax 0.4.x: tuple of (name, size) pairs
+        amesh = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
     spec = logical_spec(("kv_heads", "head_dim"), FED_MESH_RULES, amesh,
                         shape=(1, 128))
     assert spec == P(None, None)

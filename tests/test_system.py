@@ -27,6 +27,8 @@ from repro.models import small
 from repro.models import transformer as T
 from repro.serve import generate
 
+pytestmark = pytest.mark.slow   # end-to-end training runs: minutes
+
 
 def _femnist_trainer(opt, rounds=40, seed=0):
     clients, _ = synthetic_femnist(n_clients=20, seed=seed)
