@@ -54,7 +54,7 @@ def run_rounds(task: Task, opt: ServerOpt, rounds: int, *,
     figures.  Deterministic in ``seed``."""
     pop = task.dataset.population()
     sampler = UniformSampler(pop, m, seed=seed)
-    task.dataset._rng = np.random.default_rng(seed + 7)  # reset draws
+    task.dataset.seed = seed + 7   # draws are keyed by (seed, t, client_id)
     w0 = task.init_fn(jax.random.PRNGKey(0))
     state = opt.init(w0)
     rcfg = RoundConfig(clients_per_round=m, local_steps=local_steps, lr=lr,
@@ -69,7 +69,8 @@ def run_rounds(task: Task, opt: ServerOpt, rounds: int, *,
         idx, weights = sampler.sample(t)
         batches = jax.tree.map(
             jnp.asarray,
-            task.dataset.round_batches(idx, local_steps, task.local_batch))
+            task.dataset.round_batches(idx, local_steps, task.local_batch,
+                                       t=t))
         prev_w = state.w
         state, metrics = step(state, batches, jnp.asarray(weights))
         losses.append(float(metrics["loss"]))

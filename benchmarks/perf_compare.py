@@ -9,6 +9,16 @@ to the per-round Python loop, at the paper's small round sizes:
 
     PYTHONPATH=src python -m benchmarks.perf_compare --drivers \
         [--model lenet|linreg] [--rounds 100] [--chunk-rounds 25]
+
+Data-plane lane: prefetch-queue (host-assembled chunks, ``run_scanned``) vs
+device-resident corpus (``run_device``: sampling + minibatch gather fused
+into the scan, zero host round-trips per chunk) — the same trajectory, only
+the data plane differs:
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --data-plane \
+        [--model lenet|linreg] [--rounds 100] [--chunk-rounds 25] [--smoke]
+
+``--smoke`` shrinks the config to a seconds-long CI sanity pass.
 """
 from __future__ import annotations
 
@@ -107,15 +117,11 @@ def _driver_setup(model: str, m: int, local_steps: int, batch: int,
     return make
 
 
-def bench_drivers(argv):
-    """Python-loop driver vs scanned multi-round driver, wall-clock/round."""
+def _lane_args(argv, flag: str, smoke: bool = False):
     import argparse
-    import time
-
-    import jax
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--drivers", action="store_true")
+    ap.add_argument(flag, action="store_true")
     ap.add_argument("--model", choices=("lenet", "linreg"), default="lenet")
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--m", type=int, default=2)
@@ -124,44 +130,84 @@ def bench_drivers(argv):
     ap.add_argument("--chunk-rounds", type=int, default=25)
     ap.add_argument("--fused-server", action="store_true",
                     help="route FedMom through the fused Pallas update")
-    args = ap.parse_args(argv)
+    if smoke:
+        ap.add_argument("--smoke", action="store_true",
+                        help="tiny config for the fast CI lane (sanity, "
+                             "not numbers)")
+    return ap.parse_args(argv)
+
+
+def _time_lanes(args, lanes):
+    """Warmup + timed pass per lane; returns (ms/round, final-loss) dicts.
+
+    ``lanes``: ordered {name: run_fn(trainer, n_rounds)}.  jit caches live
+    on the trainer's own wrappers, so warmup and the timed pass must share
+    ONE trainer (reset state between); the warmup covers the full schedule
+    because a ragged last chunk is its own compile.
+    """
+    import time
+
+    import jax
 
     make = _driver_setup(args.model, args.m, args.local_steps, args.batch,
                          args.fused_server)
-
-    def sync(tr):
-        jax.tree.leaves(tr.state.w)[0].block_until_ready()
-
-    lanes = {}
-    for name in ("python-loop", "scanned"):
+    width = max(len(n) for n in lanes)
+    ms, final = {}, {}
+    for name, run_fn in lanes.items():
         def go(tr, n):
-            if name == "python-loop":
-                tr.run(n, verbose=False)
-            else:
-                tr.run_scanned(n, chunk_rounds=args.chunk_rounds,
-                               verbose=False)
-            sync(tr)
-        # jit caches live on the trainer's own wrappers, so warmup and the
-        # timed pass must share ONE trainer (reset state between); the
-        # warmup covers the full schedule because a ragged last chunk is
-        # its own compile.
+            run_fn(tr, n)
+            jax.tree.leaves(tr.state.w)[0].block_until_ready()
         tr = make()
         init_state = tr.server_opt.init(tr.state.w)
         go(tr, args.rounds)
         tr.state, tr.history = init_state, []
         t0 = time.perf_counter()
         go(tr, args.rounds)
-        lanes[name] = (time.perf_counter() - t0) / args.rounds
-        print(f"  {name:12s} {lanes[name] * 1e3:8.3f} ms/round "
+        ms[name] = (time.perf_counter() - t0) / args.rounds
+        final[name] = tr.history[-1]["loss"]
+        print(f"  {name:{width}s} {ms[name] * 1e3:8.3f} ms/round "
               f"({args.rounds} rounds, {args.model}, M={args.m}, "
               f"H={args.local_steps}, b={args.batch})")
-    py, sc = lanes["python-loop"], lanes["scanned"]
+    return ms, final
+
+
+def bench_drivers(argv):
+    """Python-loop driver vs scanned multi-round driver, wall-clock/round."""
+    args = _lane_args(argv, "--drivers")
+    ms, _ = _time_lanes(args, {
+        "python-loop": lambda tr, n: tr.run(n, verbose=False),
+        "scanned": lambda tr, n: tr.run_scanned(
+            n, chunk_rounds=args.chunk_rounds, verbose=False),
+    })
+    py, sc = ms["python-loop"], ms["scanned"]
     print(f"  scanned removes {(py - sc) * 1e3:.3f} ms/round of host "
           f"overhead ({py / sc:.2f}x speedup at this round size)")
+
+
+def bench_data_plane(argv):
+    """Prefetch-queue driver vs device-resident data plane, ms/round."""
+    args = _lane_args(argv, "--data-plane", smoke=True)
+    if args.smoke:
+        args.model, args.rounds, args.chunk_rounds = "linreg", 12, 4
+    ms, final = _time_lanes(args, {
+        "prefetch-queue": lambda tr, n: tr.run_scanned(
+            n, chunk_rounds=args.chunk_rounds, verbose=False),
+        "device-resident": lambda tr, n: tr.run_device(
+            n, chunk_rounds=args.chunk_rounds, verbose=False),
+    })
+    # both lanes run (seed, t, client_id)-keyed draws => one trajectory
+    drift = abs(final["prefetch-queue"] - final["device-resident"])
+    assert drift < 1e-4, f"data planes diverged: {final}"
+    pq, dev = ms["prefetch-queue"], ms["device-resident"]
+    print(f"  device-resident removes {(pq - dev) * 1e3:.3f} ms/round of "
+          f"host data-plane work ({pq / dev:.2f}x at this round size; "
+          f"trajectories identical, final-loss drift {drift:.2e})")
 
 
 if __name__ == "__main__":
     if "--drivers" in sys.argv[1:]:
         bench_drivers(sys.argv[1:])
+    elif "--data-plane" in sys.argv[1:]:
+        bench_data_plane(sys.argv[1:])
     else:
         main(sys.argv[1:] or ["results/hillclimb.jsonl"])

@@ -8,7 +8,10 @@ optimizers.  Runs in ~1 minute on CPU.
 
 ``--scanned`` switches to round-engine v2: chunks of rounds compiled as one
 lax.scan (on-device-sampled client sets, host prefetch), same trajectory,
-less host overhead.  ``--fused-server`` independently routes FedMom through
+less host overhead.  ``--device-data`` goes one tier further (data plane
+v1): the whole corpus is packed on device once and each chunk samples AND
+gathers its minibatches inside the scan — zero host round-trips, still the
+same trajectory.  ``--fused-server`` independently routes FedMom through
 the fused Pallas server update (a win on TPU; interpret mode on CPU).
 ``--hetero`` additionally gives each client a random H_k <= H of local work
 per round (the straggler / partial-work scenario).
@@ -40,6 +43,9 @@ def main():
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--scanned", action="store_true",
                     help="round-engine v2: compiled multi-round chunks")
+    ap.add_argument("--device-data", action="store_true",
+                    help="data plane v1: device-resident corpus, sampling + "
+                         "minibatch gather fused into the scan")
     ap.add_argument("--fused-server", action="store_true",
                     help="route FedMom through the fused Pallas update "
                          "(compiled on TPU; interpret mode — slower — on "
@@ -80,15 +86,22 @@ def main():
                       ("FedMom (eta=K/M, beta=0.9)",
                        fedmom(eta=K / M, beta=0.9,
                               use_fused_kernel=args.fused_server))]:
-        print(f"\n=== {name}{' [scanned]' if args.scanned else ''}"
+        tier = (" [device-data]" if args.device_data
+                else " [scanned]" if args.scanned else "")
+        print(f"\n=== {name}{tier}"
               f"{' [hetero H_k]' if args.hetero else ''} ===")
-        sampler = (DeviceUniformSampler(pop, M, seed=2) if args.scanned
+        sampler = (DeviceUniformSampler(pop, M, seed=2)
+                   if (args.scanned or args.device_data)
                    else UniformSampler(pop, M, seed=2))
         trainer = FederatedTrainer(
             loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg,
             dataset=ds, sampler=sampler, hetero_steps_fn=hetero_fn,
             state=opt.init(w0)).set_local_batch(10)
-        if args.scanned:
+        if args.device_data:
+            hist = trainer.run_device(args.rounds,
+                                      chunk_rounds=args.chunk_rounds,
+                                      eval_fn=eval_fn)
+        elif args.scanned:
             hist = trainer.run_scanned(args.rounds,
                                        chunk_rounds=args.chunk_rounds,
                                        eval_fn=eval_fn)

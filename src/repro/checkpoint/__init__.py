@@ -1,4 +1,5 @@
 from repro.checkpoint.io import (  # noqa: F401
+    AsyncCheckpointWriter,
     append_metrics,
     latest_round,
     restore_state,

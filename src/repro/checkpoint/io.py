@@ -2,16 +2,22 @@
 
 The server owns the only durable state in federated learning (w, momentum,
 round counter) — clients are stateless between rounds — so checkpointing the
-``ServerState`` pytree is the complete story.  Atomic via tmp+rename.
+``ServerState`` pytree is the complete story.  Atomic via tmp+rename;
+``AsyncCheckpointWriter`` moves the device-to-host copy and the write onto a
+background thread for the chunked drivers (same atomicity, off the critical
+path).
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
 import tempfile
+import threading
 from typing import Any, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.server_opt import ServerState
@@ -37,6 +43,54 @@ def save_state(path: str, state: ServerState, meta: dict | None = None):
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)
+
+
+class AsyncCheckpointWriter:
+    """Per-chunk checkpointing off the critical path.
+
+    ``submit`` makes a cheap *device-side* copy of the state (dispatched
+    async, so it is safe against the next chunk's buffer donation) and hands
+    it to a background thread; the device-to-host transfer and the npz write
+    — still the atomic tmp+rename of ``save_state`` — happen there, never
+    blocking the driver loop.  The queue is bounded (``max_pending``
+    in-flight snapshots): if storage falls behind, ``submit`` blocks rather
+    than pinning an unbounded pile of state copies.  ``close()`` joins the
+    thread and flushes every pending write, so a returned ``run_*`` is
+    always durably checkpointed; writer-thread failures re-raise on the
+    next ``submit`` or on ``close`` (pass ``raise_failure=False`` when
+    closing on an already-propagating exception, so a stale write error
+    never masks the primary one).
+    """
+
+    def __init__(self, max_pending: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max(max_pending, 1))
+        self._failure: list = []
+        self._thread = threading.Thread(target=self._drain, daemon=True)
+        self._thread.start()
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            path, state, meta = item
+            try:
+                save_state(path, state, meta)   # d2h copy happens here
+            except BaseException as exc:
+                self._failure.append(exc)
+
+    def submit(self, path: str, state: ServerState,
+               meta: dict | None = None):
+        if self._failure:
+            raise self._failure[0]
+        snap = jax.tree.map(jnp.copy, state)    # decouple from donation
+        self._q.put((path, snap, meta))
+
+    def close(self, raise_failure: bool = True):
+        self._q.put(None)
+        self._thread.join()
+        if self._failure and raise_failure:
+            raise self._failure[0]
 
 
 def append_metrics(path: str, records: list):

@@ -3,6 +3,7 @@ biased-gradient method (server optimizers + client solver + round engine)."""
 from repro.core.round import RoundConfig, round_step  # noqa: F401
 from repro.core.multiround import (  # noqa: F401
     scan_rounds,
+    scan_rounds_ondevice,
     scan_rounds_sampled,
 )
 from repro.core.sampling import (  # noqa: F401

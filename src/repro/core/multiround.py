@@ -16,12 +16,20 @@ and masking semantics — and the trajectory itself — are identical to the
 per-round driver's (tests/test_multiround.py certifies allclose over 20+
 rounds for FedAvg and FedMom).
 
-Sampling can also move on-device: ``scan_rounds_sampled`` folds the round
-index into a PRNG key per round (``Sampler.sample_device``) and gathers that
-round's client weights inside the scan — zero host round-trips for the
-weight stream.  (Batch *data* for the sampled clients is still assembled on
-host, since per-client datasets live in host memory; the prefetch queue
-overlaps that assembly with device compute.)
+Three tiers of host involvement, one algorithm:
+
+* ``scan_rounds`` — batches pre-staged [R, C, H, ...] by the host (the
+  prefetch queue in ``launch/train.py`` assembles them);
+* ``scan_rounds_sampled`` — client *sampling* moves on-device
+  (``Sampler.sample_device`` keyed by (key, t) inside the scan), batch data
+  still host-assembled for the replayed client sets;
+* ``scan_rounds_ondevice`` — the full data plane is device-resident: the
+  scan body samples S_t, gathers its [C, H, b, ...] minibatches from a
+  packed ``DeviceFederatedDataset`` (``(seed, t, client_id)``-keyed draws,
+  bit-equal to the host assembly) and runs ``round_step`` — zero host
+  round-trips per chunk.  Diurnal/time-varying M rides along natively: the
+  engine is lowered for the sampler's padded client extent and inactive
+  slots carry zero weight.
 """
 from __future__ import annotations
 
@@ -100,4 +108,48 @@ def scan_rounds_sampled(loss_fn: Callable, server_opt: ServerOpt,
 
     xs = ((batches, rounds, lrs) if step_masks is None
           else (batches, rounds, lrs, step_masks))
+    return jax.lax.scan(body, state, xs)
+
+
+def scan_rounds_ondevice(loss_fn: Callable, server_opt: ServerOpt,
+                         state: ServerState, dataset, sampler,
+                         data_key: jax.Array, sample_key: jax.Array,
+                         t0: jax.Array, n_rounds: int, rcfg: RoundConfig,
+                         local_batch_size: int,
+                         param_axes: Optional[Any] = None,
+                         lrs: Optional[jax.Array] = None,
+                         step_masks: Optional[jax.Array] = None) -> tuple:
+    """Run ``n_rounds`` rounds with sampling AND data gather in the scan.
+
+    ``dataset`` is a ``DeviceFederatedDataset`` (a pytree — pass it through
+    jit as an argument, not a closure constant).  Round ``t = t0 + r``:
+    ``sampler.sample_device(sample_key, t)`` draws S_t, the dataset gathers
+    its ``[C, H, b, ...]`` minibatches keyed by ``(data_key, t, client_id)``
+    and ``round_step`` consumes them — no host involvement between t0 and
+    t0 + n_rounds.  The keyed draws replay exactly on host
+    (``FederatedDataset.round_batches``), so this tier stays on the same
+    trajectory as ``scan_rounds``/``scan_rounds_sampled`` fed by host
+    assembly.  ``lrs``: optional [n_rounds]; ``step_masks``: optional
+    [n_rounds, C, H] (host-stacked — O(R*C*H) scalars, not data).
+    """
+    if lrs is None:
+        lrs = jnp.full((n_rounds,), rcfg.lr, jnp.float32)
+    rounds = t0 + jnp.arange(n_rounds, dtype=jnp.int32)
+
+    def body(st, xs):
+        if step_masks is None:
+            t, lr = xs
+            m = None
+        else:
+            t, lr, m = xs
+        idx, w = sampler.sample_device(sample_key, t)
+        b = dataset.gather_round_batch(data_key, t, idx, rcfg.local_steps,
+                                       local_batch_size)
+        st, metrics = round_step(loss_fn, server_opt, st, b, w, rcfg,
+                                 param_axes=param_axes, lr=lr, step_mask=m)
+        del metrics["losses"]
+        return st, metrics
+
+    xs = ((rounds, lrs) if step_masks is None
+          else (rounds, lrs, step_masks))
     return jax.lax.scan(body, state, xs)

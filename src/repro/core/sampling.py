@@ -53,6 +53,11 @@ class UniformSampler:
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
 
+    @property
+    def lowered_clients(self) -> int:
+        """Client extent C the round engine must be lowered for (= M)."""
+        return self.m
+
     def sample(self, t: int = 0) -> Tuple[np.ndarray, np.ndarray]:
         idx = self._rng.choice(self.population.n_clients, size=self.m,
                                replace=False)
@@ -110,6 +115,12 @@ class DiurnalSampler:
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
+
+    @property
+    def lowered_clients(self) -> int:
+        """Padded client extent C: the engine is lowered for m_max slots and
+        the inactive tail carries zero weight (time-varying M)."""
+        return self.m_max
 
     def m_at(self, t: int) -> int:
         frac = 0.5 * (1 + math.sin(2 * math.pi * t / self.period))

@@ -1,4 +1,8 @@
-from repro.data.federated import FederatedDataset  # noqa: F401
+from repro.data.device import DeviceFederatedDataset  # noqa: F401
+from repro.data.federated import (  # noqa: F401
+    FederatedDataset,
+    minibatch_indices,
+)
 from repro.data.partition import (  # noqa: F401
     dirichlet_partition,
     label_shard_partition,

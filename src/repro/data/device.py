@@ -1,0 +1,156 @@
+"""Device-resident federated data plane (Data plane v1).
+
+For the corpora the paper benchmarks (LEAF-scale FEMNIST / Shakespeare, à la
+McMahan et al. 2017) the *whole* federated dataset fits on device, so round
+data never needs to cross the host boundary: ``DeviceFederatedDataset`` packs
+the corpus once into padded ``[K, n_max, ...]`` arrays (one leaf per field,
+dtypes preserved) and ``gather_round_batch`` materializes a round's
+``[C, H, b, ...]`` batch stack *inside* the compiled computation — sampling
+indices with the same ``(seed, t, client_id)``-keyed draw the host
+``FederatedDataset.round_batches`` uses (``minibatch_indices``), which makes
+the two gathers bit-equal and keeps every driver tier on one trajectory.
+
+Memory ceiling: packing costs ``K * n_max * itemsize`` per field — the
+*maximum* client size times the client count, not the corpus size — so it is
+the right plane when client sizes are bounded (paper Table 2: FEMNIST
+n_max ~ a few hundred 28x28 images => tens of MB for K in the hundreds).
+For corpora past device memory, stay on the host prefetch-queue driver
+(``FederatedTrainer.run_scanned``); ``nbytes`` reports the packed footprint
+so callers can decide.
+
+The class is a pytree, so it is passed to jitted chunk functions as a plain
+argument (no baked-in constants; the XLA executable is reusable across
+datasets of the same shape).  When a mesh + axis-rules context is active
+(``sharding/rules.py``), ``pack`` shards the client axis over the mesh's
+('pod','data') axes — each data shard holds its own clients' corpus, the
+same placement the round engine uses for per-client model replicas.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import ClientPopulation
+from repro.data.federated import FederatedDataset, minibatch_indices
+from repro.sharding import rules as sharding_rules
+
+
+@jax.tree_util.register_pytree_node_class
+class DeviceFederatedDataset:
+    """Whole federated corpus as padded device arrays.
+
+    ``arrays``: dict of ``[K, n_max, ...]`` leaves (client k's samples in
+    rows [0, n_k), zero padding above); ``counts``: ``[K]`` int32 n_k;
+    ``seed`` keys the minibatch draws exactly like ``FederatedDataset``.
+    """
+
+    def __init__(self, arrays: Dict[str, jax.Array], counts: jax.Array,
+                 seed: int = 0):
+        self.arrays = arrays
+        self.counts = counts
+        self.seed = seed
+
+    # -- pytree protocol (jit-arg friendly) -----------------------------
+    def tree_flatten(self):
+        keys = tuple(sorted(self.arrays))
+        children = tuple(self.arrays[k] for k in keys) + (self.counts,)
+        return children, (keys, self.seed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, seed = aux
+        *leaves, counts = children
+        return cls(dict(zip(keys, leaves)), counts, seed)
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def pack(cls, data: List[Dict[str, np.ndarray]], seed: int = 0,
+             shard_clients: bool = True) -> "DeviceFederatedDataset":
+        """Pack per-client dicts into padded device arrays.
+
+        Dtype-aware: each field keeps its own dtype (int32 token streams
+        next to float32 images).  With ``shard_clients`` and an active mesh
+        context, leaves are placed with the 'clients' logical axis sharded
+        over the mesh (replicated otherwise).
+        """
+        counts = np.array([len(next(iter(d.values()))) for d in data],
+                          np.int32)
+        for k, d in enumerate(data):
+            if any(len(a) != counts[k] for a in d.values()):
+                raise ValueError(f"client {k}: ragged field lengths")
+            if counts[k] == 0:
+                raise ValueError(
+                    f"client {k} has no samples (n_k = 0): the keyed "
+                    f"minibatch draw is undefined on an empty span")
+        n_max = int(counts.max())
+        arrays = {}
+        for name in data[0]:
+            leaf0 = np.asarray(data[0][name])
+            packed = np.zeros((len(data), n_max) + leaf0.shape[1:],
+                              leaf0.dtype)
+            for k, d in enumerate(data):
+                packed[k, : counts[k]] = d[name]
+            arrays[name] = cls._put(packed, shard_clients)
+        return cls(arrays, cls._put(counts, shard_clients), seed)
+
+    @classmethod
+    def from_federated(cls, ds: FederatedDataset,
+                       shard_clients: bool = True) -> "DeviceFederatedDataset":
+        return cls.pack(ds.data, seed=ds.seed, shard_clients=shard_clients)
+
+    @staticmethod
+    def _put(x: np.ndarray, shard_clients: bool):
+        mesh = sharding_rules.current_mesh()
+        rules = sharding_rules.current_rules()
+        if not shard_clients or mesh is None or rules is None:
+            return jnp.asarray(x)
+        axes = ("clients",) + (None,) * (x.ndim - 1)
+        return jax.device_put(
+            x, sharding_rules.logical_sharding(axes, rules, mesh, x.shape))
+
+    # -- inspection -----------------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return int(self.counts.shape[0])
+
+    @property
+    def n_max(self) -> int:
+        return int(next(iter(self.arrays.values())).shape[1])
+
+    @property
+    def nbytes(self) -> int:
+        """Packed device footprint (the K * n_max memory ceiling)."""
+        return sum(int(a.nbytes) for a in self.arrays.values())
+
+    def population(self) -> ClientPopulation:
+        return ClientPopulation(counts=np.asarray(self.counts))
+
+    def base_key(self):
+        return jax.random.PRNGKey(self.seed)
+
+    # -- the in-scan gather ---------------------------------------------
+    def gather_round_batch(self, key: jax.Array, t, client_ids,
+                           local_steps: int, batch_size: int):
+        """Round ``t``'s ``[C, H, b, ...]`` batch stack, fully traceable.
+
+        ``client_ids``: [C] int round participants (tracers fine — this is
+        what `scan_rounds_ondevice` calls inside the scan body).  Draws are
+        ``minibatch_indices`` with this dataset's keying, so the result is
+        bit-equal to ``FederatedDataset.round_batches(client_ids, H, b, t)``
+        on the same ``seed``; padding rows are never selected because every
+        index is drawn from [0, n_k).
+        """
+        need = local_steps * batch_size
+
+        def one(cid):
+            idx = minibatch_indices(key, t, cid, self.counts[cid], need)
+            return {
+                name: a[cid][idx].reshape(
+                    (local_steps, batch_size) + a.shape[2:])
+                for name, a in self.arrays.items()
+            }
+
+        return jax.vmap(one)(jnp.asarray(client_ids))

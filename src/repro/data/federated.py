@@ -2,14 +2,43 @@
 
 ``FederatedDataset`` owns per-client arrays and builds the [C, H, b, ...]
 round batches the engine consumes (Algorithm 2 samples a fresh minibatch per
-local step)."""
+local step).
+
+Minibatch draws are keyed by ``(seed, t, client_id)`` via ``jax.random``
+(``minibatch_indices``), never by a shared sequential RNG: round t's batches
+are the same whether rounds are assembled in order, out of order (the
+prefetch queue), or re-assembled after a checkpoint restore.  The identical
+keyed draw runs *traced* inside the device-resident data plane
+(``repro.data.device.DeviceFederatedDataset.gather_round_batch``), which is
+what makes the host and device gathers bit-equal."""
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
+import jax
 import numpy as np
 
 from repro.core.sampling import ClientPopulation
+
+
+def minibatch_indices(key: jax.Array, t, client_id, n_k, need: int):
+    """Alg. 2's with-replacement minibatch draw for one client and round.
+
+    ``need = H * b`` uniform indices into [0, n_k), keyed by (key, t,
+    client_id) only.  Fully traceable (``t``/``client_id``/``n_k`` may be
+    tracers), so the device gather can run it inside ``lax.scan``; run
+    eagerly it is the exact host replay of that device draw.
+    """
+    kt = jax.random.fold_in(jax.random.fold_in(key, t), client_id)
+    return jax.random.randint(kt, (need,), 0, n_k)
+
+
+# eager host replay: one jitted, client-vmapped dispatch per round (threefry
+# is counter-based, so the vmapped draw is bit-identical to per-client calls
+# — the same property the device gather's vmap relies on)
+_host_indices = jax.jit(
+    jax.vmap(minibatch_indices, in_axes=(None, None, 0, 0, None)),
+    static_argnums=(4,))
 
 
 class FederatedDataset:
@@ -17,8 +46,13 @@ class FederatedDataset:
     e.g. {'x': [n_k,28,28,1], 'y': [n_k]} or {'tokens': [n_k, S]}."""
 
     def __init__(self, data: List[Dict[str, np.ndarray]], seed: int = 0):
+        for k, d in enumerate(data):
+            if len(next(iter(d.values()))) == 0:
+                raise ValueError(
+                    f"client {k} has no samples (n_k = 0): the keyed "
+                    f"minibatch draw is undefined on an empty span")
         self.data = data
-        self._rng = np.random.default_rng(seed)
+        self.seed = seed
 
     @property
     def n_clients(self) -> int:
@@ -30,20 +64,28 @@ class FederatedDataset:
     def population(self) -> ClientPopulation:
         return ClientPopulation(counts=self.counts())
 
+    def base_key(self):
+        return jax.random.PRNGKey(self.seed)
+
     def round_batches(self, client_ids: Sequence[int], local_steps: int,
-                      batch_size: int) -> Dict[str, np.ndarray]:
-        """Stack [C, H, b, ...] batches (sampling with replacement when a
-        client has fewer than H*b samples, matching Alg. 2's random draws)."""
+                      batch_size: int, t: int) -> Dict[str, np.ndarray]:
+        """Stack [C, H, b, ...] batches for round ``t`` (with-replacement
+        draws per Alg. 2, keyed by ``(seed, t, client_id)`` — see
+        ``minibatch_indices``).  ``t`` is required: a caller looping rounds
+        without threading it would silently train on round-0 draws forever.
+        """
+        need = local_steps * batch_size
+        ids = np.asarray(client_ids)
+        n_ks = np.array([len(next(iter(self.data[k].values())))
+                         for k in ids])
+        idxs = np.asarray(
+            _host_indices(self.base_key(), int(t), ids, n_ks, need))
         out: Dict[str, List[np.ndarray]] = {}
-        for k in client_ids:
-            d = self.data[k]
-            n_k = len(next(iter(d.values())))
-            need = local_steps * batch_size
-            idx = self._rng.choice(n_k, size=need, replace=(n_k < need))
-            for key, arr in d.items():
+        for k, idx in zip(ids, idxs):
+            for name, arr in self.data[k].items():
                 sel = arr[idx].reshape(
                     (local_steps, batch_size) + arr.shape[1:])
-                out.setdefault(key, []).append(sel)
+                out.setdefault(name, []).append(sel)
         return {k: np.stack(v) for k, v in out.items()}
 
 

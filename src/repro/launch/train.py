@@ -5,8 +5,8 @@ checkpointing, logging) with the jitted round engine.  Used by the examples
 and the paper-reproduction benchmarks; the same driver scales from the
 paper's LeNet to the assigned-architecture reduced configs.
 
-Two execution paths over the SAME algorithm (trajectory-equivalent, see
-tests/test_multiround.py):
+Three execution tiers over the SAME algorithm (trajectory-equivalent, see
+tests/test_multiround.py and tests/test_device_data.py):
 
 * ``run(n_rounds)`` — round-engine v1: one jitted ``round_step`` per round,
   host Python between rounds.  Simple, observable, and the right tool when
@@ -17,23 +17,37 @@ tests/test_multiround.py):
   chunks, while a background producer thread assembles the next chunk's
   round batches (a bounded prefetch queue).  Host work per round drops to
   ~zero: one dispatch, one metrics sync and one checkpoint *per chunk*
-  instead of per round — the paper's small-round LeNet/Shakespeare settings
-  are exactly where that dominates (see ``benchmarks/perf_compare.py
-  --drivers`` for numbers).
+  instead of per round.
+* ``run_device(n_rounds, chunk_rounds=C)`` — data plane v1: the corpus is
+  packed once into a device-resident ``DeviceFederatedDataset`` and each
+  chunk runs ``core/multiround.scan_rounds_ondevice`` — client sampling AND
+  minibatch gather fused into the scan, zero host round-trips per chunk.
+  Per-chunk work on the host is O(chunk) scalars (round ids, lrs, step
+  masks), never data.  Draws are keyed by ``(seed, t, client_id)`` on both
+  planes, so all three tiers stay on one trajectory.
+
+Checkpointing in every tier goes through ``checkpoint.AsyncCheckpointWriter``:
+the device-to-host copy and npz write run on a background thread (flushed
+before ``run_*`` returns), keeping the save off the critical path while
+preserving tmp+rename atomicity.
 
 Heterogeneous local work (stragglers / partial work): set
 ``hetero_steps_fn(t) -> [C] ints`` and each round's clients run only their
 first H_k of the H staged local steps, via the step-mask path of
 ``round_step`` (weights stay n_k/n — eq. (3) is exact under partial work).
-Both drivers honor it identically.
+All drivers honor it identically.
 
-Sampling: any sampler with ``sample(t)`` works; a ``DeviceUniformSampler``
+Sampling: any sampler with ``sample(t)`` works; a ``Device*`` sampler
 additionally guarantees the host draw replays the device draw
-(``sample_device``), keeping the two drivers and the fully on-device
-``scan_rounds_sampled`` path on one trajectory.
+(``sample_device``), keeping every tier on one trajectory.  Time-varying
+participation (``DeviceDiurnalSampler``) works in all tiers via the
+padded-C convention: the engine is lowered for ``sampler.lowered_clients``
+slots (= m_max) and inactive slots carry zero weight, so
+``rcfg.clients_per_round`` must equal that extent (validated at run time).
 """
 from __future__ import annotations
 
+import contextlib
 import queue
 import threading
 import time
@@ -45,10 +59,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import append_metrics, save_state
+from repro.checkpoint import AsyncCheckpointWriter, append_metrics
 from repro.core import RoundConfig, round_step, scan_rounds
+from repro.core.multiround import scan_rounds_ondevice
 from repro.core.sampling import UniformSampler
 from repro.core.server_opt import ServerOpt, ServerState
+from repro.data.device import DeviceFederatedDataset
 from repro.data.federated import FederatedDataset
 
 
@@ -72,6 +88,8 @@ class FederatedTrainer:
     _step_masked: Optional[Callable] = None
     _scan_chunk: Optional[Callable] = None
     _scan_chunk_masked: Optional[Callable] = None
+    _device_chunks: dict = field(default_factory=dict)
+    _device_ds: Optional[DeviceFederatedDataset] = None
 
     def __post_init__(self):
         rcfg, axes = self.rcfg, self.param_axes
@@ -105,11 +123,20 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
     # host-side round assembly (shared by both drivers and the prefetcher)
     # ------------------------------------------------------------------
-    def _round_inputs(self, t: int):
-        """Sample S_t and assemble its [C, H, b, ...] batches + knobs."""
-        idx, weights = self.sampler.sample(t)
-        batches = self.dataset.round_batches(
-            idx, self.rcfg.local_steps, self.local_batch_size())
+    def _check_client_extent(self):
+        """The engine is lowered for rcfg.clients_per_round slots; a sampler
+        with a different extent (e.g. a diurnal sampler's m_max) would pair
+        weights with the wrong batch rows — fail loudly instead."""
+        ext = getattr(self.sampler, "lowered_clients", None)
+        if ext is not None and ext != self.rcfg.clients_per_round:
+            raise ValueError(
+                f"sampler lowers {ext} client slots but "
+                f"rcfg.clients_per_round={self.rcfg.clients_per_round}; for "
+                f"time-varying M use clients_per_round = m_max (padded-C, "
+                f"zero-weight tail)")
+
+    def _round_knobs(self, t: int):
+        """Per-round lr + optional [C, H] step mask (host scalars only)."""
         lr_t = (self.rcfg.lr if self.lr_schedule is None
                 else float(self.lr_schedule(t)))
         mask = None
@@ -117,6 +144,14 @@ class FederatedTrainer:
             h_k = np.asarray(self.hetero_steps_fn(t))
             mask = (np.arange(self.rcfg.local_steps)[None, :]
                     < h_k[:, None]).astype(np.float32)
+        return lr_t, mask
+
+    def _round_inputs(self, t: int):
+        """Sample S_t and assemble its [C, H, b, ...] batches + knobs."""
+        idx, weights = self.sampler.sample(t)
+        batches = self.dataset.round_batches(
+            idx, self.rcfg.local_steps, self.local_batch_size(), t=t)
+        lr_t, mask = self._round_knobs(t)
         return batches, np.asarray(weights, np.float32), lr_t, mask
 
     def _assemble_chunk(self, t_lo: int, t_hi: int):
@@ -132,39 +167,67 @@ class FederatedTrainer:
         masks = None if ms[0] is None else np.stack(ms)
         return (batches, np.stack(ws), np.asarray(lrs, np.float32), masks)
 
+    def _chunk_knobs(self, t_lo: int, t_hi: int):
+        """[R] lrs + optional [R, C, H] masks for the device data plane."""
+        lrs, ms = [], []
+        for t in range(t_lo, t_hi):
+            lr_t, m = self._round_knobs(t)
+            lrs.append(lr_t)
+            ms.append(m)
+        masks = None if ms[0] is None else np.stack(ms)
+        return np.asarray(lrs, np.float32), masks
+
+    @contextlib.contextmanager
+    def _writer(self):
+        """Async checkpoint writer scoped to one run_* call: joined and
+        flushed on normal exit; on an in-flight exception the writer is
+        still retired but its own failures never mask the primary error."""
+        writer = AsyncCheckpointWriter() if self.ckpt_path else None
+        try:
+            yield writer
+        except BaseException:
+            if writer:
+                writer.close(raise_failure=False)
+            raise
+        else:
+            if writer:
+                writer.close()
+
     # ------------------------------------------------------------------
     # v1: one dispatch per round
     # ------------------------------------------------------------------
     def run(self, n_rounds: int, log_every: int = 50,
             eval_fn: Optional[Callable] = None, verbose: bool = True):
+        self._check_client_extent()
         t_start = time.time()
-        for t in range(n_rounds):
-            batches, weights, lr_t, mask = self._round_inputs(t)
-            batches = jax.tree.map(jnp.asarray, batches)
-            if mask is None:
-                self.state, metrics = self._step(
-                    self.state, batches, jnp.asarray(weights),
-                    jnp.float32(lr_t))
-            else:
-                self.state, metrics = self._step_masked(
-                    self.state, batches, jnp.asarray(weights),
-                    jnp.float32(lr_t), jnp.asarray(mask))
-            rec = {"round": t, "loss": float(metrics["loss"]),
-                   "delta_norm": float(metrics["delta_norm"])}
-            if eval_fn is not None and (t % log_every == 0
-                                        or t == n_rounds - 1):
-                rec.update(eval_fn(self.state))
-            self.history.append(rec)
-            if self.metrics_path:
-                append_metrics(self.metrics_path, [rec])
-            if verbose and (t % log_every == 0 or t == n_rounds - 1):
-                extra = " ".join(f"{k}={v:.4f}" for k, v in rec.items()
-                                 if k not in ("round",))
-                print(f"  round {t:5d}  {extra}  "
-                      f"({time.time() - t_start:.1f}s)")
-            if (self.ckpt_path and self.ckpt_every
-                    and t % self.ckpt_every == 0 and t > 0):
-                save_state(self.ckpt_path, self.state, {"round": t})
+        with self._writer() as writer:
+            for t in range(n_rounds):
+                batches, weights, lr_t, mask = self._round_inputs(t)
+                batches = jax.tree.map(jnp.asarray, batches)
+                if mask is None:
+                    self.state, metrics = self._step(
+                        self.state, batches, jnp.asarray(weights),
+                        jnp.float32(lr_t))
+                else:
+                    self.state, metrics = self._step_masked(
+                        self.state, batches, jnp.asarray(weights),
+                        jnp.float32(lr_t), jnp.asarray(mask))
+                rec = {"round": t, "loss": float(metrics["loss"]),
+                       "delta_norm": float(metrics["delta_norm"])}
+                if eval_fn is not None and (t % log_every == 0
+                                            or t == n_rounds - 1):
+                    rec.update(eval_fn(self.state))
+                self.history.append(rec)
+                if self.metrics_path:
+                    append_metrics(self.metrics_path, [rec])
+                if verbose and (t % log_every == 0 or t == n_rounds - 1):
+                    extra = " ".join(f"{k}={v:.4f}" for k, v in rec.items()
+                                     if k not in ("round",))
+                    print(f"  round {t:5d}  {extra}  "
+                          f"({time.time() - t_start:.1f}s)")
+                if (writer and self.ckpt_every
+                        and t % self.ckpt_every == 0 and t > 0):
+                    writer.submit(self.ckpt_path, self.state, {"round": t})
         return self.history
 
     # ------------------------------------------------------------------
@@ -185,6 +248,7 @@ class FederatedTrainer:
         states — it runs once per chunk (on the last round's state), not on
         a ``log_every`` grid.  The *training* trajectory is unaffected.
         """
+        self._check_client_extent()
         spans = [(s, min(s + chunk_rounds, n_rounds))
                  for s in range(0, n_rounds, chunk_rounds)]
         q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
@@ -211,52 +275,138 @@ class FederatedTrainer:
         producer.start()
         t_start = time.time()
         try:
-            for s, e in spans:
-                while True:
-                    if failure:
-                        raise failure[0]
-                    try:
-                        item = q.get(timeout=0.2)
-                        break
-                    except queue.Empty:
-                        pass
-                batches, weights, lrs, masks = item
-                batches = jax.tree.map(jnp.asarray, batches)
-                if masks is None:
-                    self.state, metrics = self._scan_chunk(
-                        self.state, batches, jnp.asarray(weights),
-                        jnp.asarray(lrs))
-                else:
-                    self.state, metrics = self._scan_chunk_masked(
-                        self.state, batches, jnp.asarray(weights),
-                        jnp.asarray(lrs), jnp.asarray(masks))
-                losses = np.asarray(metrics["loss"])  # one sync per chunk
-                dnorms = np.asarray(metrics["delta_norm"])
-                recs = [{"round": t, "loss": float(losses[i]),
-                         "delta_norm": float(dnorms[i])}
-                        for i, t in enumerate(range(s, e))]
-                if eval_fn is not None:
-                    recs[-1].update(eval_fn(self.state))
-                self.history.extend(recs)
-                if self.metrics_path:
-                    append_metrics(self.metrics_path, recs)
-                if verbose:
-                    print(f"  rounds {s:5d}..{e - 1:5d}  "
-                          f"loss={recs[-1]['loss']:.4f} "
-                          f"delta_norm={recs[-1]['delta_norm']:.4f}  "
-                          f"({time.time() - t_start:.1f}s)")
-                # same cadence as run(): save when a round t > 0 with
-                # t % ckpt_every == 0 falls inside this chunk; plus one
-                # final save so a scanned run always ends restorable
-                due = self.ckpt_every and any(
-                    t > 0 and t % self.ckpt_every == 0
-                    for t in range(s, e))
-                if self.ckpt_path and (due or e == n_rounds):
-                    save_state(self.ckpt_path, self.state, {"round": e - 1})
+            with self._writer() as writer:
+                for s, e in spans:
+                    while True:
+                        if failure:
+                            raise failure[0]
+                        try:
+                            item = q.get(timeout=0.2)
+                            break
+                        except queue.Empty:
+                            pass
+                    batches, weights, lrs, masks = item
+                    batches = jax.tree.map(jnp.asarray, batches)
+                    if masks is None:
+                        self.state, metrics = self._scan_chunk(
+                            self.state, batches, jnp.asarray(weights),
+                            jnp.asarray(lrs))
+                    else:
+                        self.state, metrics = self._scan_chunk_masked(
+                            self.state, batches, jnp.asarray(weights),
+                            jnp.asarray(lrs), jnp.asarray(masks))
+                    self._finish_chunk(s, e, n_rounds, metrics, eval_fn,
+                                       verbose, writer, t_start)
         finally:
             stop.set()                   # unblock + retire the producer
             producer.join()
         return self.history
+
+    # ------------------------------------------------------------------
+    # v3: device-resident data plane (zero host round-trips per chunk)
+    # ------------------------------------------------------------------
+    def device_dataset(self,
+                       shard_clients: bool = True) -> DeviceFederatedDataset:
+        """The packed corpus (built once, cached; see data/device.py for
+        the K * n_max memory ceiling this implies)."""
+        if self._device_ds is None:
+            if isinstance(self.dataset, DeviceFederatedDataset):
+                self._device_ds = self.dataset
+            else:
+                self._device_ds = DeviceFederatedDataset.from_federated(
+                    self.dataset, shard_clients=shard_clients)
+        return self._device_ds
+
+    def _device_chunk_fn(self, n_rounds: int, masked: bool):
+        """Jitted fused chunk, cached per (R, masked, b) — the ragged last
+        chunk is its own compile, like the v2 driver."""
+        cache_key = (n_rounds, masked, self.local_batch_size())
+        fn = self._device_chunks.get(cache_key)
+        if fn is not None:
+            return fn
+        rcfg, axes = self.rcfg, self.param_axes
+        loss_fn, opt, sampler = self.loss_fn, self.server_opt, self.sampler
+        b = self.local_batch_size()
+
+        if masked:
+            @partial(jax.jit, donate_argnums=(0,))
+            def fn(state, dds, sample_key, data_key, t0, lrs, masks):
+                return scan_rounds_ondevice(
+                    loss_fn, opt, state, dds, sampler, data_key, sample_key,
+                    t0, n_rounds, rcfg, b, param_axes=axes, lrs=lrs,
+                    step_masks=masks)
+        else:
+            @partial(jax.jit, donate_argnums=(0,))
+            def fn(state, dds, sample_key, data_key, t0, lrs):
+                return scan_rounds_ondevice(
+                    loss_fn, opt, state, dds, sampler, data_key, sample_key,
+                    t0, n_rounds, rcfg, b, param_axes=axes, lrs=lrs)
+        self._device_chunks[cache_key] = fn
+        return fn
+
+    def run_device(self, n_rounds: int, chunk_rounds: int = 25,
+                   eval_fn: Optional[Callable] = None, verbose: bool = True):
+        """Data plane v1: sampling + minibatch gather + round steps fused in
+        one scan per chunk (see module docstring).  Requires a sampler with
+        a traceable ``sample_device`` (``DeviceUniformSampler`` /
+        ``DeviceDiurnalSampler`` keep host replay exact).  Eval cadence is
+        chunk-boundary, as in ``run_scanned``.
+        """
+        if not hasattr(self.sampler, "sample_device"):
+            raise ValueError(
+                "run_device needs a sampler with a traceable sample_device "
+                "(e.g. DeviceUniformSampler)")
+        self._check_client_extent()
+        dds = self.device_dataset()
+        sample_key = (self.sampler.base_key()
+                      if hasattr(self.sampler, "base_key")
+                      else jax.random.PRNGKey(self.sampler.seed))
+        data_key = dds.base_key()
+        spans = [(s, min(s + chunk_rounds, n_rounds))
+                 for s in range(0, n_rounds, chunk_rounds)]
+        t_start = time.time()
+        with self._writer() as writer:
+            for s, e in spans:
+                lrs, masks = self._chunk_knobs(s, e)
+                fn = self._device_chunk_fn(e - s, masks is not None)
+                args = (self.state, dds, sample_key, data_key, jnp.int32(s),
+                        jnp.asarray(lrs))
+                if masks is not None:
+                    args += (jnp.asarray(masks),)
+                self.state, metrics = fn(*args)
+                self._finish_chunk(s, e, n_rounds, metrics, eval_fn,
+                                   verbose, writer, t_start)
+        return self.history
+
+    # ------------------------------------------------------------------
+    # shared per-chunk bookkeeping (metrics sync, logging, checkpoints)
+    # ------------------------------------------------------------------
+    def _finish_chunk(self, s: int, e: int, n_rounds: int, metrics,
+                      eval_fn, verbose: bool,
+                      writer: Optional[AsyncCheckpointWriter],
+                      t_start: float):
+        losses = np.asarray(metrics["loss"])  # one sync per chunk
+        dnorms = np.asarray(metrics["delta_norm"])
+        recs = [{"round": t, "loss": float(losses[i]),
+                 "delta_norm": float(dnorms[i])}
+                for i, t in enumerate(range(s, e))]
+        if eval_fn is not None:
+            recs[-1].update(eval_fn(self.state))
+        self.history.extend(recs)
+        if self.metrics_path:
+            append_metrics(self.metrics_path, recs)
+        if verbose:
+            print(f"  rounds {s:5d}..{e - 1:5d}  "
+                  f"loss={recs[-1]['loss']:.4f} "
+                  f"delta_norm={recs[-1]['delta_norm']:.4f}  "
+                  f"({time.time() - t_start:.1f}s)")
+        # same cadence as run(): save when a round t > 0 with
+        # t % ckpt_every == 0 falls inside this chunk; plus one
+        # final save so a chunked run always ends restorable
+        due = self.ckpt_every and any(
+            t > 0 and t % self.ckpt_every == 0 for t in range(s, e))
+        if writer and (due or e == n_rounds):
+            writer.submit(self.ckpt_path, self.state, {"round": e - 1})
 
     def local_batch_size(self) -> int:
         return getattr(self, "_local_batch", 10)

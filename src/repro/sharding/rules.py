@@ -87,6 +87,10 @@ def current_mesh() -> Optional[Mesh]:
     return _ctx.mesh
 
 
+def current_rules() -> Optional[AxisRules]:
+    return _ctx.rules
+
+
 def _filter_axes(entry, mesh_axes) -> object:
     """Drop mesh axes that don't exist on the live mesh ('pod' on 1-pod)."""
     if entry is None:

@@ -83,9 +83,14 @@ def test_synthetic_femnist_learnable_structure():
 def test_round_batches_shapes():
     clients, _ = synthetic_femnist(n_clients=6, seed=1)
     ds = FederatedDataset(clients, seed=0)
-    batches = ds.round_batches([0, 3, 5], local_steps=4, batch_size=7)
+    batches = ds.round_batches([0, 3, 5], local_steps=4, batch_size=7, t=0)
     assert batches["x"].shape == (3, 4, 7, 28, 28, 1)
     assert batches["y"].shape == (3, 4, 7)
+
+
+def test_empty_client_rejected():
+    with pytest.raises(ValueError, match="no samples"):
+        FederatedDataset([{"x": np.zeros((0, 2), np.float32)}], seed=0)
 
 
 def test_lm_dataset_labels_are_shifted_tokens():

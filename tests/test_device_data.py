@@ -1,0 +1,342 @@
+"""Data plane v1 certification: corpus packing (padding, counts, dtypes),
+bit-equality of the in-scan minibatch gather with the host keyed assembly,
+trajectory equivalence of all three driver tiers (incl. diurnal M(t) and
+heterogeneous H_k), and the async checkpoint writer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceDiurnalSampler,
+    DeviceUniformSampler,
+    RoundConfig,
+    fedavg,
+    fedmom,
+)
+from repro.data import DeviceFederatedDataset, FederatedDataset
+from repro.launch.train import FederatedTrainer
+
+
+def linreg_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean(jnp.square(pred - batch["y"])), {}
+
+
+def _clients(seed=0, n=6, d=5, lo=20, hi=40):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        m = int(rng.integers(lo, hi))
+        x = rng.normal(size=(m, d)).astype(np.float32)
+        y = (x @ np.arange(1, d + 1) / d
+             + 0.1 * rng.normal(size=m)).astype(np.float32)
+        out.append({"x": x, "y": y})
+    return out
+
+
+def _params(d=5):
+    return {"w": jnp.zeros(d), "b": jnp.zeros(())}
+
+
+def _trainer(opt, rcfg, clients, sampler=None, hetero_fn=None, **kw):
+    ds = FederatedDataset([dict(c) for c in clients], seed=1)
+    if sampler is None:
+        sampler = DeviceUniformSampler(ds.population(), 3, seed=2)
+    return FederatedTrainer(
+        loss_fn=linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
+        sampler=sampler, state=opt.init(_params()),
+        hetero_steps_fn=hetero_fn, **kw).set_local_batch(4)
+
+
+def _flat_w(state):
+    return np.concatenate(
+        [np.ravel(np.asarray(x)) for x in jax.tree.leaves(state.w)])
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+def test_pack_shapes_counts_and_padding():
+    clients = _clients(seed=3)
+    counts = np.array([len(c["x"]) for c in clients])
+    dds = DeviceFederatedDataset.pack(clients, seed=1)
+    K, n_max = len(clients), counts.max()
+    assert dds.n_clients == K and dds.n_max == n_max
+    assert dds.arrays["x"].shape == (K, n_max, 5)
+    assert dds.arrays["y"].shape == (K, n_max)
+    np.testing.assert_array_equal(np.asarray(dds.counts), counts)
+    for k, c in enumerate(clients):
+        got = np.asarray(dds.arrays["x"][k])
+        np.testing.assert_array_equal(got[: counts[k]], c["x"])
+        assert np.all(got[counts[k]:] == 0)          # zero padding above n_k
+    assert dds.nbytes == sum(a.nbytes for a in dds.arrays.values())
+
+
+def test_pack_boundary_client_at_n_max():
+    """A client with n_k == n_max has no padding and round-trips exactly."""
+    clients = _clients(seed=5, n=4)
+    counts = [len(c["x"]) for c in clients]
+    k_max = int(np.argmax(counts))
+    dds = DeviceFederatedDataset.pack(clients, seed=0)
+    np.testing.assert_array_equal(
+        np.asarray(dds.arrays["x"][k_max]), clients[k_max]["x"])
+
+
+def test_pack_preserves_nonuniform_leaf_dtypes():
+    """int32 token streams next to float32 images, per-field dtypes kept."""
+    rng = np.random.default_rng(11)
+    clients = [{"tokens": rng.integers(0, 90, size=(n, 8)).astype(np.int32),
+                "x": rng.normal(size=(n, 4)).astype(np.float32)}
+               for n in (7, 12, 9)]
+    dds = DeviceFederatedDataset.pack(clients, seed=0)
+    assert dds.arrays["tokens"].dtype == jnp.int32
+    assert dds.arrays["x"].dtype == jnp.float32
+    assert dds.arrays["tokens"].shape == (3, 12, 8)
+
+
+def test_pack_rejects_ragged_fields():
+    with pytest.raises(ValueError, match="ragged"):
+        DeviceFederatedDataset.pack(
+            [{"x": np.zeros((3, 2)), "y": np.zeros(4)}])
+    with pytest.raises(ValueError, match="no samples"):
+        DeviceFederatedDataset.pack(
+            [{"x": np.zeros((3, 2))}, {"x": np.zeros((0, 2))}])
+
+
+# ---------------------------------------------------------------------------
+# host/device gather equivalence (the bit-replay contract)
+# ---------------------------------------------------------------------------
+def test_gather_round_batch_bit_equals_host_assembly():
+    clients = _clients(seed=7)
+    ds = FederatedDataset([dict(c) for c in clients], seed=1)
+    dds = DeviceFederatedDataset.from_federated(ds)
+    sampler = DeviceUniformSampler(ds.population(), 3, seed=2)
+    gather = jax.jit(
+        lambda key, t, ids: dds.gather_round_batch(key, t, ids, 4, 3))
+    for t in range(25):
+        idx, _ = sampler.sample(t)
+        host = ds.round_batches(idx, 4, 3, t=t)
+        dev = gather(dds.base_key(), jnp.int32(t), jnp.asarray(idx))
+        for name in host:
+            np.testing.assert_array_equal(host[name],
+                                          np.asarray(dev[name]))
+
+
+def test_gather_with_replacement_small_client():
+    """n_k < H*b: every drawn row is a real sample (padding never leaks)."""
+    rng = np.random.default_rng(13)
+    clients = [{"x": rng.normal(size=(3, 2)).astype(np.float32)},
+               {"x": rng.normal(size=(30, 2)).astype(np.float32)}]
+    dds = DeviceFederatedDataset.pack(clients, seed=4)
+    H, b = 4, 2                                   # need 8 > n_0 = 3
+    batch = dds.gather_round_batch(dds.base_key(), 0, jnp.asarray([0, 1]),
+                                   H, b)
+    rows = np.asarray(batch["x"][0]).reshape(-1, 2)
+    real = clients[0]["x"]
+    for r in rows:
+        assert any(np.array_equal(r, s) for s in real)
+    # and the host assembly replays the same draw bit for bit
+    ds = FederatedDataset(clients, seed=4)
+    host = ds.round_batches([0, 1], H, b, t=0)
+    np.testing.assert_array_equal(host["x"], np.asarray(batch["x"]))
+
+
+def test_round_batches_keyed_draws_are_call_order_independent():
+    """The reproducibility fix: round t's batches depend only on
+    (seed, t, client_id), not on how many draws happened before (the
+    prefetch queue and checkpoint resume both rely on this)."""
+    clients = _clients(seed=17)
+    a = FederatedDataset([dict(c) for c in clients], seed=9)
+    b = FederatedDataset([dict(c) for c in clients], seed=9)
+    ids = [0, 2, 4]
+    out_a = [a.round_batches(ids, 3, 4, t=t) for t in (0, 1, 2)]
+    out_b = [b.round_batches(ids, 3, 4, t=t) for t in (2, 1, 0)][::-1]
+    for x, y in zip(out_a, out_b):
+        for name in x:
+            np.testing.assert_array_equal(x[name], y[name])
+    # different rounds draw differently
+    assert not np.array_equal(out_a[0]["x"], out_a[1]["x"])
+
+
+# ---------------------------------------------------------------------------
+# three-tier trajectory equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("opt_fn", [fedavg, fedmom])
+def test_run_device_matches_run_and_run_scanned(opt_fn):
+    """21 rounds (ragged last chunk), FedAvg and FedMom: v1 == v2 == v3."""
+    clients = _clients(seed=21)
+    rcfg = RoundConfig(clients_per_round=3, local_steps=4, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    opt = opt_fn()
+    tr1 = _trainer(opt, rcfg, clients)
+    tr2 = _trainer(opt, rcfg, clients)
+    tr3 = _trainer(opt, rcfg, clients)
+    h1 = tr1.run(21, verbose=False)
+    h2 = tr2.run_scanned(21, chunk_rounds=8, verbose=False)
+    h3 = tr3.run_device(21, chunk_rounds=8, verbose=False)
+    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr3.state),
+                               atol=1e-6)
+    np.testing.assert_allclose(_flat_w(tr2.state), _flat_w(tr3.state),
+                               atol=1e-6)
+    assert len(h3) == 21
+    np.testing.assert_allclose([r["loss"] for r in h1],
+                               [r["loss"] for r in h3], atol=1e-6)
+    np.testing.assert_allclose([r["delta_norm"] for r in h1],
+                               [r["delta_norm"] for r in h3], atol=1e-6)
+    assert int(tr3.state.t) == 21
+
+
+def test_run_device_scan_placement_matches():
+    clients = _clients(seed=31)
+    rcfg = RoundConfig(clients_per_round=3, local_steps=3, lr=0.05,
+                       placement="scan", compute_dtype="float32")
+    opt = fedmom()
+    tr1 = _trainer(opt, rcfg, clients)
+    tr2 = _trainer(opt, rcfg, clients)
+    tr1.run(10, verbose=False)
+    tr2.run_device(10, chunk_rounds=4, verbose=False)
+    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr2.state),
+                               atol=1e-6)
+
+
+def test_diurnal_sampler_wired_through_all_drivers():
+    """Time-varying M(t) via padded-C + zero-weight tail: run, run_scanned
+    and run_device stay on one trajectory (the ROADMAP wiring item)."""
+    clients = _clients(seed=23, n=8)
+    ds = FederatedDataset(clients, seed=1)
+    m_max = 5
+    rcfg = RoundConfig(clients_per_round=m_max, local_steps=3, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    opt = fedmom()
+
+    def mk():
+        return _trainer(
+            opt, rcfg, clients,
+            sampler=DeviceDiurnalSampler(ds.population(), m_min=2,
+                                         m_max=m_max, period=7, seed=3))
+    tr1, tr2, tr3 = mk(), mk(), mk()
+    tr1.run(15, verbose=False)
+    tr2.run_scanned(15, chunk_rounds=6, verbose=False)
+    tr3.run_device(15, chunk_rounds=6, verbose=False)
+    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr2.state),
+                               atol=1e-6)
+    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr3.state),
+                               atol=1e-6)
+
+
+def test_hetero_steps_match_across_drivers():
+    clients = _clients(seed=27)
+    rcfg = RoundConfig(clients_per_round=3, local_steps=4, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+
+    def hetero_fn(t):
+        return np.random.default_rng(200 + t).integers(0, 5, size=3)
+
+    opt = fedmom()
+    tr1 = _trainer(opt, rcfg, clients, hetero_fn=hetero_fn)
+    tr2 = _trainer(opt, rcfg, clients, hetero_fn=hetero_fn)
+    tr1.run(12, verbose=False)
+    tr2.run_device(12, chunk_rounds=5, verbose=False)
+    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr2.state),
+                               atol=1e-6)
+
+
+def test_client_extent_mismatch_raises():
+    clients = _clients(seed=33, n=8)
+    ds = FederatedDataset(clients, seed=1)
+    rcfg = RoundConfig(clients_per_round=3, local_steps=2, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    opt = fedavg()
+    tr = _trainer(opt, rcfg, clients,
+                  sampler=DeviceDiurnalSampler(ds.population(), m_min=2,
+                                               m_max=5, seed=3))
+    with pytest.raises(ValueError, match="clients_per_round"):
+        tr.run_device(4, verbose=False)
+    with pytest.raises(ValueError, match="clients_per_round"):
+        tr.run_scanned(4, verbose=False)
+
+
+def test_run_device_requires_device_sampler():
+    clients = _clients(seed=35)
+    rcfg = RoundConfig(clients_per_round=3, local_steps=2, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    opt = fedavg()
+    tr = _trainer(opt, rcfg, clients)
+
+    class HostOnly:
+        def sample(self, t):
+            raise NotImplementedError
+    tr.sampler = HostOnly()
+    with pytest.raises(ValueError, match="sample_device"):
+        tr.run_device(2, verbose=False)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing (async writer) + metrics
+# ---------------------------------------------------------------------------
+def test_run_device_checkpoints_and_metrics(tmp_path):
+    from repro.checkpoint import latest_round, restore_state
+    clients = _clients(seed=19)
+    rcfg = RoundConfig(clients_per_round=3, local_steps=2, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    opt = fedavg(eta=1.0)
+    ck = os.path.join(tmp_path, "state.npz")
+    mp = os.path.join(tmp_path, "metrics.jsonl")
+    tr = _trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=1,
+                  metrics_path=mp)
+    tr.run_device(10, chunk_rounds=4, verbose=False)
+    assert latest_round(ck) == 9
+    restored, meta = restore_state(ck, tr.state)
+    np.testing.assert_allclose(_flat_w(restored), _flat_w(tr.state))
+    with open(mp) as f:
+        assert len(f.readlines()) == 10
+
+
+def test_async_writer_flushes_all_submits(tmp_path):
+    from repro.checkpoint import AsyncCheckpointWriter, restore_state
+    opt = fedavg()
+    path = os.path.join(tmp_path, "w.npz")
+    writer = AsyncCheckpointWriter()
+    last = None
+    for i in range(5):
+        last = opt.init({"w": jnp.full((4,), float(i))})
+        writer.submit(path, last, {"round": i})
+    writer.close()                      # joins + flushes: last write wins
+    restored, meta = restore_state(path, last)
+    assert meta["round"] == 4
+    np.testing.assert_allclose(_flat_w(restored), _flat_w(last))
+
+
+def test_async_writer_survives_donation(tmp_path):
+    """The submitted snapshot must stay valid after the caller's buffer is
+    donated to the next chunk (the exact run_* usage pattern)."""
+    from repro.checkpoint import AsyncCheckpointWriter, restore_state
+    opt = fedavg()
+    state = opt.init({"w": jnp.arange(4, dtype=jnp.float32)})
+
+    def bump(s):
+        return s._replace(w=jax.tree.map(lambda x: x + 1.0, s.w))
+    donating = jax.jit(bump, donate_argnums=(0,))
+    path = os.path.join(tmp_path, "w.npz")
+    writer = AsyncCheckpointWriter()
+    expect = np.asarray(state.w["w"]).copy()
+    writer.submit(path, state, {"round": 0})
+    state = donating(state)             # donates the submitted buffers
+    writer.close()
+    restored, _ = restore_state(path, state)
+    np.testing.assert_array_equal(np.asarray(restored.w["w"]), expect)
+
+
+def test_scanned_driver_still_checkpoints_with_async_writer(tmp_path):
+    from repro.checkpoint import latest_round
+    clients = _clients(seed=37)
+    rcfg = RoundConfig(clients_per_round=3, local_steps=2, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    opt = fedavg(eta=1.0)
+    ck = os.path.join(tmp_path, "state.npz")
+    tr = _trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=3)
+    tr.run_scanned(9, chunk_rounds=4, verbose=False)
+    assert latest_round(ck) == 8

@@ -124,7 +124,7 @@ def test_scan_rounds_sampled_matches_host_replay():
     bs, ws = [], []
     for t in range(R):
         idx, w = sampler.sample(t)          # host replay of the device draw
-        bs.append(ds.round_batches(idx, 3, 4))
+        bs.append(ds.round_batches(idx, 3, 4, t=t))
         ws.append(w)
     batches = {k: jnp.asarray(np.stack([b[k] for b in bs])) for k in bs[0]}
     st1, m1 = scan_rounds(linreg_loss, opt, opt.init(_params()), batches,
