@@ -12,13 +12,18 @@ to the per-round Python loop, at the paper's small round sizes:
 
 Data-plane lane: prefetch-queue (host-assembled chunks, ``run_scanned``) vs
 device-resident corpus (``run_device``: sampling + minibatch gather fused
-into the scan, zero host round-trips per chunk) — the same trajectory, only
-the data plane differs:
+into the scan, zero host round-trips per chunk) vs shard-cached streaming
+(``run_streaming``: bounded device LRU of client shards, chunk i+1's H2D
+uploads overlapped with chunk i's compute) — the same trajectory, only the
+data plane differs.  The streaming row also reports cache hit-rate and the
+cache-vs-packed footprint (the plane-choice decision numbers):
 
     PYTHONPATH=src python -m benchmarks.perf_compare --data-plane \
-        [--model lenet|linreg] [--rounds 100] [--chunk-rounds 25] [--smoke]
+        [--model lenet|linreg] [--rounds 100] [--chunk-rounds 25] \
+        [--cache-clients N] [--smoke]
 
-``--smoke`` shrinks the config to a seconds-long CI sanity pass.
+``--smoke`` shrinks the config to a seconds-long CI sanity pass (with a
+cache smaller than the corpus, so the streaming lane actually streams).
 """
 from __future__ import annotations
 
@@ -128,6 +133,9 @@ def _lane_args(argv, flag: str, smoke: bool = False):
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=10)
     ap.add_argument("--chunk-rounds", type=int, default=25)
+    ap.add_argument("--cache-clients", type=int, default=None,
+                    help="shard-cache capacity for the streaming lane "
+                         "(default: one chunk's worst case, m*chunk_rounds)")
     ap.add_argument("--fused-server", action="store_true",
                     help="route FedMom through the fused Pallas update")
     if smoke:
@@ -152,7 +160,7 @@ def _time_lanes(args, lanes):
     make = _driver_setup(args.model, args.m, args.local_steps, args.batch,
                          args.fused_server)
     width = max(len(n) for n in lanes)
-    ms, final = {}, {}
+    ms, final, trainers = {}, {}, {}
     for name, run_fn in lanes.items():
         def go(tr, n):
             run_fn(tr, n)
@@ -165,16 +173,17 @@ def _time_lanes(args, lanes):
         go(tr, args.rounds)
         ms[name] = (time.perf_counter() - t0) / args.rounds
         final[name] = tr.history[-1]["loss"]
+        trainers[name] = tr
         print(f"  {name:{width}s} {ms[name] * 1e3:8.3f} ms/round "
               f"({args.rounds} rounds, {args.model}, M={args.m}, "
               f"H={args.local_steps}, b={args.batch})")
-    return ms, final
+    return ms, final, trainers
 
 
 def bench_drivers(argv):
     """Python-loop driver vs scanned multi-round driver, wall-clock/round."""
     args = _lane_args(argv, "--drivers")
-    ms, _ = _time_lanes(args, {
+    ms, _, _ = _time_lanes(args, {
         "python-loop": lambda tr, n: tr.run(n, verbose=False),
         "scanned": lambda tr, n: tr.run_scanned(
             n, chunk_rounds=args.chunk_rounds, verbose=False),
@@ -185,23 +194,36 @@ def bench_drivers(argv):
 
 
 def bench_data_plane(argv):
-    """Prefetch-queue driver vs device-resident data plane, ms/round."""
+    """Prefetch-queue vs device-resident vs shard-cached streaming data
+    planes, ms/round at equal trajectory (+ cache hit-rate)."""
     args = _lane_args(argv, "--data-plane", smoke=True)
     if args.smoke:
         args.model, args.rounds, args.chunk_rounds = "linreg", 12, 4
-    ms, final = _time_lanes(args, {
+    ms, final, trainers = _time_lanes(args, {
         "prefetch-queue": lambda tr, n: tr.run_scanned(
             n, chunk_rounds=args.chunk_rounds, verbose=False),
         "device-resident": lambda tr, n: tr.run_device(
             n, chunk_rounds=args.chunk_rounds, verbose=False),
+        "shard-cached": lambda tr, n: tr.run_streaming(
+            n, chunk_rounds=args.chunk_rounds,
+            cache_clients=args.cache_clients, verbose=False),
     })
-    # both lanes run (seed, t, client_id)-keyed draws => one trajectory
-    drift = abs(final["prefetch-queue"] - final["device-resident"])
+    # all lanes run (seed, t, client_id)-keyed draws => one trajectory
+    drift = max(abs(final[a] - final[b])
+                for a in final for b in final if a < b)
     assert drift < 1e-4, f"data planes diverged: {final}"
     pq, dev = ms["prefetch-queue"], ms["device-resident"]
     print(f"  device-resident removes {(pq - dev) * 1e3:.3f} ms/round of "
           f"host data-plane work ({pq / dev:.2f}x at this round size; "
           f"trajectories identical, final-loss drift {drift:.2e})")
+    cache = trainers["shard-cached"].stream_cache
+    sds = trainers["shard-cached"].streaming_dataset()
+    print(f"  shard-cached   {cache.slots} slots "
+          f"({cache.nbytes / 2**20:.2f} MiB of "
+          f"{sds.packed_nbytes / 2**20:.2f} MiB packed), "
+          f"hit-rate {cache.hit_rate:.1%}, {cache.evictions} evictions, "
+          f"{ms['shard-cached'] / dev:.2f}x device-resident ms/round at "
+          f"equal trajectory")
 
 
 if __name__ == "__main__":

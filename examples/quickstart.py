@@ -11,10 +11,18 @@ lax.scan (on-device-sampled client sets, host prefetch), same trajectory,
 less host overhead.  ``--device-data`` goes one tier further (data plane
 v1): the whole corpus is packed on device once and each chunk samples AND
 gathers its minibatches inside the scan — zero host round-trips, still the
-same trajectory.  ``--fused-server`` independently routes FedMom through
-the fused Pallas server update (a win on TPU; interpret mode on CPU).
-``--hetero`` additionally gives each client a random H_k <= H of local work
-per round (the straggler / partial-work scenario).
+same trajectory.  ``--stream-data`` is the fourth tier (data plane v2): the
+corpus stays on host and a bounded device-side LRU shard cache
+(``--cache-clients``) holds only upcoming participants, with chunk i+1's
+uploads overlapped with chunk i's compute — for corpora that do not fit
+device memory, still the same trajectory.  Picking a plane: if the packed
+``K * n_max`` corpus (``DeviceFederatedDataset.nbytes``) fits device memory
+use ``--device-data``; if at least one chunk's participant working set fits
+a cache budget use ``--stream-data``; otherwise stay on ``--scanned``.
+``--fused-server`` independently routes FedMom through the fused Pallas
+server update (a win on TPU; interpret mode on CPU).  ``--hetero``
+additionally gives each client a random H_k <= H of local work per round
+(the straggler / partial-work scenario).
 """
 import argparse
 
@@ -46,6 +54,13 @@ def main():
     ap.add_argument("--device-data", action="store_true",
                     help="data plane v1: device-resident corpus, sampling + "
                          "minibatch gather fused into the scan")
+    ap.add_argument("--stream-data", action="store_true",
+                    help="data plane v2: host-resident corpus behind a "
+                         "bounded device shard cache with overlapped H2D "
+                         "prefetch (for corpora bigger than device memory)")
+    ap.add_argument("--cache-clients", type=int, default=None,
+                    help="shard-cache capacity in clients (default: one "
+                         "chunk's worst case, m * chunk_rounds)")
     ap.add_argument("--fused-server", action="store_true",
                     help="route FedMom through the fused Pallas update "
                          "(compiled on TPU; interpret mode — slower — on "
@@ -86,18 +101,32 @@ def main():
                       ("FedMom (eta=K/M, beta=0.9)",
                        fedmom(eta=K / M, beta=0.9,
                               use_fused_kernel=args.fused_server))]:
-        tier = (" [device-data]" if args.device_data
+        tier = (" [stream-data]" if args.stream_data
+                else " [device-data]" if args.device_data
                 else " [scanned]" if args.scanned else "")
         print(f"\n=== {name}{tier}"
               f"{' [hetero H_k]' if args.hetero else ''} ===")
+        needs_device_sampler = (args.scanned or args.device_data
+                                or args.stream_data)
         sampler = (DeviceUniformSampler(pop, M, seed=2)
-                   if (args.scanned or args.device_data)
+                   if needs_device_sampler
                    else UniformSampler(pop, M, seed=2))
         trainer = FederatedTrainer(
             loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg,
             dataset=ds, sampler=sampler, hetero_steps_fn=hetero_fn,
             state=opt.init(w0)).set_local_batch(10)
-        if args.device_data:
+        if args.stream_data:
+            hist = trainer.run_streaming(args.rounds,
+                                         chunk_rounds=args.chunk_rounds,
+                                         cache_clients=args.cache_clients,
+                                         eval_fn=eval_fn)
+            c = trainer.stream_cache
+            print(f"shard cache: {len(c.resident())}/{K} clients resident "
+                  f"in {c.slots} slots ({c.nbytes / 2**20:.2f} MiB of "
+                  f"{trainer.streaming_dataset().packed_nbytes / 2**20:.2f} "
+                  f"MiB packed), hit-rate {c.hit_rate:.1%}, "
+                  f"{c.evictions} evictions")
+        elif args.device_data:
             hist = trainer.run_device(args.rounds,
                                       chunk_rounds=args.chunk_rounds,
                                       eval_fn=eval_fn)

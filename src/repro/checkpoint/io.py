@@ -14,6 +14,7 @@ import os
 import queue
 import tempfile
 import threading
+import zipfile
 from typing import Any, Tuple
 
 import jax
@@ -41,8 +42,12 @@ def save_state(path: str, state: ServerState, meta: dict | None = None):
         np.savez(tmp, manifest=json.dumps(manifest), **payload)
         os.replace(tmp + ".npz", path)
     finally:
-        if os.path.exists(tmp):
-            os.remove(tmp)
+        # np.savez writes to tmp + ".npz" (the suffix is appended); a failure
+        # inside it would otherwise strand that partial file next to the
+        # mkstemp placeholder
+        for p in (tmp, tmp + ".npz"):
+            if os.path.exists(p):
+                os.remove(p)
 
 
 class AsyncCheckpointWriter:
@@ -107,13 +112,55 @@ def append_metrics(path: str, records: list):
             f.write(json.dumps(rec) + "\n")
 
 
+def prune_metrics(path: str, max_round: int):
+    """Drop jsonl records with round > ``max_round`` (atomic tmp+rename).
+
+    Resume glue calls this with the restored checkpoint's round: rounds
+    logged after the last durable save are about to be re-run, and without
+    the rewind they would be appended twice.  Keeps the invariant that the
+    metrics log and the checkpoint describe one trajectory prefix.  A
+    missing file is a no-op.
+    """
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        lines = f.readlines()
+    keep = []
+    for ln in lines:
+        try:
+            rec = json.loads(ln)
+        except json.JSONDecodeError:
+            # partial trailing write from a crash: by construction beyond
+            # the durable prefix, so drop it
+            continue
+        if rec.get("round", -1) <= max_round:
+            keep.append(ln)
+    if len(keep) == len(lines):
+        return
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.writelines(keep)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
 def latest_round(path: str) -> int:
-    """Round recorded in a checkpoint's metadata (-1 when absent/unset)."""
+    """Round recorded in a checkpoint's metadata (-1 when absent/unset).
+
+    A truncated or corrupt archive (interrupted write, bad disk) also means
+    "no usable checkpoint" — resume paths probe this, so it returns -1
+    instead of crashing.  ``restore_state`` stays strict: actually loading a
+    corrupt checkpoint should fail loudly.
+    """
     try:
         with np.load(path, allow_pickle=False) as z:
             manifest = json.loads(str(z["manifest"]))
         return int(manifest.get("meta", {}).get("round", -1))
-    except FileNotFoundError:
+    except (OSError, EOFError, KeyError, TypeError, ValueError,
+            zipfile.BadZipFile):
         return -1
 
 

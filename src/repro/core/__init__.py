@@ -12,6 +12,7 @@ from repro.core.sampling import (  # noqa: F401
     DeviceUniformSampler,
     DiurnalSampler,
     UniformSampler,
+    participants_in_span,
 )
 from repro.core.server_opt import (  # noqa: F401
     ServerOpt,

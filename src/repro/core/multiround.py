@@ -23,13 +23,19 @@ Three tiers of host involvement, one algorithm:
 * ``scan_rounds_sampled`` — client *sampling* moves on-device
   (``Sampler.sample_device`` keyed by (key, t) inside the scan), batch data
   still host-assembled for the replayed client sets;
-* ``scan_rounds_ondevice`` — the full data plane is device-resident: the
-  scan body samples S_t, gathers its [C, H, b, ...] minibatches from a
-  packed ``DeviceFederatedDataset`` (``(seed, t, client_id)``-keyed draws,
-  bit-equal to the host assembly) and runs ``round_step`` — zero host
-  round-trips per chunk.  Diurnal/time-varying M rides along natively: the
-  engine is lowered for the sampler's padded client extent and inactive
-  slots carry zero weight.
+* ``scan_rounds_ondevice`` — the full data plane lives on device: the scan
+  body samples S_t, gathers its [C, H, b, ...] minibatches from the dataset
+  pytree (``(seed, t, client_id)``-keyed draws, bit-equal to the host
+  assembly) and runs ``round_step`` — zero host round-trips per chunk.
+  Diurnal/time-varying M rides along natively: the engine is lowered for
+  the sampler's padded client extent and inactive slots carry zero weight.
+
+The ``dataset`` of ``scan_rounds_ondevice`` is anything honoring the
+``gather_round_batch(key, t, client_ids, H, b)`` contract: the fully packed
+``DeviceFederatedDataset`` (data plane v1, ``run_device``) or a streaming
+``data.stream.CacheView`` over a bounded shard cache (data plane v2,
+``run_streaming`` — the fourth driver path).  Both draw the same keyed
+minibatch indices, so every path trains the same trajectory.
 """
 from __future__ import annotations
 
@@ -121,8 +127,9 @@ def scan_rounds_ondevice(loss_fn: Callable, server_opt: ServerOpt,
                          step_masks: Optional[jax.Array] = None) -> tuple:
     """Run ``n_rounds`` rounds with sampling AND data gather in the scan.
 
-    ``dataset`` is a ``DeviceFederatedDataset`` (a pytree — pass it through
-    jit as an argument, not a closure constant).  Round ``t = t0 + r``:
+    ``dataset`` is a ``DeviceFederatedDataset`` or a streaming ``CacheView``
+    (a pytree either way — pass it through jit as an argument, not a closure
+    constant).  Round ``t = t0 + r``:
     ``sampler.sample_device(sample_key, t)`` draws S_t, the dataset gathers
     its ``[C, H, b, ...]`` minibatches keyed by ``(data_key, t, client_id)``
     and ``round_step`` consumes them — no host involvement between t0 and

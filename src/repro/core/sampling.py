@@ -158,3 +158,30 @@ class DiurnalSampler:
 class DeviceDiurnalSampler(_DeviceReplayMixin, DiurnalSampler):
     """Diurnal sampler with the host-replays-device contract: required when
     pairing ``sample_device`` weights with host-assembled batches."""
+
+
+def participants_in_span(sampler, t_lo: int, t_hi: int) -> list:
+    """Distinct client ids drawn in rounds [t_lo, t_hi), via the host replay.
+
+    Requires a ``Device*`` sampler (keyed draws: the host ``sample`` is a
+    stateless replay of the device draw, so peeking ahead never perturbs the
+    trajectory).  This is what lets the streaming data plane know chunk
+    i+1's participants before its compute is dispatched and overlap their
+    shard uploads with chunk i.  Order is first appearance, which doubles as
+    the LRU recency order for the shard cache.  Padded diurnal slots are
+    included — zero-weight slots still index data in the gather.
+    """
+    if not (hasattr(sampler, "sample_device")
+            and hasattr(sampler, "base_key")):
+        raise ValueError(
+            "participants_in_span needs a keyed Device* sampler whose host "
+            "sample REPLAYS the (seed, t)-keyed device draw (base_key + "
+            "sample_device, e.g. DeviceUniformSampler): a stateful host "
+            "sampler would peek a different client set than the in-scan "
+            "draw uses")
+    seen: dict = {}
+    for t in range(t_lo, t_hi):
+        idx, _ = sampler.sample(t)
+        for c in np.asarray(idx).tolist():
+            seen.setdefault(int(c), None)
+    return list(seen)

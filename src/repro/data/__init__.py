@@ -3,6 +3,11 @@ from repro.data.federated import (  # noqa: F401
     FederatedDataset,
     minibatch_indices,
 )
+from repro.data.stream import (  # noqa: F401
+    CacheView,
+    ShardCache,
+    StreamingFederatedDataset,
+)
 from repro.data.partition import (  # noqa: F401
     dirichlet_partition,
     label_shard_partition,

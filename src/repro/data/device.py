@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sampling import ClientPopulation
-from repro.data.federated import FederatedDataset, minibatch_indices
+from repro.data.federated import (FederatedDataset, minibatch_indices,
+                                  validate_client_data)
 from repro.sharding import rules as sharding_rules
 
 
@@ -76,15 +77,7 @@ class DeviceFederatedDataset:
         context, leaves are placed with the 'clients' logical axis sharded
         over the mesh (replicated otherwise).
         """
-        counts = np.array([len(next(iter(d.values()))) for d in data],
-                          np.int32)
-        for k, d in enumerate(data):
-            if any(len(a) != counts[k] for a in d.values()):
-                raise ValueError(f"client {k}: ragged field lengths")
-            if counts[k] == 0:
-                raise ValueError(
-                    f"client {k} has no samples (n_k = 0): the keyed "
-                    f"minibatch draw is undefined on an empty span")
+        counts = validate_client_data(data)
         n_max = int(counts.max())
         arrays = {}
         for name in data[0]:
@@ -103,13 +96,10 @@ class DeviceFederatedDataset:
 
     @staticmethod
     def _put(x: np.ndarray, shard_clients: bool):
-        mesh = sharding_rules.current_mesh()
-        rules = sharding_rules.current_rules()
-        if not shard_clients or mesh is None or rules is None:
+        if not shard_clients:
             return jnp.asarray(x)
-        axes = ("clients",) + (None,) * (x.ndim - 1)
-        return jax.device_put(
-            x, sharding_rules.logical_sharding(axes, rules, mesh, x.shape))
+        return sharding_rules.put_logical(
+            x, *(("clients",) + (None,) * (x.ndim - 1)))
 
     # -- inspection -----------------------------------------------------
     @property

@@ -41,16 +41,37 @@ _host_indices = jax.jit(
     static_argnums=(4,))
 
 
+def validate_client_data(data: List[Dict[str, np.ndarray]]) -> np.ndarray:
+    """Shared per-client validation for every data plane; returns [K] n_k.
+
+    Every client must carry the same fields, each field the same length
+    within a client, and n_k >= 1 (the keyed minibatch draw is undefined on
+    an empty span).  Host container, packed device plane and streaming
+    shard plane all accept exactly the same corpora because they all call
+    this.
+    """
+    if not data:
+        raise ValueError("empty corpus: need at least one client")
+    counts = np.array([len(next(iter(d.values()))) for d in data], np.int32)
+    names = sorted(data[0])
+    for k, d in enumerate(data):
+        if sorted(d) != names:
+            raise ValueError(f"client {k}: fields {sorted(d)} != {names}")
+        if any(len(a) != counts[k] for a in d.values()):
+            raise ValueError(f"client {k}: ragged field lengths")
+        if counts[k] == 0:
+            raise ValueError(
+                f"client {k} has no samples (n_k = 0): the keyed "
+                f"minibatch draw is undefined on an empty span")
+    return counts
+
+
 class FederatedDataset:
     """data: list over clients of dicts of arrays (first axis = samples),
     e.g. {'x': [n_k,28,28,1], 'y': [n_k]} or {'tokens': [n_k, S]}."""
 
     def __init__(self, data: List[Dict[str, np.ndarray]], seed: int = 0):
-        for k, d in enumerate(data):
-            if len(next(iter(d.values()))) == 0:
-                raise ValueError(
-                    f"client {k} has no samples (n_k = 0): the keyed "
-                    f"minibatch draw is undefined on an empty span")
+        validate_client_data(data)
         self.data = data
         self.seed = seed
 

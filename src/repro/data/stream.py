@@ -1,0 +1,265 @@
+"""Streaming shard-cached federated data plane (Data plane v2).
+
+The device-resident plane (``data/device.py``) pays ``K * n_max * itemsize``
+per field — the whole padded corpus up front.  In the paper's motivating
+setting (mobile crowdsensing, devices "continuously generate a significant
+quantity of data") and at real federated scale (LEAF FEMNIST/Shakespeare with
+thousands of clients, heavily skewed n_k) that ceiling does not fit device
+memory.  This plane keeps the corpus on HOST as per-client shards and holds
+only the shards of *upcoming participants* in a bounded device-side cache:
+
+* ``StreamingFederatedDataset`` — host per-client shards (same field dtypes
+  and the same ``(seed, t, client_id)``-keyed minibatch draws as the other
+  planes), plus the packing metadata (n_max, per-slot bytes) the cache needs;
+* ``ShardCache`` — ``[cache_slots, n_max, ...]`` device arrays per field with
+  LRU eviction over client shards.  Capacity is set in bytes or clients.
+  ``ensure(client_ids)`` uploads the missing shards (one batched scatter per
+  field) and ``view()`` snapshots the cache as a ``CacheView``;
+* ``CacheView`` — a pytree with the exact ``gather_round_batch`` contract of
+  ``DeviceFederatedDataset``, so ``core.multiround.scan_rounds_ondevice``
+  consumes it unchanged: the in-scan gather resolves a participant through a
+  client→slot indirection table and draws ``minibatch_indices`` keyed by the
+  TRUE client id and n_k — bit-equal to host assembly and to the
+  device-resident gather, keeping all four driver paths on one trajectory.
+
+Overlapped H2D prefetch: ``DeviceUniformSampler``'s host path replays the
+device draw, so chunk i+1's participants are known before its compute is
+dispatched.  The streaming driver (``FederatedTrainer.run_streaming``) calls
+``ensure`` for chunk i+1 right after dispatching chunk i: the scatters are
+dispatched asynchronously and the uploads overlap chunk i's scanned compute.
+Updates are functional (``.at[slots].set``), so the arrays captured by chunk
+i's ``CacheView`` are immutable — later uploads and evictions can never
+corrupt an in-flight chunk (double buffering for free).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import ClientPopulation
+from repro.data.federated import (FederatedDataset, minibatch_indices,
+                                  validate_client_data)
+from repro.sharding import rules as sharding_rules
+
+
+class StreamingFederatedDataset:
+    """Host-resident per-client shards + the packing metadata for caching.
+
+    ``data``: list over clients of dicts of arrays (first axis = samples),
+    exactly the ``FederatedDataset`` layout; per-field dtypes preserved.
+    ``seed`` keys the minibatch draws like every other plane.
+    """
+
+    def __init__(self, data: List[Dict[str, np.ndarray]], seed: int = 0):
+        counts = validate_client_data(data)
+        self.data = data
+        self.counts = counts
+        self.seed = seed
+        self.n_max = int(counts.max())
+        self.fields = {
+            name: (np.asarray(data[0][name]).shape[1:],
+                   np.asarray(data[0][name]).dtype)
+            for name in sorted(data[0])
+        }
+
+    @classmethod
+    def from_federated(cls, ds: FederatedDataset) -> "StreamingFederatedDataset":
+        return cls(ds.data, seed=ds.seed)
+
+    # -- inspection -----------------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return len(self.data)
+
+    @property
+    def slot_nbytes(self) -> int:
+        """Device bytes one cached client costs (padded to n_max)."""
+        return sum(self.n_max * int(np.prod(tail, dtype=np.int64))
+                   * np.dtype(dtype).itemsize
+                   for tail, dtype in self.fields.values())
+
+    @property
+    def packed_nbytes(self) -> int:
+        """What the device-RESIDENT plane would pay (the K * n_max ceiling);
+        compare against a cache budget to pick a plane."""
+        return self.n_clients * self.slot_nbytes
+
+    def population(self) -> ClientPopulation:
+        return ClientPopulation(counts=np.asarray(self.counts))
+
+    def base_key(self):
+        return jax.random.PRNGKey(self.seed)
+
+    def padded_shard(self, cid: int, name: str) -> np.ndarray:
+        """Client ``cid``'s field ``name`` padded to [n_max, ...] (host)."""
+        tail, dtype = self.fields[name]
+        out = np.zeros((self.n_max,) + tail, dtype)
+        arr = np.asarray(self.data[cid][name])
+        out[: len(arr)] = arr
+        return out
+
+
+@jax.tree_util.register_pytree_node_class
+class CacheView:
+    """Immutable snapshot of a ``ShardCache`` for one chunk dispatch.
+
+    Same ``gather_round_batch`` contract as ``DeviceFederatedDataset`` (so
+    ``scan_rounds_ondevice`` takes it verbatim), over a compacted
+    ``[cache_slots, n_max, ...]`` corpus: ``client_slots`` ([K] int32, -1
+    when absent) resolves a participant to its cache slot, while the draw
+    stays keyed by the true client id and true n_k — bit-equal to every
+    other plane.
+    """
+
+    def __init__(self, arrays: Dict[str, jax.Array], counts: jax.Array,
+                 client_slots: jax.Array, seed: int = 0):
+        self.arrays = arrays
+        self.counts = counts            # [K] true n_k (not slot-compacted)
+        self.client_slots = client_slots  # [K] int32 client -> slot
+        self.seed = seed
+
+    # -- pytree protocol (jit-arg friendly) -----------------------------
+    def tree_flatten(self):
+        keys = tuple(sorted(self.arrays))
+        children = tuple(self.arrays[k] for k in keys) + (
+            self.counts, self.client_slots)
+        return children, (keys, self.seed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, seed = aux
+        *leaves, counts, client_slots = children
+        return cls(dict(zip(keys, leaves)), counts, client_slots, seed)
+
+    def base_key(self):
+        return jax.random.PRNGKey(self.seed)
+
+    # -- the in-scan gather (fused with sampling by scan_rounds_ondevice)
+    def gather_round_batch(self, key: jax.Array, t, client_ids,
+                           local_steps: int, batch_size: int):
+        """Round ``t``'s ``[C, H, b, ...]`` batch stack, fully traceable.
+
+        Indirection happens only on the DATA fetch (``arrays[name][slot]``);
+        the index draw is ``minibatch_indices(key, t, cid, n_k, need)`` with
+        the true client id — the same numbers every other plane draws.
+        """
+        need = local_steps * batch_size
+
+        def one(cid):
+            slot = self.client_slots[cid]
+            idx = minibatch_indices(key, t, cid, self.counts[cid], need)
+            return {
+                name: a[slot][idx].reshape(
+                    (local_steps, batch_size) + a.shape[2:])
+                for name, a in self.arrays.items()
+            }
+
+        return jax.vmap(one)(jnp.asarray(client_ids))
+
+
+class ShardCache:
+    """Bounded device-side LRU cache of client shards.
+
+    Capacity: ``capacity_clients`` slots, or ``capacity_bytes`` translated
+    through the dataset's per-slot footprint (whichever is tighter when both
+    are given), clamped to [1, K].  ``ensure`` raises when one request needs
+    more distinct clients than there are slots — the caller must shrink
+    ``chunk_rounds`` or grow the cache, never silently thrash.
+
+    Slot updates are functional scatters, so views snapshotted before an
+    ``ensure`` stay valid while it uploads (this is what lets the streaming
+    driver prefetch chunk i+1 during chunk i's compute).
+    """
+
+    def __init__(self, dataset: StreamingFederatedDataset,
+                 capacity_clients: Optional[int] = None,
+                 capacity_bytes: Optional[int] = None):
+        if capacity_clients is None and capacity_bytes is None:
+            raise ValueError(
+                "ShardCache needs capacity_clients or capacity_bytes")
+        slots = dataset.n_clients
+        if capacity_clients is not None:
+            slots = min(slots, int(capacity_clients))
+        if capacity_bytes is not None:
+            slots = min(slots, int(capacity_bytes) // dataset.slot_nbytes)
+        self.slots = max(1, slots)
+        self.dataset = dataset
+        self.arrays = {
+            name: self._put(np.zeros((self.slots, dataset.n_max) + tail,
+                                     dtype))
+            for name, (tail, dtype) in dataset.fields.items()
+        }
+        self._counts_dev = jnp.asarray(dataset.counts)
+        self._slot_of: Dict[int, int] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self.hits = self.misses = self.evictions = 0
+
+    @staticmethod
+    def _put(x: np.ndarray):
+        # slot order is LRU-arbitrary, so the cached corpus is placed by the
+        # 'cache_slots' rule (replicated: a round's slots would otherwise
+        # scatter across data shards)
+        return sharding_rules.put_logical(
+            x, *(("cache_slots",) + (None,) * (x.ndim - 1)))
+
+    # -- inspection -----------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        """Device footprint of the cache (<= dataset.packed_nbytes)."""
+        return sum(int(a.nbytes) for a in self.arrays.values())
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+    def resident(self) -> set:
+        return set(self._slot_of)
+
+    # -- population -----------------------------------------------------
+    def ensure(self, client_ids) -> None:
+        """Make every client in ``client_ids`` resident (LRU eviction, one
+        batched async scatter per field for the missing shards)."""
+        need = list(OrderedDict((int(c), None) for c in client_ids))
+        distinct = set(need)
+        if len(distinct) > self.slots:
+            raise ValueError(
+                f"chunk needs {len(distinct)} distinct clients but the "
+                f"shard cache has {self.slots} slots; lower chunk_rounds or "
+                f"raise the cache capacity")
+        fresh = [cid for cid in need if cid not in self._slot_of]
+        self.hits += len(need) - len(fresh)
+        self.misses += len(fresh)
+        assigned = []
+        for cid in fresh:
+            if len(self._slot_of) < self.slots:
+                slot = len(self._slot_of)
+            else:
+                victim = next(c for c in self._lru if c not in distinct)
+                slot = self._slot_of.pop(victim)
+                del self._lru[victim]
+                self.evictions += 1
+            self._slot_of[cid] = slot
+            assigned.append(slot)
+        for cid in need:                     # refresh recency, oldest first
+            self._lru[cid] = None
+            self._lru.move_to_end(cid)
+        if not fresh:
+            return
+        idx = jnp.asarray(np.asarray(assigned, np.int32))
+        for name in self.arrays:
+            stacked = np.stack(
+                [self.dataset.padded_shard(cid, name) for cid in fresh])
+            self.arrays[name] = self.arrays[name].at[idx].set(
+                self._put(stacked))
+
+    def view(self) -> CacheView:
+        """Snapshot the cache for one chunk dispatch (see class docstring)."""
+        client_slots = np.full(self.dataset.n_clients, -1, np.int32)
+        for cid, slot in self._slot_of.items():
+            client_slots[cid] = slot
+        return CacheView(dict(self.arrays), self._counts_dev,
+                         jnp.asarray(client_slots), self.dataset.seed)

@@ -5,8 +5,9 @@ checkpointing, logging) with the jitted round engine.  Used by the examples
 and the paper-reproduction benchmarks; the same driver scales from the
 paper's LeNet to the assigned-architecture reduced configs.
 
-Three execution tiers over the SAME algorithm (trajectory-equivalent, see
-tests/test_multiround.py and tests/test_device_data.py):
+Four execution tiers over the SAME algorithm (trajectory-equivalent, see
+tests/test_multiround.py, tests/test_device_data.py and
+tests/test_stream_data.py on the shared tests/_trajectory.py harness):
 
 * ``run(n_rounds)`` — round-engine v1: one jitted ``round_step`` per round,
   host Python between rounds.  Simple, observable, and the right tool when
@@ -24,12 +25,27 @@ tests/test_multiround.py and tests/test_device_data.py):
   minibatch gather fused into the scan, zero host round-trips per chunk.
   Per-chunk work on the host is O(chunk) scalars (round ids, lrs, step
   masks), never data.  Draws are keyed by ``(seed, t, client_id)`` on both
-  planes, so all three tiers stay on one trajectory.
+  planes, so all tiers stay on one trajectory.
+* ``run_streaming(n_rounds, chunk_rounds=C, cache_bytes=...)`` — data plane
+  v2: the corpus stays on HOST as per-client shards and a bounded
+  device-side LRU ``ShardCache`` holds only upcoming participants' shards
+  (``data/stream.py``).  Each chunk runs the same fused
+  ``scan_rounds_ondevice`` over a compacted ``[cache_slots, n_max, ...]``
+  view with a client→slot indirection table; because the keyed sampler
+  replays on host, chunk i+1's shard uploads are dispatched right after
+  chunk i's compute and overlap it (double-buffered staging).  The plane for
+  corpora whose packed ``nbytes`` exceed device memory.
 
 Checkpointing in every tier goes through ``checkpoint.AsyncCheckpointWriter``:
 the device-to-host copy and npz write run on a background thread (flushed
 before ``run_*`` returns), keeping the save off the critical path while
 preserving tmp+rename atomicity.
+
+Resuming: every ``run_*`` takes ``resume=True`` — ``checkpoint.latest_round``
++ ``restore_state`` pick the trajectory up at the round after the last
+durable save.  Because sampling and minibatch draws are keyed by round (never
+by sequential RNG state), a resumed run is bit-equal to the uninterrupted one
+(tests/test_stream_data.py certifies it per driver).
 
 Heterogeneous local work (stragglers / partial work): set
 ``hetero_steps_fn(t) -> [C] ints`` and each round's clients run only their
@@ -59,13 +75,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import AsyncCheckpointWriter, append_metrics
+from repro.checkpoint import (AsyncCheckpointWriter, append_metrics,
+                              latest_round, prune_metrics, restore_state)
 from repro.core import RoundConfig, round_step, scan_rounds
 from repro.core.multiround import scan_rounds_ondevice
-from repro.core.sampling import UniformSampler
+from repro.core.sampling import UniformSampler, participants_in_span
 from repro.core.server_opt import ServerOpt, ServerState
 from repro.data.device import DeviceFederatedDataset
 from repro.data.federated import FederatedDataset
+from repro.data.stream import ShardCache, StreamingFederatedDataset
 
 
 @dataclass
@@ -90,6 +108,8 @@ class FederatedTrainer:
     _scan_chunk_masked: Optional[Callable] = None
     _device_chunks: dict = field(default_factory=dict)
     _device_ds: Optional[DeviceFederatedDataset] = None
+    _stream_ds: Optional[StreamingFederatedDataset] = None
+    stream_cache: Optional[ShardCache] = None  # last run_streaming's cache
 
     def __post_init__(self):
         rcfg, axes = self.rcfg, self.param_axes
@@ -177,6 +197,35 @@ class FederatedTrainer:
         masks = None if ms[0] is None else np.stack(ms)
         return np.asarray(lrs, np.float32), masks
 
+    def _resume_round(self, resume: bool) -> int:
+        """First round this run should execute: 0 normally; with
+        ``resume=True``, restore the latest durable checkpoint and continue
+        at the round after it.  Keyed sampling/minibatch draws make the
+        continued trajectory bit-equal to an uninterrupted one — which is
+        why a stateful host sampler (sequential numpy RNG that would
+        restart at its seed) is rejected here.  An absent or unreadable
+        checkpoint (``latest_round`` == -1) means a fresh start, not an
+        error — first launch and resume-after-crash share one code path.
+        The metrics jsonl is rewound to the restored round so the re-run
+        rounds are not double-logged."""
+        if not resume:
+            return 0
+        if not self.ckpt_path:
+            raise ValueError("resume=True needs ckpt_path")
+        if not hasattr(self.sampler, "base_key"):
+            raise ValueError(
+                "resume=True needs a keyed Device* sampler (host replay of "
+                "the (seed, t)-keyed device draw): a stateful sampler's RNG "
+                "stream restarts at its seed, so resumed rounds would "
+                "silently replay round-0 client sets")
+        t_ck = latest_round(self.ckpt_path)
+        if t_ck < 0:
+            return 0
+        self.state, _ = restore_state(self.ckpt_path, self.state)
+        if self.metrics_path:
+            prune_metrics(self.metrics_path, t_ck)
+        return t_ck + 1
+
     @contextlib.contextmanager
     def _writer(self):
         """Async checkpoint writer scoped to one run_* call: joined and
@@ -197,11 +246,13 @@ class FederatedTrainer:
     # v1: one dispatch per round
     # ------------------------------------------------------------------
     def run(self, n_rounds: int, log_every: int = 50,
-            eval_fn: Optional[Callable] = None, verbose: bool = True):
+            eval_fn: Optional[Callable] = None, verbose: bool = True,
+            resume: bool = False):
         self._check_client_extent()
+        t0 = self._resume_round(resume)
         t_start = time.time()
         with self._writer() as writer:
-            for t in range(n_rounds):
+            for t in range(t0, n_rounds):
                 batches, weights, lr_t, mask = self._round_inputs(t)
                 batches = jax.tree.map(jnp.asarray, batches)
                 if mask is None:
@@ -235,7 +286,7 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
     def run_scanned(self, n_rounds: int, chunk_rounds: int = 25,
                     prefetch: int = 2, eval_fn: Optional[Callable] = None,
-                    verbose: bool = True):
+                    verbose: bool = True, resume: bool = False):
         """Round-engine v2 (see module docstring).
 
         ``chunk_rounds`` trades checkpoint/metrics granularity against
@@ -249,8 +300,9 @@ class FederatedTrainer:
         a ``log_every`` grid.  The *training* trajectory is unaffected.
         """
         self._check_client_extent()
+        t0 = self._resume_round(resume)
         spans = [(s, min(s + chunk_rounds, n_rounds))
-                 for s in range(0, n_rounds, chunk_rounds)]
+                 for s in range(t0, n_rounds, chunk_rounds)]
         q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
         failure: list = []
         stop = threading.Event()
@@ -319,7 +371,11 @@ class FederatedTrainer:
 
     def _device_chunk_fn(self, n_rounds: int, masked: bool):
         """Jitted fused chunk, cached per (R, masked, b) — the ragged last
-        chunk is its own compile, like the v2 driver."""
+        chunk is its own compile, like the v2 driver.  Shared by
+        ``run_device`` and ``run_streaming``: ``dds`` is any
+        gather-contract pytree (jit keys on argument structure, so the
+        packed dataset and a streaming ``CacheView`` each get their own
+        trace under one wrapper)."""
         cache_key = (n_rounds, masked, self.local_batch_size())
         fn = self._device_chunks.get(cache_key)
         if fn is not None:
@@ -344,8 +400,50 @@ class FederatedTrainer:
         self._device_chunks[cache_key] = fn
         return fn
 
+    def _sample_key(self):
+        return (self.sampler.base_key()
+                if hasattr(self.sampler, "base_key")
+                else jax.random.PRNGKey(self.sampler.seed))
+
+    def _run_fused_chunks(self, spans, n_rounds, view, data_key,
+                          prepare, upload, prefetch, eval_fn, verbose):
+        """The chunk loop shared by the fused on-device tiers (``run_device``
+        and ``run_streaming``): per-chunk knobs, one dispatch, shared
+        bookkeeping.  ``view`` is the gather-contract pytree for the first
+        span; with staging hooks, ``prepare(i)`` does the host-side lookahead
+        for span i (called BEFORE span i-1's dispatch, so its eager replay
+        ops never queue behind the in-flight chunk) and ``upload(prepared)``
+        makes span i's data resident and returns its view — dispatched right
+        after the chunk when ``prefetch`` (overlapping its compute), after
+        the metrics sync otherwise."""
+        sample_key = self._sample_key()
+        t_start = time.time()
+        with self._writer() as writer:
+            for i, (s, e) in enumerate(spans):
+                lrs, masks = self._chunk_knobs(s, e)
+                fn = self._device_chunk_fn(e - s, masks is not None)
+                nxt = (prepare(i + 1)
+                       if prepare and i + 1 < len(spans) else None)
+                args = (self.state, view, sample_key, data_key,
+                        jnp.int32(s), jnp.asarray(lrs))
+                if masks is not None:
+                    args += (jnp.asarray(masks),)
+                self.state, metrics = fn(*args)       # async dispatch
+                if nxt is not None and prefetch:
+                    # double-buffered staging: span i+1's H2D scatters are
+                    # dispatched now and overlap chunk i's scanned compute;
+                    # chunk i's view snapshot stays valid (functional
+                    # updates never touch captured arrays)
+                    view = upload(nxt)
+                self._finish_chunk(s, e, n_rounds, metrics, eval_fn,
+                                   verbose, writer, t_start)  # metrics sync
+                if nxt is not None and not prefetch:
+                    view = upload(nxt)                # serialized upload
+        return self.history
+
     def run_device(self, n_rounds: int, chunk_rounds: int = 25,
-                   eval_fn: Optional[Callable] = None, verbose: bool = True):
+                   eval_fn: Optional[Callable] = None, verbose: bool = True,
+                   resume: bool = False):
         """Data plane v1: sampling + minibatch gather + round steps fused in
         one scan per chunk (see module docstring).  Requires a sampler with
         a traceable ``sample_device`` (``DeviceUniformSampler`` /
@@ -357,26 +455,77 @@ class FederatedTrainer:
                 "run_device needs a sampler with a traceable sample_device "
                 "(e.g. DeviceUniformSampler)")
         self._check_client_extent()
+        t0 = self._resume_round(resume)
         dds = self.device_dataset()
-        sample_key = (self.sampler.base_key()
-                      if hasattr(self.sampler, "base_key")
-                      else jax.random.PRNGKey(self.sampler.seed))
-        data_key = dds.base_key()
         spans = [(s, min(s + chunk_rounds, n_rounds))
-                 for s in range(0, n_rounds, chunk_rounds)]
-        t_start = time.time()
-        with self._writer() as writer:
-            for s, e in spans:
-                lrs, masks = self._chunk_knobs(s, e)
-                fn = self._device_chunk_fn(e - s, masks is not None)
-                args = (self.state, dds, sample_key, data_key, jnp.int32(s),
-                        jnp.asarray(lrs))
-                if masks is not None:
-                    args += (jnp.asarray(masks),)
-                self.state, metrics = fn(*args)
-                self._finish_chunk(s, e, n_rounds, metrics, eval_fn,
-                                   verbose, writer, t_start)
-        return self.history
+                 for s in range(t0, n_rounds, chunk_rounds)]
+        return self._run_fused_chunks(
+            spans, n_rounds, dds, dds.base_key(), prepare=None, upload=None,
+            prefetch=True, eval_fn=eval_fn, verbose=verbose)
+
+    # ------------------------------------------------------------------
+    # v4: streaming shard-cached data plane (corpus larger than device)
+    # ------------------------------------------------------------------
+    def streaming_dataset(self) -> StreamingFederatedDataset:
+        """The host-resident shard set (built once, cached).  Costs no
+        device memory by itself; ``packed_nbytes`` reports what the
+        device-RESIDENT plane would pay — the plane-choice comparison."""
+        if self._stream_ds is None:
+            if isinstance(self.dataset, StreamingFederatedDataset):
+                self._stream_ds = self.dataset
+            else:
+                self._stream_ds = StreamingFederatedDataset.from_federated(
+                    self.dataset)
+        return self._stream_ds
+
+    def run_streaming(self, n_rounds: int, chunk_rounds: int = 25,
+                      cache_clients: Optional[int] = None,
+                      cache_bytes: Optional[int] = None,
+                      prefetch: bool = True,
+                      eval_fn: Optional[Callable] = None,
+                      verbose: bool = True, resume: bool = False):
+        """Data plane v2 (see module docstring): the fused on-device scan of
+        ``run_device`` over a bounded ``ShardCache`` instead of the fully
+        packed corpus.  Capacity comes from ``cache_clients`` and/or
+        ``cache_bytes`` (default: one chunk's worst-case working set,
+        ``lowered_clients * chunk_rounds`` slots).  Participants of chunk
+        i+1 are known from the keyed host replay, so their shard uploads are
+        dispatched right after chunk i's compute and overlap it
+        (``prefetch=False`` degrades to upload-then-compute, for A/B
+        timing).  Requires a ``Device*`` sampler, like ``run_device``.  The
+        cache is rebuilt per call and left on ``self.stream_cache`` so
+        callers can read hit/miss/eviction stats.
+        """
+        if not (hasattr(self.sampler, "sample_device")
+                and hasattr(self.sampler, "base_key")):
+            raise ValueError(
+                "run_streaming needs a keyed Device* sampler: a traceable "
+                "sample_device AND a host sample that replays the keyed "
+                "draw (base_key, e.g. DeviceUniformSampler) — the cache is "
+                "populated from the host replay, so a stateful sampler "
+                "would stage different clients than the in-scan draw uses")
+        self._check_client_extent()
+        t0 = self._resume_round(resume)
+        sds = self.streaming_dataset()
+        if cache_clients is None and cache_bytes is None:
+            cache_clients = self.rcfg.clients_per_round * chunk_rounds
+        cache = ShardCache(sds, capacity_clients=cache_clients,
+                           capacity_bytes=cache_bytes)
+        self.stream_cache = cache
+        spans = [(s, min(s + chunk_rounds, n_rounds))
+                 for s in range(t0, n_rounds, chunk_rounds)]
+
+        def prepare(i):
+            return participants_in_span(self.sampler, *spans[i])
+
+        def upload(parts):
+            cache.ensure(parts)
+            return cache.view()
+
+        view = upload(prepare(0)) if spans else None
+        return self._run_fused_chunks(
+            spans, n_rounds, view, sds.base_key(), prepare, upload,
+            prefetch, eval_fn=eval_fn, verbose=verbose)
 
     # ------------------------------------------------------------------
     # shared per-chunk bookkeeping (metrics sync, logging, checkpoints)

@@ -49,6 +49,10 @@ FED_MESH_RULES: AxisRules = {
     "conv": None,
     "layers": None,
     "lora": None,
+    # streaming shard cache: slot order is LRU-arbitrary (a round's clients
+    # land in unrelated slots), so the cached corpus stays replicated — the
+    # in-scan gather would otherwise cross data shards every round
+    "cache_slots": None,
     # server master/momentum state: ZeRO-shard the embed dim over data
     "opt_embed": _DP,
 }
@@ -141,6 +145,19 @@ def logical_sharding(axes: Sequence[Optional[str]], rules: AxisRules,
                      mesh: Mesh,
                      shape: Optional[Sequence[int]] = None) -> NamedSharding:
     return NamedSharding(mesh, logical_spec(axes, rules, mesh, shape))
+
+
+def put_logical(x, *axes: Optional[str]):
+    """``device_put`` with the logical-axes sharding when a mesh + rules
+    context is active; plain ``jnp.asarray`` otherwise.  The data planes use
+    it to place host buffers (packed corpora, cache shards) without naming
+    mesh axes."""
+    import jax.numpy as jnp
+
+    if _ctx.mesh is None or _ctx.rules is None:
+        return jnp.asarray(x)
+    return jax.device_put(
+        x, logical_sharding(axes, _ctx.rules, _ctx.mesh, x.shape))
 
 
 def shard(x, *axes: Optional[str]):

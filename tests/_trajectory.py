@@ -1,0 +1,146 @@
+"""Shared trajectory-equivalence harness.
+
+Every driver tier (per-round ``run``, prefetch-queue ``run_scanned``,
+device-resident ``run_device``, shard-cached streaming ``run_streaming``)
+must train the SAME model: sampling and minibatch draws are keyed by
+``(seed, t, client_id)``, so the trajectory is a function of the config
+alone, never of which engine executes it or whether the run was interrupted.
+This module is the single place that contract is exercised:
+
+    hist, state = run_trajectory("streaming", opt, rcfg, clients, 15)
+    assert_same_trajectory((hist, state), (hist_ref, state_ref))
+
+``run_trajectory`` builds a fresh trainer (so jit caches and RNG state never
+leak between configs), runs ``n_rounds`` under the named driver, and returns
+``(history, final_state)``.  With ``resume_at=t`` it runs two *separate*
+trainers — the first checkpoints every round and stops at ``t``, the second
+restores with ``resume=True`` and finishes — returning the stitched history;
+comparing against the uninterrupted run certifies resume bit-equality.
+
+test_multiround.py / test_device_data.py / test_stream_data.py parametrize
+their equivalence matrices over DRIVERS and the configs here.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DeviceDiurnalSampler, DeviceUniformSampler, RoundConfig
+from repro.data import FederatedDataset
+from repro.launch.train import FederatedTrainer
+
+DRIVERS = ("per-round", "scanned", "device", "streaming")
+
+
+def linreg_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean(jnp.square(pred - batch["y"])), {}
+
+
+def make_clients(seed=0, n=6, d=5, lo=20, hi=40):
+    """Unbalanced linear-regression clients (n_k ~ U[lo, hi))."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        m = int(rng.integers(lo, hi))
+        x = rng.normal(size=(m, d)).astype(np.float32)
+        y = (x @ np.arange(1, d + 1) / d
+             + 0.1 * rng.normal(size=m)).astype(np.float32)
+        out.append({"x": x, "y": y})
+    return out
+
+
+def linreg_params(d=5):
+    return {"w": jnp.zeros(d), "b": jnp.zeros(())}
+
+
+def flat_w(state):
+    return np.concatenate(
+        [np.ravel(np.asarray(x)) for x in jax.tree.leaves(state.w)])
+
+
+def make_trainer(opt, rcfg, clients, sampler_fn=None, hetero_fn=None,
+                 local_batch=4, **kw):
+    """Fresh trainer over fresh dataset/sampler (ds seed 1, sampler seed 2,
+    M = rcfg.clients_per_round by default)."""
+    ds = FederatedDataset([dict(c) for c in clients], seed=1)
+    sampler = (sampler_fn(ds.population()) if sampler_fn
+               else DeviceUniformSampler(ds.population(),
+                                         rcfg.clients_per_round, seed=2))
+    return FederatedTrainer(
+        loss_fn=linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
+        sampler=sampler, state=opt.init(linreg_params()),
+        hetero_steps_fn=hetero_fn, **kw).set_local_batch(local_batch)
+
+
+def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
+    """Dispatch ``n_rounds`` to the named driver tier with quiet defaults."""
+    if driver == "per-round":
+        return tr.run(n_rounds, verbose=False, **kw)
+    if driver == "scanned":
+        return tr.run_scanned(n_rounds, chunk_rounds=chunk_rounds,
+                              verbose=False, **kw)
+    if driver == "device":
+        return tr.run_device(n_rounds, chunk_rounds=chunk_rounds,
+                             verbose=False, **kw)
+    if driver == "streaming":
+        kw.setdefault("cache_clients", None)  # trainer default: chunk set
+        return tr.run_streaming(n_rounds, chunk_rounds=chunk_rounds,
+                                verbose=False, **kw)
+    raise ValueError(f"unknown driver {driver!r} (want one of {DRIVERS})")
+
+
+def run_trajectory(driver, opt, rcfg, clients, n_rounds, *,
+                   sampler_fn=None, hetero_fn=None, chunk_rounds=8,
+                   local_batch=4, resume_at=None, tmp_path=None, **driver_kw):
+    """Run ``n_rounds`` under ``driver``; returns (history, final_state).
+
+    ``resume_at``: interrupt after that many rounds and finish in a FRESH
+    trainer via ``resume=True`` (needs ``tmp_path``; ckpt_every=1 so the
+    interruption point is always durable).  The stitched history covers all
+    ``n_rounds``.
+    """
+    def mk(**extra):
+        return make_trainer(opt, rcfg, clients, sampler_fn=sampler_fn,
+                            hetero_fn=hetero_fn, local_batch=local_batch,
+                            **extra)
+
+    if resume_at is None:
+        tr = mk()
+        hist = run_driver(tr, driver, n_rounds, chunk_rounds, **driver_kw)
+        return hist, tr.state
+    assert tmp_path is not None, "resume_at needs tmp_path"
+    ck = os.path.join(str(tmp_path), f"{driver}-resume.npz")
+    first = mk(ckpt_path=ck, ckpt_every=1)
+    h1 = run_driver(first, driver, resume_at, chunk_rounds, **driver_kw)
+    second = mk(ckpt_path=ck, ckpt_every=1)
+    h2 = run_driver(second, driver, n_rounds, chunk_rounds, resume=True,
+                    **driver_kw)
+    return list(h1) + list(h2), second.state
+
+
+def assert_same_trajectory(got, want, atol=1e-6):
+    """(history, state) pairs trained the same model: allclose final params
+    and per-round loss/delta_norm streams, equal round ids."""
+    hist_a, state_a = got
+    hist_b, state_b = want
+    np.testing.assert_allclose(flat_w(state_a), flat_w(state_b), atol=atol)
+    assert [r["round"] for r in hist_a] == [r["round"] for r in hist_b]
+    for key in ("loss", "delta_norm"):
+        np.testing.assert_allclose([r[key] for r in hist_a],
+                                   [r[key] for r in hist_b], atol=atol)
+
+
+def default_rcfg(clients_per_round=3, local_steps=4, placement="mesh",
+                 lr=0.05):
+    return RoundConfig(clients_per_round=clients_per_round,
+                       local_steps=local_steps, lr=lr, placement=placement,
+                       compute_dtype="float32")
+
+
+def diurnal_sampler_fn(m_min=2, m_max=5, period=7, seed=3):
+    def fn(pop):
+        return DeviceDiurnalSampler(pop, m_min=m_min, m_max=m_max,
+                                    period=period, seed=seed)
+    return fn

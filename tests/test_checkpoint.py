@@ -1,10 +1,14 @@
+import os
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import restore_state, save_state
-from repro.core import fedmom
+from repro.checkpoint import (AsyncCheckpointWriter, latest_round,
+                              restore_state, save_state)
+from repro.core import fedavg, fedmom
 
 
 def test_roundtrip(tmp_path):
@@ -60,3 +64,134 @@ def test_training_resumes_identically(tmp_path):
     b = rounds(restored, 3, seed=2)
     for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# latest_round robustness (resume probes must never crash on a bad file)
+# ---------------------------------------------------------------------------
+def test_latest_round_absent_file(tmp_path):
+    assert latest_round(str(tmp_path / "nope.npz")) == -1
+
+
+def test_latest_round_garbage_file(tmp_path):
+    path = tmp_path / "garbage.npz"
+    path.write_bytes(b"this is not a zip archive")
+    assert latest_round(str(path)) == -1
+
+
+def test_latest_round_truncated_archive(tmp_path):
+    """An interrupted write (partial zip) means "no usable checkpoint"."""
+    opt = fedmom()
+    state = opt.init({"a": jnp.arange(64.0)})
+    path = tmp_path / "ck.npz"
+    save_state(str(path), state, {"round": 3})
+    assert latest_round(str(path)) == 3
+    blob = path.read_bytes()
+    path.write_bytes(blob[: len(blob) // 2])
+    assert latest_round(str(path)) == -1
+
+
+def test_latest_round_empty_file(tmp_path):
+    path = tmp_path / "empty.npz"
+    path.touch()
+    assert latest_round(str(path)) == -1
+
+
+def test_restore_state_stays_strict_on_corrupt_file(tmp_path):
+    """Probing may degrade gracefully; actually LOADING must fail loudly."""
+    path = tmp_path / "bad.npz"
+    path.write_bytes(b"nope")
+    opt = fedmom()
+    with pytest.raises(Exception):
+        restore_state(str(path), opt.init({"a": jnp.ones(3)}))
+
+
+# ---------------------------------------------------------------------------
+# save_state atomicity / tmp hygiene
+# ---------------------------------------------------------------------------
+def test_save_state_leaves_only_target(tmp_path):
+    opt = fedavg()
+    path = tmp_path / "ck.npz"
+    save_state(str(path), opt.init({"w": jnp.ones(4)}), {"round": 1})
+    assert sorted(os.listdir(tmp_path)) == ["ck.npz"]
+
+
+def test_save_state_failure_leaves_no_stray_tmp(tmp_path, monkeypatch):
+    """A failing np.savez must not strand its partial ``tmp + '.npz'``
+    (the stray-file bug): the directory is clean after the raise."""
+    import repro.checkpoint.io as io
+
+    def bad_savez(file, **kw):
+        with open(str(file) + ".npz", "wb") as f:
+            f.write(b"partial write")
+        raise OSError("disk full")
+
+    monkeypatch.setattr(io.np, "savez", bad_savez)
+    opt = fedavg()
+    with pytest.raises(OSError, match="disk full"):
+        save_state(str(tmp_path / "ck.npz"), opt.init({"w": jnp.ones(2)}))
+    assert os.listdir(tmp_path) == []
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointWriter failure re-raise (submit and close paths)
+# ---------------------------------------------------------------------------
+def test_async_writer_failure_reraises_on_close(tmp_path):
+    target = tmp_path / "isdir.npz"
+    target.mkdir()                       # os.replace onto a dir must fail
+    writer = AsyncCheckpointWriter()
+    writer.submit(str(target), fedavg().init({"w": jnp.ones(3)}))
+    with pytest.raises(OSError):
+        writer.close()
+
+
+def test_async_writer_failure_reraises_on_submit(tmp_path):
+    target = tmp_path / "isdir.npz"
+    target.mkdir()
+    writer = AsyncCheckpointWriter()
+    state = fedavg().init({"w": jnp.ones(3)})
+    writer.submit(str(target), state)
+    try:
+        with pytest.raises(OSError):
+            for _ in range(100):         # poll until the background write
+                time.sleep(0.05)         # lands and the failure surfaces
+                writer.submit(str(target), state)
+            raise AssertionError("writer failure never surfaced")
+    finally:
+        writer.close(raise_failure=False)
+
+
+def test_async_writer_close_can_suppress_on_unwind(tmp_path):
+    """raise_failure=False: retiring the writer during an in-flight
+    exception must not mask the primary error."""
+    target = tmp_path / "isdir.npz"
+    target.mkdir()
+    writer = AsyncCheckpointWriter()
+    writer.submit(str(target), fedavg().init({"w": jnp.ones(3)}))
+    writer.close(raise_failure=False)    # swallows the stored failure
+
+
+def test_prune_metrics_drops_rewound_and_truncated_lines(tmp_path):
+    """The resume rewind must survive exactly the crash it exists for: a
+    partial trailing jsonl line is dropped, not fatal."""
+    from repro.checkpoint import append_metrics, prune_metrics
+    path = str(tmp_path / "m.jsonl")
+    append_metrics(path, [{"round": t, "loss": float(t)} for t in range(5)])
+    with open(path, "a") as f:
+        f.write('{"round": 5, "lo')       # killed mid-append
+    prune_metrics(path, 3)
+    import json
+    with open(path) as f:
+        recs = [json.loads(line) for line in f]
+    assert [r["round"] for r in recs] == [0, 1, 2, 3]
+
+
+def test_prune_metrics_noop_cases(tmp_path):
+    from repro.checkpoint import append_metrics, prune_metrics
+    path = str(tmp_path / "m.jsonl")
+    prune_metrics(path, 10)               # absent file: no-op
+    assert not (tmp_path / "m.jsonl").exists()
+    append_metrics(path, [{"round": 0}, {"round": 1}])
+    prune_metrics(path, 5)                # nothing beyond max_round
+    with open(path) as f:
+        assert len(f.readlines()) == 2

@@ -1,7 +1,7 @@
 """Data plane v1 certification: corpus packing (padding, counts, dtypes),
 bit-equality of the in-scan minibatch gather with the host keyed assembly,
-trajectory equivalence of all three driver tiers (incl. diurnal M(t) and
-heterogeneous H_k), and the async checkpoint writer."""
+trajectory equivalence of the device-resident tier (via the shared
+tests/_trajectory.py harness), and the async checkpoint writer."""
 import os
 
 import jax
@@ -9,58 +9,25 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (
-    DeviceDiurnalSampler,
-    DeviceUniformSampler,
-    RoundConfig,
-    fedavg,
-    fedmom,
+from _trajectory import (
+    assert_same_trajectory,
+    default_rcfg,
+    diurnal_sampler_fn,
+    flat_w,
+    make_clients,
+    make_trainer,
+    run_trajectory,
 )
+from repro.core import fedavg, fedmom
 from repro.data import DeviceFederatedDataset, FederatedDataset
 from repro.launch.train import FederatedTrainer
-
-
-def linreg_loss(params, batch):
-    pred = batch["x"] @ params["w"] + params["b"]
-    return jnp.mean(jnp.square(pred - batch["y"])), {}
-
-
-def _clients(seed=0, n=6, d=5, lo=20, hi=40):
-    rng = np.random.default_rng(seed)
-    out = []
-    for _ in range(n):
-        m = int(rng.integers(lo, hi))
-        x = rng.normal(size=(m, d)).astype(np.float32)
-        y = (x @ np.arange(1, d + 1) / d
-             + 0.1 * rng.normal(size=m)).astype(np.float32)
-        out.append({"x": x, "y": y})
-    return out
-
-
-def _params(d=5):
-    return {"w": jnp.zeros(d), "b": jnp.zeros(())}
-
-
-def _trainer(opt, rcfg, clients, sampler=None, hetero_fn=None, **kw):
-    ds = FederatedDataset([dict(c) for c in clients], seed=1)
-    if sampler is None:
-        sampler = DeviceUniformSampler(ds.population(), 3, seed=2)
-    return FederatedTrainer(
-        loss_fn=linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
-        sampler=sampler, state=opt.init(_params()),
-        hetero_steps_fn=hetero_fn, **kw).set_local_batch(4)
-
-
-def _flat_w(state):
-    return np.concatenate(
-        [np.ravel(np.asarray(x)) for x in jax.tree.leaves(state.w)])
 
 
 # ---------------------------------------------------------------------------
 # packing
 # ---------------------------------------------------------------------------
 def test_pack_shapes_counts_and_padding():
-    clients = _clients(seed=3)
+    clients = make_clients(seed=3)
     counts = np.array([len(c["x"]) for c in clients])
     dds = DeviceFederatedDataset.pack(clients, seed=1)
     K, n_max = len(clients), counts.max()
@@ -77,7 +44,7 @@ def test_pack_shapes_counts_and_padding():
 
 def test_pack_boundary_client_at_n_max():
     """A client with n_k == n_max has no padding and round-trips exactly."""
-    clients = _clients(seed=5, n=4)
+    clients = make_clients(seed=5, n=4)
     counts = [len(c["x"]) for c in clients]
     k_max = int(np.argmax(counts))
     dds = DeviceFederatedDataset.pack(clients, seed=0)
@@ -110,7 +77,8 @@ def test_pack_rejects_ragged_fields():
 # host/device gather equivalence (the bit-replay contract)
 # ---------------------------------------------------------------------------
 def test_gather_round_batch_bit_equals_host_assembly():
-    clients = _clients(seed=7)
+    from repro.core import DeviceUniformSampler
+    clients = make_clients(seed=7)
     ds = FederatedDataset([dict(c) for c in clients], seed=1)
     dds = DeviceFederatedDataset.from_federated(ds)
     sampler = DeviceUniformSampler(ds.population(), 3, seed=2)
@@ -148,7 +116,7 @@ def test_round_batches_keyed_draws_are_call_order_independent():
     """The reproducibility fix: round t's batches depend only on
     (seed, t, client_id), not on how many draws happened before (the
     prefetch queue and checkpoint resume both rely on this)."""
-    clients = _clients(seed=17)
+    clients = make_clients(seed=17)
     a = FederatedDataset([dict(c) for c in clients], seed=9)
     b = FederatedDataset([dict(c) for c in clients], seed=9)
     ids = [0, 2, 4]
@@ -162,97 +130,73 @@ def test_round_batches_keyed_draws_are_call_order_independent():
 
 
 # ---------------------------------------------------------------------------
-# three-tier trajectory equivalence
+# trajectory equivalence (shared harness; the 4-way matrix incl. the
+# streaming plane lives in tests/test_stream_data.py)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("opt_fn", [fedavg, fedmom])
 def test_run_device_matches_run_and_run_scanned(opt_fn):
     """21 rounds (ragged last chunk), FedAvg and FedMom: v1 == v2 == v3."""
-    clients = _clients(seed=21)
-    rcfg = RoundConfig(clients_per_round=3, local_steps=4, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
+    clients = make_clients(seed=21)
+    rcfg = default_rcfg()
     opt = opt_fn()
-    tr1 = _trainer(opt, rcfg, clients)
-    tr2 = _trainer(opt, rcfg, clients)
-    tr3 = _trainer(opt, rcfg, clients)
-    h1 = tr1.run(21, verbose=False)
-    h2 = tr2.run_scanned(21, chunk_rounds=8, verbose=False)
-    h3 = tr3.run_device(21, chunk_rounds=8, verbose=False)
-    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr3.state),
-                               atol=1e-6)
-    np.testing.assert_allclose(_flat_w(tr2.state), _flat_w(tr3.state),
-                               atol=1e-6)
-    assert len(h3) == 21
-    np.testing.assert_allclose([r["loss"] for r in h1],
-                               [r["loss"] for r in h3], atol=1e-6)
-    np.testing.assert_allclose([r["delta_norm"] for r in h1],
-                               [r["delta_norm"] for r in h3], atol=1e-6)
-    assert int(tr3.state.t) == 21
+    ref = run_trajectory("per-round", opt, rcfg, clients, 21)
+    scanned = run_trajectory("scanned", opt, rcfg, clients, 21,
+                             chunk_rounds=8)
+    device = run_trajectory("device", opt, rcfg, clients, 21,
+                            chunk_rounds=8)
+    assert_same_trajectory(device, ref)
+    assert_same_trajectory(device, scanned)
+    assert len(device[0]) == 21
+    assert int(device[1].t) == 21
 
 
 def test_run_device_scan_placement_matches():
-    clients = _clients(seed=31)
-    rcfg = RoundConfig(clients_per_round=3, local_steps=3, lr=0.05,
-                       placement="scan", compute_dtype="float32")
+    clients = make_clients(seed=31)
+    rcfg = default_rcfg(local_steps=3, placement="scan")
     opt = fedmom()
-    tr1 = _trainer(opt, rcfg, clients)
-    tr2 = _trainer(opt, rcfg, clients)
-    tr1.run(10, verbose=False)
-    tr2.run_device(10, chunk_rounds=4, verbose=False)
-    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr2.state),
-                               atol=1e-6)
+    ref = run_trajectory("per-round", opt, rcfg, clients, 10)
+    got = run_trajectory("device", opt, rcfg, clients, 10, chunk_rounds=4)
+    np.testing.assert_allclose(flat_w(got[1]), flat_w(ref[1]), atol=1e-6)
 
 
 def test_diurnal_sampler_wired_through_all_drivers():
     """Time-varying M(t) via padded-C + zero-weight tail: run, run_scanned
     and run_device stay on one trajectory (the ROADMAP wiring item)."""
-    clients = _clients(seed=23, n=8)
-    ds = FederatedDataset(clients, seed=1)
-    m_max = 5
-    rcfg = RoundConfig(clients_per_round=m_max, local_steps=3, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
+    clients = make_clients(seed=23, n=8)
+    rcfg = default_rcfg(clients_per_round=5, local_steps=3)
     opt = fedmom()
-
-    def mk():
-        return _trainer(
-            opt, rcfg, clients,
-            sampler=DeviceDiurnalSampler(ds.population(), m_min=2,
-                                         m_max=m_max, period=7, seed=3))
-    tr1, tr2, tr3 = mk(), mk(), mk()
-    tr1.run(15, verbose=False)
-    tr2.run_scanned(15, chunk_rounds=6, verbose=False)
-    tr3.run_device(15, chunk_rounds=6, verbose=False)
-    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr2.state),
-                               atol=1e-6)
-    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr3.state),
-                               atol=1e-6)
+    sfn = diurnal_sampler_fn(m_min=2, m_max=5, period=7, seed=3)
+    ref = run_trajectory("per-round", opt, rcfg, clients, 15, sampler_fn=sfn)
+    scanned = run_trajectory("scanned", opt, rcfg, clients, 15,
+                             sampler_fn=sfn, chunk_rounds=6)
+    device = run_trajectory("device", opt, rcfg, clients, 15,
+                            sampler_fn=sfn, chunk_rounds=6)
+    assert_same_trajectory(scanned, ref)
+    assert_same_trajectory(device, ref)
 
 
 def test_hetero_steps_match_across_drivers():
-    clients = _clients(seed=27)
-    rcfg = RoundConfig(clients_per_round=3, local_steps=4, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
+    clients = make_clients(seed=27)
+    rcfg = default_rcfg()
 
     def hetero_fn(t):
         return np.random.default_rng(200 + t).integers(0, 5, size=3)
 
     opt = fedmom()
-    tr1 = _trainer(opt, rcfg, clients, hetero_fn=hetero_fn)
-    tr2 = _trainer(opt, rcfg, clients, hetero_fn=hetero_fn)
-    tr1.run(12, verbose=False)
-    tr2.run_device(12, chunk_rounds=5, verbose=False)
-    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr2.state),
-                               atol=1e-6)
+    ref = run_trajectory("per-round", opt, rcfg, clients, 12,
+                         hetero_fn=hetero_fn)
+    got = run_trajectory("device", opt, rcfg, clients, 12,
+                         hetero_fn=hetero_fn, chunk_rounds=5)
+    assert_same_trajectory(got, ref)
 
 
 def test_client_extent_mismatch_raises():
-    clients = _clients(seed=33, n=8)
-    ds = FederatedDataset(clients, seed=1)
-    rcfg = RoundConfig(clients_per_round=3, local_steps=2, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
+    clients = make_clients(seed=33, n=8)
+    rcfg = default_rcfg(local_steps=2)
     opt = fedavg()
-    tr = _trainer(opt, rcfg, clients,
-                  sampler=DeviceDiurnalSampler(ds.population(), m_min=2,
-                                               m_max=5, seed=3))
+    tr = make_trainer(opt, rcfg, clients,
+                      sampler_fn=diurnal_sampler_fn(m_min=2, m_max=5,
+                                                    period=1000, seed=3))
     with pytest.raises(ValueError, match="clients_per_round"):
         tr.run_device(4, verbose=False)
     with pytest.raises(ValueError, match="clients_per_round"):
@@ -260,11 +204,10 @@ def test_client_extent_mismatch_raises():
 
 
 def test_run_device_requires_device_sampler():
-    clients = _clients(seed=35)
-    rcfg = RoundConfig(clients_per_round=3, local_steps=2, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
+    clients = make_clients(seed=35)
+    rcfg = default_rcfg(local_steps=2)
     opt = fedavg()
-    tr = _trainer(opt, rcfg, clients)
+    tr = make_trainer(opt, rcfg, clients)
 
     class HostOnly:
         def sample(self, t):
@@ -279,18 +222,17 @@ def test_run_device_requires_device_sampler():
 # ---------------------------------------------------------------------------
 def test_run_device_checkpoints_and_metrics(tmp_path):
     from repro.checkpoint import latest_round, restore_state
-    clients = _clients(seed=19)
-    rcfg = RoundConfig(clients_per_round=3, local_steps=2, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
+    clients = make_clients(seed=19)
+    rcfg = default_rcfg(local_steps=2)
     opt = fedavg(eta=1.0)
     ck = os.path.join(tmp_path, "state.npz")
     mp = os.path.join(tmp_path, "metrics.jsonl")
-    tr = _trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=1,
-                  metrics_path=mp)
+    tr = make_trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=1,
+                      metrics_path=mp)
     tr.run_device(10, chunk_rounds=4, verbose=False)
     assert latest_round(ck) == 9
     restored, meta = restore_state(ck, tr.state)
-    np.testing.assert_allclose(_flat_w(restored), _flat_w(tr.state))
+    np.testing.assert_allclose(flat_w(restored), flat_w(tr.state))
     with open(mp) as f:
         assert len(f.readlines()) == 10
 
@@ -307,7 +249,7 @@ def test_async_writer_flushes_all_submits(tmp_path):
     writer.close()                      # joins + flushes: last write wins
     restored, meta = restore_state(path, last)
     assert meta["round"] == 4
-    np.testing.assert_allclose(_flat_w(restored), _flat_w(last))
+    np.testing.assert_allclose(flat_w(restored), flat_w(last))
 
 
 def test_async_writer_survives_donation(tmp_path):
@@ -332,11 +274,10 @@ def test_async_writer_survives_donation(tmp_path):
 
 def test_scanned_driver_still_checkpoints_with_async_writer(tmp_path):
     from repro.checkpoint import latest_round
-    clients = _clients(seed=37)
-    rcfg = RoundConfig(clients_per_round=3, local_steps=2, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
+    clients = make_clients(seed=37)
+    rcfg = default_rcfg(local_steps=2)
     opt = fedavg(eta=1.0)
     ck = os.path.join(tmp_path, "state.npz")
-    tr = _trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=3)
+    tr = make_trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=3)
     tr.run_scanned(9, chunk_rounds=4, verbose=False)
     assert latest_round(ck) == 8

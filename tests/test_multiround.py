@@ -1,7 +1,7 @@
 """Round-engine v2 certification: the compiled multi-round driver reproduces
-the per-round driver's trajectory exactly, on-device sampling replays the
-host draw, heterogeneous H_k masks behave per eq. (3), and the scanned
-driver checkpoints per chunk."""
+the per-round driver's trajectory exactly (via the shared tests/_trajectory.py
+harness), on-device sampling replays the host draw, heterogeneous H_k masks
+behave per eq. (3), and the scanned driver checkpoints per chunk."""
 import os
 
 import jax
@@ -9,6 +9,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _trajectory import (
+    assert_same_trajectory,
+    default_rcfg,
+    flat_w,
+    linreg_loss,
+    linreg_params,
+    make_clients,
+    make_trainer,
+    run_trajectory,
+)
 from repro.core import (
     DeviceUniformSampler,
     RoundConfig,
@@ -19,42 +29,6 @@ from repro.core import (
 )
 from repro.core.round import round_step
 from repro.data.federated import FederatedDataset
-from repro.launch.train import FederatedTrainer
-
-
-def linreg_loss(params, batch):
-    pred = batch["x"] @ params["w"] + params["b"]
-    return jnp.mean(jnp.square(pred - batch["y"])), {}
-
-
-def _clients(seed=0, n=6, d=5):
-    rng = np.random.default_rng(seed)
-    out = []
-    for _ in range(n):
-        m = int(rng.integers(20, 40))
-        x = rng.normal(size=(m, d)).astype(np.float32)
-        y = (x @ np.arange(1, d + 1) / d
-             + 0.1 * rng.normal(size=m)).astype(np.float32)
-        out.append({"x": x, "y": y})
-    return out
-
-
-def _params(d=5):
-    return {"w": jnp.zeros(d), "b": jnp.zeros(())}
-
-
-def _trainer(opt, rcfg, clients, hetero_fn=None, **kw):
-    ds = FederatedDataset([dict(c) for c in clients], seed=1)
-    return FederatedTrainer(
-        loss_fn=linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
-        sampler=DeviceUniformSampler(ds.population(), 3, seed=2),
-        state=opt.init(_params()), hetero_steps_fn=hetero_fn,
-        **kw).set_local_batch(4)
-
-
-def _flat_w(state):
-    return np.concatenate(
-        [np.ravel(np.asarray(x)) for x in jax.tree.leaves(state.w)])
 
 
 @pytest.mark.parametrize("opt_fn", [fedavg, fedmom])
@@ -62,22 +36,14 @@ def _flat_w(state):
 def test_scanned_driver_matches_per_round_driver(opt_fn, placement):
     """Same keys/schedule => allclose states AND losses over 21 rounds,
     including a ragged last chunk (21 = 8 + 8 + 5)."""
-    clients = _clients()
-    rcfg = RoundConfig(clients_per_round=3, local_steps=4, lr=0.05,
-                       placement=placement, compute_dtype="float32")
+    clients = make_clients()
+    rcfg = default_rcfg(placement=placement)
     opt = opt_fn()
-    tr1 = _trainer(opt, rcfg, clients)
-    tr2 = _trainer(opt, rcfg, clients)
-    h1 = tr1.run(21, verbose=False)
-    h2 = tr2.run_scanned(21, chunk_rounds=8, verbose=False)
-    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr2.state),
-                               atol=1e-6)
-    assert len(h1) == len(h2) == 21
-    np.testing.assert_allclose([r["loss"] for r in h1],
-                               [r["loss"] for r in h2], atol=1e-6)
-    np.testing.assert_allclose([r["delta_norm"] for r in h1],
-                               [r["delta_norm"] for r in h2], atol=1e-6)
-    assert int(tr2.state.t) == 21
+    ref = run_trajectory("per-round", opt, rcfg, clients, 21)
+    got = run_trajectory("scanned", opt, rcfg, clients, 21, chunk_rounds=8)
+    assert_same_trajectory(got, ref)
+    assert len(got[0]) == 21
+    assert int(got[1].t) == 21
 
 
 def test_scan_rounds_matches_round_step_loop():
@@ -94,9 +60,10 @@ def test_scan_rounds_matches_round_step_loop():
     rcfg = RoundConfig(clients_per_round=C, local_steps=H, lr=0.05,
                        placement="mesh", compute_dtype="float32")
     opt = fedmom(eta=2.0, beta=0.9)
-    st_scan, metrics = scan_rounds(linreg_loss, opt, opt.init(_params()),
+    st_scan, metrics = scan_rounds(linreg_loss, opt,
+                                   opt.init(linreg_params()),
                                    batches, weights, rcfg, lrs=lrs)
-    st_loop = opt.init(_params())
+    st_loop = opt.init(linreg_params())
     losses = []
     for t in range(R):
         st_loop, m = round_step(
@@ -104,7 +71,7 @@ def test_scan_rounds_matches_round_step_loop():
             jax.tree.map(lambda x: x[t], batches), weights[t], rcfg,
             lr=lrs[t])
         losses.append(float(m["loss"]))
-    np.testing.assert_allclose(_flat_w(st_scan), _flat_w(st_loop), atol=1e-6)
+    np.testing.assert_allclose(flat_w(st_scan), flat_w(st_loop), atol=1e-6)
     np.testing.assert_allclose(np.asarray(metrics["loss"]), losses,
                                atol=1e-6)
     assert metrics["loss"].shape == (R,)
@@ -114,7 +81,7 @@ def test_scan_rounds_matches_round_step_loop():
 def test_scan_rounds_sampled_matches_host_replay():
     """On-device sampling inside the scan == the DeviceUniformSampler host
     replay feeding the weight stream explicitly."""
-    clients = _clients(seed=7)
+    clients = make_clients(seed=7)
     ds = FederatedDataset([dict(c) for c in clients], seed=1)
     sampler = DeviceUniformSampler(ds.population(), 3, seed=5)
     rcfg = RoundConfig(clients_per_round=3, local_steps=3, lr=0.05,
@@ -127,18 +94,18 @@ def test_scan_rounds_sampled_matches_host_replay():
         bs.append(ds.round_batches(idx, 3, 4, t=t))
         ws.append(w)
     batches = {k: jnp.asarray(np.stack([b[k] for b in bs])) for k in bs[0]}
-    st1, m1 = scan_rounds(linreg_loss, opt, opt.init(_params()), batches,
-                          jnp.asarray(np.stack(ws)), rcfg)
+    st1, m1 = scan_rounds(linreg_loss, opt, opt.init(linreg_params()),
+                          batches, jnp.asarray(np.stack(ws)), rcfg)
     st2, m2 = scan_rounds_sampled(
-        linreg_loss, opt, opt.init(_params()), batches, sampler,
+        linreg_loss, opt, opt.init(linreg_params()), batches, sampler,
         sampler.base_key(), jnp.int32(0), rcfg)
-    np.testing.assert_allclose(_flat_w(st1), _flat_w(st2), atol=1e-6)
+    np.testing.assert_allclose(flat_w(st1), flat_w(st2), atol=1e-6)
     np.testing.assert_allclose(np.asarray(m1["loss"]),
                                np.asarray(m2["loss"]), atol=1e-6)
 
 
 def test_device_sampler_host_path_replays_device_path():
-    clients = _clients(seed=9)
+    clients = make_clients(seed=9)
     ds = FederatedDataset(clients, seed=1)
     s = DeviceUniformSampler(ds.population(), 4, seed=3)
     for t in (0, 1, 17):
@@ -151,7 +118,7 @@ def test_device_sampler_host_path_replays_device_path():
 
 def test_device_diurnal_sampler_replays_and_masks_tail():
     from repro.core import DeviceDiurnalSampler
-    clients = _clients(seed=29, n=8)
+    clients = make_clients(seed=29, n=8)
     ds = FederatedDataset(clients, seed=1)
     s = DeviceDiurnalSampler(ds.population(), m_min=2, m_max=6, period=10,
                              seed=3)
@@ -182,12 +149,12 @@ def test_hetero_step_mask_equals_truncated_local_run(placement):
     rcfg = RoundConfig(clients_per_round=C, local_steps=H, lr=0.1,
                        placement=placement, compute_dtype="float32")
     opt = fedavg(eta=1.0)
-    st, _ = round_step(linreg_loss, opt, opt.init(_params()), batches,
+    st, _ = round_step(linreg_loss, opt, opt.init(linreg_params()), batches,
                        weights, rcfg, step_mask=jnp.asarray(mask))
 
     # reference: per-client eager SGD for exactly H_k steps
     from repro.core.client import local_update
-    params = jax.tree.map(lambda x: x.astype(jnp.float32), _params())
+    params = jax.tree.map(lambda x: x.astype(jnp.float32), linreg_params())
     delta = jax.tree.map(jnp.zeros_like, params)
     for c in range(C):
         bc = jax.tree.map(lambda x: x[c, :h_k[c]], batches)
@@ -196,7 +163,7 @@ def test_hetero_step_mask_equals_truncated_local_run(placement):
             lambda dl, w0, wl: dl + weights[c] * (w0 - wl),
             delta, params, wk)
     expect = jax.tree.map(lambda w0, dl: w0 - dl, params, delta)
-    np.testing.assert_allclose(_flat_w(st),
+    np.testing.assert_allclose(flat_w(st),
                                np.concatenate([np.ravel(np.asarray(x))
                                                for x in
                                                jax.tree.leaves(expect)]),
@@ -218,11 +185,12 @@ def test_fully_masked_client_equals_zero_weight_client():
     weights = jnp.asarray([0.2, 0.3, 0.1], jnp.float32)
     mask = jnp.asarray(np.array([[1, 1, 1], [0, 0, 0], [1, 1, 1]],
                                 np.float32))
-    s_masked, _ = round_step(linreg_loss, opt, opt.init(_params()), batches,
-                             weights, rcfg, step_mask=mask)
-    s_dropped, _ = round_step(linreg_loss, opt, opt.init(_params()), batches,
+    s_masked, _ = round_step(linreg_loss, opt, opt.init(linreg_params()),
+                             batches, weights, rcfg, step_mask=mask)
+    s_dropped, _ = round_step(linreg_loss, opt, opt.init(linreg_params()),
+                              batches,
                               weights * jnp.asarray([1.0, 0.0, 1.0]), rcfg)
-    np.testing.assert_allclose(_flat_w(s_masked), _flat_w(s_dropped),
+    np.testing.assert_allclose(flat_w(s_masked), flat_w(s_dropped),
                                atol=1e-6)
 
 
@@ -237,29 +205,28 @@ def test_all_ones_mask_is_identity():
     rcfg = RoundConfig(clients_per_round=C, local_steps=H, lr=0.1,
                        placement="mesh", compute_dtype="float32")
     opt = fedavg(eta=1.0)
-    s1, m1 = round_step(linreg_loss, opt, opt.init(_params()), batches,
+    s1, m1 = round_step(linreg_loss, opt, opt.init(linreg_params()), batches,
                         weights, rcfg)
-    s2, m2 = round_step(linreg_loss, opt, opt.init(_params()), batches,
+    s2, m2 = round_step(linreg_loss, opt, opt.init(linreg_params()), batches,
                         weights, rcfg, step_mask=jnp.ones((C, H)))
-    np.testing.assert_allclose(_flat_w(s1), _flat_w(s2), atol=1e-6)
+    np.testing.assert_allclose(flat_w(s1), flat_w(s2), atol=1e-6)
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
                                atol=1e-6)
 
 
 def test_scanned_driver_checkpoints_each_chunk(tmp_path):
     from repro.checkpoint import latest_round, restore_state
-    clients = _clients(seed=19)
-    rcfg = RoundConfig(clients_per_round=3, local_steps=2, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
+    clients = make_clients(seed=19)
+    rcfg = default_rcfg(local_steps=2)
     opt = fedavg(eta=1.0)
     ck = os.path.join(tmp_path, "state.npz")
     mp = os.path.join(tmp_path, "metrics.jsonl")
-    tr = _trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=1,
-                  metrics_path=mp)
+    tr = make_trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=1,
+                      metrics_path=mp)
     tr.run_scanned(10, chunk_rounds=4, verbose=False)
     assert latest_round(ck) == 9
     restored, meta = restore_state(ck, tr.state)
-    np.testing.assert_allclose(_flat_w(restored), _flat_w(tr.state))
+    np.testing.assert_allclose(flat_w(restored), flat_w(tr.state))
     with open(mp) as f:
         lines = f.readlines()
     assert len(lines) == 10
@@ -268,17 +235,15 @@ def test_scanned_driver_checkpoints_each_chunk(tmp_path):
 def test_hetero_drivers_agree():
     """run vs run_scanned with a per-round H_k schedule stay on one
     trajectory (the straggler scenario end-to-end)."""
-    clients = _clients(seed=23)
-    rcfg = RoundConfig(clients_per_round=3, local_steps=4, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
+    clients = make_clients(seed=23)
+    rcfg = default_rcfg()
 
     def hetero_fn(t):
         return np.random.default_rng(100 + t).integers(0, 5, size=3)
 
     opt = fedmom()
-    tr1 = _trainer(opt, rcfg, clients, hetero_fn=hetero_fn)
-    tr2 = _trainer(opt, rcfg, clients, hetero_fn=hetero_fn)
-    tr1.run(12, verbose=False)
-    tr2.run_scanned(12, chunk_rounds=5, verbose=False)
-    np.testing.assert_allclose(_flat_w(tr1.state), _flat_w(tr2.state),
-                               atol=1e-6)
+    ref = run_trajectory("per-round", opt, rcfg, clients, 12,
+                         hetero_fn=hetero_fn)
+    got = run_trajectory("scanned", opt, rcfg, clients, 12,
+                         hetero_fn=hetero_fn, chunk_rounds=5)
+    assert_same_trajectory(got, ref)

@@ -1,0 +1,387 @@
+"""Data plane v2 certification: the streaming shard-cached plane trains the
+same trajectory as every other tier (4-way matrix on tests/_trajectory.py),
+resumed runs are bit-equal to uninterrupted ones on all four drivers, and the
+ShardCache LRU/packing edge cases hold under property-based inputs
+(tests/_propcheck.py)."""
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from _trajectory import (
+    assert_same_trajectory,
+    default_rcfg,
+    diurnal_sampler_fn,
+    flat_w,
+    make_clients,
+    make_trainer,
+    run_trajectory,
+)
+from repro.core import fedavg, fedmom, participants_in_span
+from repro.core.sampling import DeviceUniformSampler
+from repro.data import FederatedDataset, ShardCache, StreamingFederatedDataset
+
+
+# ---------------------------------------------------------------------------
+# four-way trajectory equivalence (the tentpole contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("opt_fn", [fedavg, fedmom])
+def test_all_four_drivers_one_trajectory(opt_fn):
+    """per-round == prefetch-queue == device-resident == shard-cached
+    streaming, over 13 rounds with a ragged last chunk."""
+    clients = make_clients(seed=41)
+    rcfg = default_rcfg()
+    opt = opt_fn()
+    ref = run_trajectory("per-round", opt, rcfg, clients, 13)
+    for driver in ("scanned", "device", "streaming"):
+        got = run_trajectory(driver, opt, rcfg, clients, 13, chunk_rounds=5)
+        assert_same_trajectory(got, ref)
+    assert int(ref[1].t) == 13
+
+
+def test_streaming_with_forced_evictions_stays_on_trajectory():
+    """A cache of exactly M slots + one-round chunks: every chunk may evict,
+    and the trajectory still matches the per-round driver bit for bit."""
+    clients = make_clients(seed=43, n=8)
+    rcfg = default_rcfg()
+    opt = fedmom()
+    ref = run_trajectory("per-round", opt, rcfg, clients, 13)
+    tr = make_trainer(opt, rcfg, clients)
+    hist = tr.run_streaming(13, chunk_rounds=1, cache_clients=3,
+                            verbose=False)
+    assert_same_trajectory((hist, tr.state), ref)
+    cache = tr.stream_cache
+    assert cache.slots == 3
+    assert cache.evictions > 0                  # streaming actually streamed
+    assert cache.misses > cache.slots
+    assert 0.0 <= cache.hit_rate < 1.0
+
+
+def test_streaming_corpus_exceeds_cache_capacity():
+    """Acceptance: the packed corpus is bigger than the configured cache
+    budget (in bytes), yet the plane trains the reference trajectory."""
+    clients = make_clients(seed=47, n=10)
+    rcfg = default_rcfg()
+    opt = fedmom()
+    sds = StreamingFederatedDataset(
+        [dict(c) for c in clients], seed=1)
+    budget = sds.packed_nbytes // 2             # cannot hold the corpus
+    ref = run_trajectory("per-round", opt, rcfg, clients, 9)
+    tr = make_trainer(opt, rcfg, clients)
+    hist = tr.run_streaming(9, chunk_rounds=1, cache_bytes=budget,
+                            verbose=False)
+    assert_same_trajectory((hist, tr.state), ref)
+    assert tr.stream_cache.nbytes <= budget
+    assert tr.stream_cache.nbytes < sds.packed_nbytes
+    assert tr.stream_cache.slots < sds.n_clients
+
+
+def test_streaming_diurnal_matches_per_round():
+    """Time-varying M(t): padded slots carry zero weight but still index
+    data, so the cache must hold the full m_max participant set."""
+    clients = make_clients(seed=53, n=8)
+    rcfg = default_rcfg(clients_per_round=5, local_steps=3)
+    opt = fedmom()
+    sfn = diurnal_sampler_fn(m_min=2, m_max=5, period=7, seed=3)
+    ref = run_trajectory("per-round", opt, rcfg, clients, 12, sampler_fn=sfn)
+    got = run_trajectory("streaming", opt, rcfg, clients, 12,
+                         sampler_fn=sfn, chunk_rounds=1, cache_clients=6)
+    assert_same_trajectory(got, ref)
+
+
+def test_streaming_hetero_steps_match_per_round():
+    clients = make_clients(seed=59)
+    rcfg = default_rcfg()
+
+    def hetero_fn(t):
+        return np.random.default_rng(300 + t).integers(0, 5, size=3)
+
+    opt = fedmom()
+    ref = run_trajectory("per-round", opt, rcfg, clients, 10,
+                         hetero_fn=hetero_fn)
+    got = run_trajectory("streaming", opt, rcfg, clients, 10,
+                         hetero_fn=hetero_fn, chunk_rounds=4)
+    assert_same_trajectory(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# resume: a continued run == the uninterrupted run, per driver
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("driver",
+                         ["per-round", "scanned", "device", "streaming"])
+def test_resumed_run_equals_uninterrupted(driver, tmp_path):
+    clients = make_clients(seed=61)
+    rcfg = default_rcfg()
+    opt = fedmom()
+    ref = run_trajectory(driver, opt, rcfg, clients, 12, chunk_rounds=4)
+    got = run_trajectory(driver, opt, rcfg, clients, 12, chunk_rounds=4,
+                         resume_at=6, tmp_path=tmp_path)
+    assert_same_trajectory(got, ref)
+    assert int(got[1].t) == 12
+
+
+def test_resume_rejects_stateful_sampler(tmp_path):
+    """A sequential-RNG sampler would silently replay round-0 client sets
+    after restore; resume must refuse it up front."""
+    from repro.core import UniformSampler
+    clients = make_clients(seed=69)
+    rcfg = default_rcfg(local_steps=2)
+    tr = make_trainer(fedavg(), rcfg, clients,
+                      ckpt_path=str(tmp_path / "ck.npz"), ckpt_every=1)
+    ds = FederatedDataset([dict(c) for c in clients], seed=1)
+    tr.sampler = UniformSampler(ds.population(), 3, seed=2)
+    with pytest.raises(ValueError, match="Device"):
+        tr.run(2, verbose=False, resume=True)
+
+
+def test_resume_rewinds_metrics_log(tmp_path):
+    """Rounds logged after the last durable checkpoint (a crash window) are
+    pruned on resume and re-logged once — no duplicate jsonl records."""
+    import json
+
+    from repro.checkpoint import append_metrics
+    clients = make_clients(seed=77)
+    rcfg = default_rcfg(local_steps=2)
+    opt = fedmom()
+    ck, mp = str(tmp_path / "ck.npz"), str(tmp_path / "m.jsonl")
+
+    def mk():
+        return make_trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=1,
+                            metrics_path=mp)
+    mk().run_device(6, chunk_rounds=3, verbose=False)    # durable round 5
+    # simulate a crash that logged rounds 6-7 before their save landed
+    append_metrics(mp, [{"round": 6, "loss": 999.0, "delta_norm": 0.0},
+                        {"round": 7, "loss": 999.0, "delta_norm": 0.0}])
+    tr = mk()
+    tr.run_device(12, chunk_rounds=3, verbose=False, resume=True)
+    with open(mp) as f:
+        recs = [json.loads(line) for line in f]
+    assert [r["round"] for r in recs] == list(range(12))  # each exactly once
+    assert all(r["loss"] != 999.0 for r in recs)          # stale rows gone
+
+
+def test_resume_without_ckpt_path_raises():
+    clients = make_clients(seed=63)
+    tr = make_trainer(fedavg(), default_rcfg(local_steps=2), clients)
+    with pytest.raises(ValueError, match="ckpt_path"):
+        tr.run(2, verbose=False, resume=True)
+
+
+def test_resume_with_absent_checkpoint_starts_fresh(tmp_path):
+    """First launch and resume-after-crash share one code path: no durable
+    checkpoint means round 0, not an error."""
+    clients = make_clients(seed=67)
+    rcfg = default_rcfg(local_steps=2)
+    opt = fedavg()
+    ref = run_trajectory("per-round", opt, rcfg, clients, 5)
+    tr = make_trainer(opt, rcfg, clients,
+                      ckpt_path=str(tmp_path / "none.npz"), ckpt_every=1)
+    hist = tr.run(5, verbose=False, resume=True)
+    assert [r["round"] for r in hist] == list(range(5))
+    np.testing.assert_allclose(flat_w(tr.state), flat_w(ref[1]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the streaming driver's contracts
+# ---------------------------------------------------------------------------
+def test_run_streaming_requires_device_sampler():
+    clients = make_clients(seed=71)
+    rcfg = default_rcfg(local_steps=2)
+    tr = make_trainer(fedavg(), rcfg, clients)
+
+    class HostOnly:
+        def sample(self, t):
+            raise NotImplementedError
+    tr.sampler = HostOnly()
+    with pytest.raises(ValueError, match="sample_device"):
+        tr.run_streaming(2, verbose=False)
+
+
+def test_run_streaming_rejects_stateful_sampler():
+    """UniformSampler HAS sample_device but its host path is a sequential
+    RNG, not a replay — staging the cache from it would silently feed the
+    scan other clients' shards.  run_streaming must refuse it."""
+    from repro.core import UniformSampler
+    clients = make_clients(seed=75)
+    rcfg = default_rcfg(local_steps=2)
+    tr = make_trainer(fedavg(), rcfg, clients)
+    ds = FederatedDataset([dict(c) for c in clients], seed=1)
+    tr.sampler = UniformSampler(ds.population(), 3, seed=2)
+    with pytest.raises(ValueError, match="replay"):
+        tr.run_streaming(2, verbose=False)
+
+
+def test_chunk_needing_more_clients_than_slots_raises():
+    clients = make_clients(seed=73, n=8)
+    rcfg = default_rcfg()
+    tr = make_trainer(fedavg(), rcfg, clients)
+    with pytest.raises(ValueError, match="distinct clients"):
+        # 4 rounds x M=3 from K=8 surfaces >2 distinct clients
+        tr.run_streaming(4, chunk_rounds=4, cache_clients=2, verbose=False)
+
+
+def test_participants_in_span_replays_and_orders():
+    clients = make_clients(seed=79, n=8)
+    ds = FederatedDataset(clients, seed=1)
+    s = DeviceUniformSampler(ds.population(), 3, seed=2)
+    parts = participants_in_span(s, 0, 4)
+    assert parts == list(dict.fromkeys(
+        int(c) for t in range(4) for c in s.sample(t)[0]))
+    assert len(parts) == len(set(parts))
+    # peeking ahead never perturbed the keyed draws
+    np.testing.assert_array_equal(s.sample(0)[0], s.sample(0)[0])
+
+    class Stateful:
+        def sample(self, t):
+            return np.array([0]), np.array([1.0])
+    with pytest.raises(ValueError, match="Device"):
+        participants_in_span(Stateful(), 0, 2)
+
+
+def test_view_snapshot_survives_later_uploads():
+    """The double-buffering invariant: a view taken before ensure() still
+    reads the OLD shard contents (functional updates, no aliasing)."""
+    clients = [{"x": np.full((4, 2), float(k), np.float32)}
+               for k in range(6)]
+    sds = StreamingFederatedDataset(clients, seed=0)
+    cache = ShardCache(sds, capacity_clients=2)
+    cache.ensure([0, 1])
+    view0 = cache.view()
+    before = np.asarray(view0.arrays["x"]).copy()
+    cache.ensure([4, 5])                 # evicts both resident shards
+    np.testing.assert_array_equal(np.asarray(view0.arrays["x"]), before)
+    after = np.asarray(cache.view().arrays["x"])
+    assert not np.array_equal(after, before)
+
+
+def test_lru_evicts_least_recently_used_first():
+    clients = [{"x": np.full((2, 1), float(k), np.float32)}
+               for k in range(5)]
+    sds = StreamingFederatedDataset(clients, seed=0)
+    cache = ShardCache(sds, capacity_clients=3)
+    cache.ensure([0, 1, 2])
+    cache.ensure([1])                    # refresh 1: LRU order now 0, 2, 1
+    cache.ensure([3])                    # evicts 0
+    assert cache.resident() == {1, 2, 3}
+    cache.ensure([4])                    # evicts 2
+    assert cache.resident() == {1, 3, 4}
+    assert cache.evictions == 2
+
+
+def test_cache_capacity_clamped_and_validated():
+    clients = [{"x": np.zeros((3, 2), np.float32)} for _ in range(4)]
+    sds = StreamingFederatedDataset(clients, seed=0)
+    assert ShardCache(sds, capacity_clients=100).slots == 4   # clamp to K
+    assert ShardCache(sds, capacity_bytes=1).slots == 1       # floor of 1
+    both = ShardCache(sds, capacity_clients=3,
+                      capacity_bytes=2 * sds.slot_nbytes)
+    assert both.slots == 2                                    # tighter wins
+    with pytest.raises(ValueError, match="capacity"):
+        ShardCache(sds)
+
+
+def test_streaming_dataset_validates_like_pack():
+    with pytest.raises(ValueError, match="ragged"):
+        StreamingFederatedDataset(
+            [{"x": np.zeros((3, 2)), "y": np.zeros(4)}])
+    with pytest.raises(ValueError, match="no samples"):
+        StreamingFederatedDataset(
+            [{"x": np.zeros((3, 2))}, {"x": np.zeros((0, 2))}])
+    with pytest.raises(ValueError, match="fields"):
+        StreamingFederatedDataset(
+            [{"x": np.zeros((3, 2))}, {"y": np.zeros((3, 2))}])
+
+
+# ---------------------------------------------------------------------------
+# property-based packing/gather edge cases (seeded fallback when hypothesis
+# is absent — see tests/_propcheck.py)
+# ---------------------------------------------------------------------------
+def _skewed_clients(rng, K, mixed_dtypes=False):
+    """Heavily skewed n_k (1-sample clients next to 40-sample ones)."""
+    out = []
+    for k in range(K):
+        n = int(rng.choice([1, 2, 3, 20, 40]))
+        c = {"x": rng.normal(size=(n, 3)).astype(np.float32)}
+        if mixed_dtypes:
+            c["tokens"] = rng.integers(0, 50, size=(n, 4)).astype(np.int32)
+        out.append(c)
+    return out
+
+
+def _assert_cache_gather_bit_equals_host(clients, cap, rounds, seed,
+                                         m=2, H=3, b=2):
+    """Drive a ShardCache through `rounds` keyed participant sets and check
+    every gather against FederatedDataset.round_batches bit for bit."""
+    import jax.numpy as jnp
+
+    ds = FederatedDataset([dict(c) for c in clients], seed=seed)
+    sds = StreamingFederatedDataset([dict(c) for c in clients], seed=seed)
+    sampler = DeviceUniformSampler(ds.population(), m, seed=seed + 1)
+    cache = ShardCache(sds, capacity_clients=cap)
+    for t in range(rounds):
+        ids, _ = sampler.sample(t)
+        cache.ensure(ids)
+        view = cache.view()
+        got = view.gather_round_batch(view.base_key(), jnp.int32(t),
+                                      jnp.asarray(ids), H, b)
+        want = ds.round_batches(ids, H, b, t=t)
+        for name in want:
+            np.testing.assert_array_equal(want[name],
+                                          np.asarray(got[name]))
+    return cache
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(4, 9), st.integers(0, 1000))
+def test_prop_skewed_counts_tiny_cache_forced_evictions(K, seed):
+    """Skewed n_k + a cache of exactly M slots: evictions are constant and
+    the gather never drifts from the host assembly (padding never leaks,
+    indirection never mixes clients up)."""
+    rng = np.random.default_rng(seed)
+    clients = _skewed_clients(rng, K)
+    cache = _assert_cache_gather_bit_equals_host(clients, cap=2, rounds=6,
+                                                 seed=seed % 97)
+    if K > 2:
+        assert cache.misses > 2          # had to stream beyond capacity
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 1000))
+def test_prop_single_client_cache(K, seed):
+    """capacity_clients=1 (the minimum): every round evicts, still exact."""
+    rng = np.random.default_rng(seed)
+    clients = _skewed_clients(rng, K)
+    cache = _assert_cache_gather_bit_equals_host(clients, cap=1, rounds=5,
+                                                 seed=seed % 89, m=1)
+    assert cache.slots == 1
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(3, 8), st.integers(0, 1000))
+def test_prop_cache_exactly_at_capacity(K, seed):
+    """distinct == slots in one request must fill without raising; one more
+    distinct client than slots must raise."""
+    rng = np.random.default_rng(seed)
+    clients = _skewed_clients(rng, K)
+    sds = StreamingFederatedDataset([dict(c) for c in clients], seed=0)
+    cache = ShardCache(sds, capacity_clients=K)
+    cache.ensure(list(range(K)))         # exactly at capacity: fine
+    assert cache.resident() == set(range(K))
+    assert cache.evictions == 0
+    small = ShardCache(sds, capacity_clients=K - 1)
+    with pytest.raises(ValueError, match="distinct clients"):
+        small.ensure(list(range(K)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(3, 7), st.integers(0, 1000))
+def test_prop_mixed_dtype_fields_roundtrip(K, seed):
+    """int32 token fields next to float32 ones keep their dtypes and values
+    through pad -> upload -> slot gather."""
+    rng = np.random.default_rng(seed)
+    clients = _skewed_clients(rng, K, mixed_dtypes=True)
+    sds = StreamingFederatedDataset([dict(c) for c in clients], seed=0)
+    cache = ShardCache(sds, capacity_clients=2)
+    assert cache.arrays["tokens"].dtype == np.int32
+    assert cache.arrays["x"].dtype == np.float32
+    _assert_cache_gather_bit_equals_host(clients, cap=2, rounds=4,
+                                         seed=seed % 83)
