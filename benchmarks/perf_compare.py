@@ -3,20 +3,23 @@ collective deltas and the three roofline terms side by side.
 
     PYTHONPATH=src python -m benchmarks.perf_compare results/hillclimb.jsonl
 
-Driver lane: measure the per-round host overhead the scanned multi-round
-driver (round-engine v2, ``FederatedTrainer.run_scanned``) removes relative
-to the per-round Python loop, at the paper's small round sizes:
+Driver lane: measure the per-round host overhead the scanned plane
+(``run(n, plan="scanned")``) removes relative to the per-round Python loop,
+at the paper's small round sizes:
 
     PYTHONPATH=src python -m benchmarks.perf_compare --drivers \
         [--model lenet|linreg] [--rounds 100] [--chunk-rounds 25]
 
-Data-plane lane: prefetch-queue (host-assembled chunks, ``run_scanned``) vs
-device-resident corpus (``run_device``: sampling + minibatch gather fused
-into the scan, zero host round-trips per chunk) vs shard-cached streaming
-(``run_streaming``: bounded device LRU of client shards, chunk i+1's H2D
-uploads overlapped with chunk i's compute) — the same trajectory, only the
-data plane differs.  The streaming row also reports cache hit-rate and the
-cache-vs-packed footprint (the plane-choice decision numbers):
+Data-plane lane: prefetch-queue (host-assembled chunks, ``plan="scanned"``)
+vs device-resident corpus (``plan="device"``: sampling + minibatch gather
+fused into the scan, zero host round-trips per chunk) vs shard-cached
+streaming (``plan="streaming"``: bounded device LRU of client shards, chunk
+i+1's H2D uploads overlapped with chunk i's compute) — the same trajectory,
+only the data plane differs.  The streaming row also reports cache hit-rate
+and the cache-vs-packed footprint (the plane-choice decision numbers), and a
+warm-session row reruns the streaming lane on the SAME ``TrainSession``: the
+persistent shard cache makes the second ``run()`` re-upload nothing for
+already-resident clients (measured upload savings):
 
     PYTHONPATH=src python -m benchmarks.perf_compare --data-plane \
         [--model lenet|linreg] [--rounds 100] [--chunk-rounds 25] \
@@ -118,7 +121,7 @@ def _driver_setup(model: str, m: int, local_steps: int, batch: int,
             loss_fn=loss_fn, server_opt=opt, rcfg=rcfg,
             dataset=FederatedDataset(list(ds.data), seed=1),
             sampler=DeviceUniformSampler(ds.population(), m, seed=2),
-            state=opt.init(w0)).set_local_batch(batch)
+            state=opt.init(w0), local_batch=batch)
     return make
 
 
@@ -182,11 +185,13 @@ def _time_lanes(args, lanes):
 
 def bench_drivers(argv):
     """Python-loop driver vs scanned multi-round driver, wall-clock/round."""
+    from repro.launch.plan import ExecutionPlan
+
     args = _lane_args(argv, "--drivers")
+    scanned = ExecutionPlan(plane="scanned", chunk_rounds=args.chunk_rounds)
     ms, _, _ = _time_lanes(args, {
         "python-loop": lambda tr, n: tr.run(n, verbose=False),
-        "scanned": lambda tr, n: tr.run_scanned(
-            n, chunk_rounds=args.chunk_rounds, verbose=False),
+        "scanned": lambda tr, n: tr.run(n, plan=scanned, verbose=False),
     })
     py, sc = ms["python-loop"], ms["scanned"]
     print(f"  scanned removes {(py - sc) * 1e3:.3f} ms/round of host "
@@ -195,18 +200,37 @@ def bench_drivers(argv):
 
 def bench_data_plane(argv):
     """Prefetch-queue vs device-resident vs shard-cached streaming data
-    planes, ms/round at equal trajectory (+ cache hit-rate)."""
+    planes, ms/round at equal trajectory (+ cache hit-rate), plus the
+    warm-TrainSession rerun (cross-call cache persistence)."""
+    import time
+
+    from repro.launch.plan import CacheSpec, ExecutionPlan
+
     args = _lane_args(argv, "--data-plane", smoke=True)
     if args.smoke:
         args.model, args.rounds, args.chunk_rounds = "linreg", 12, 4
+    streaming = ExecutionPlan(plane="streaming",
+                              chunk_rounds=args.chunk_rounds,
+                              cache=CacheSpec(clients=args.cache_clients))
+
+    def run_streaming_cold(tr, n):
+        # the session cache persists across run() calls now, so the timed
+        # pass would otherwise be warm from the warmup run — drop residency
+        # to keep this row the COLD plane-choice number (the warm-session
+        # row below isolates the persistence win)
+        tr.session.shard_cache = None
+        tr.run(n, plan=streaming, verbose=False)
+
     ms, final, trainers = _time_lanes(args, {
-        "prefetch-queue": lambda tr, n: tr.run_scanned(
-            n, chunk_rounds=args.chunk_rounds, verbose=False),
-        "device-resident": lambda tr, n: tr.run_device(
-            n, chunk_rounds=args.chunk_rounds, verbose=False),
-        "shard-cached": lambda tr, n: tr.run_streaming(
-            n, chunk_rounds=args.chunk_rounds,
-            cache_clients=args.cache_clients, verbose=False),
+        "prefetch-queue": lambda tr, n: tr.run(
+            n, plan=ExecutionPlan(plane="scanned",
+                                  chunk_rounds=args.chunk_rounds),
+            verbose=False),
+        "device-resident": lambda tr, n: tr.run(
+            n, plan=ExecutionPlan(plane="device",
+                                  chunk_rounds=args.chunk_rounds),
+            verbose=False),
+        "shard-cached": run_streaming_cold,
     })
     # all lanes run (seed, t, client_id)-keyed draws => one trajectory
     drift = max(abs(final[a] - final[b])
@@ -224,6 +248,30 @@ def bench_data_plane(argv):
           f"hit-rate {cache.hit_rate:.1%}, {cache.evictions} evictions, "
           f"{ms['shard-cached'] / dev:.2f}x device-resident ms/round at "
           f"equal trajectory")
+
+    # warm TrainSession: a fresh trainer, one cold run() (uploads + compile)
+    # then a rerun on the same session — the persistent cache re-uploads
+    # nothing for already-resident clients
+    make = _driver_setup(args.model, args.m, args.local_steps, args.batch,
+                         args.fused_server)
+    tr = make()
+    init_state = tr.server_opt.init(tr.state.w)
+    t0 = time.perf_counter()
+    tr.run(args.rounds, plan=streaming, verbose=False)
+    cold_s = time.perf_counter() - t0
+    cache = tr.stream_cache
+    cold_up = cache.misses
+    tr.state, tr.history = init_state, []
+    t0 = time.perf_counter()
+    tr.run(args.rounds, plan=streaming, verbose=False)
+    warm_s = time.perf_counter() - t0
+    warm_up = cache.misses - cold_up
+    saved = 1.0 - warm_up / max(cold_up, 1)
+    print(f"  warm-session   rerun on one TrainSession: {cold_up} shard "
+          f"uploads cold -> {warm_up} warm ({saved:.0%} upload savings), "
+          f"{cold_s / args.rounds * 1e3:.3f} -> "
+          f"{warm_s / args.rounds * 1e3:.3f} ms/round (cold includes "
+          f"compile)")
 
 
 if __name__ == "__main__":

@@ -31,7 +31,7 @@ def _train(task, opt, rounds, lr_schedule=None, lr=0.05, seed=9):
         loss_fn=task.loss_fn, server_opt=opt, rcfg=rcfg,
         dataset=task.dataset, sampler=UniformSampler(pop, 2, seed=seed),
         state=opt.init(task.init_fn(jax.random.PRNGKey(0))),
-        lr_schedule=lr_schedule).set_local_batch(10)
+        lr_schedule=lr_schedule, local_batch=10)
     hist = tr.run(rounds, log_every=10_000, verbose=False)
     return float(np.mean([h["loss"] for h in hist[-10:]]))
 

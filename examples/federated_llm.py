@@ -72,7 +72,7 @@ def main():
         sampler=UniformSampler(pop, args.m, seed=2),
         state=opt.init(params),
         ckpt_path="results/fed_llm_ckpt.npz", ckpt_every=100,
-    ).set_local_batch(args.batch)
+        local_batch=args.batch)
     t0 = time.time()
     hist = trainer.run(args.rounds, log_every=max(args.rounds // 10, 1))
     print(f"done: {args.rounds} rounds in {time.time()-t0:.0f}s; "

@@ -44,7 +44,7 @@ def main():
         trainer = FederatedTrainer(
             loss_fn=small.lstm_loss, server_opt=opt, rcfg=rcfg,
             dataset=ds, sampler=UniformSampler(pop, M, seed=2),
-            state=opt.init(w0)).set_local_batch(10)
+            state=opt.init(w0), local_batch=10)
         hist = trainer.run(args.rounds, log_every=30)
         final[name] = hist[-1]["loss"]
     print("\nrounds-to-loss summary (lower = faster):",

@@ -4,21 +4,14 @@ Trains LeNet on synthetic non-IID FEMNIST with M=2 active clients per round
 (exactly §5.1's configuration) and compares FedAvg vs FedMom server
 optimizers.  Runs in ~1 minute on CPU.
 
-    PYTHONPATH=src python examples/quickstart.py [--rounds 150]
+    PYTHONPATH=src python examples/quickstart.py [--rounds 150] [--plan auto]
 
-``--scanned`` switches to round-engine v2: chunks of rounds compiled as one
-lax.scan (on-device-sampled client sets, host prefetch), same trajectory,
-less host overhead.  ``--device-data`` goes one tier further (data plane
-v1): the whole corpus is packed on device once and each chunk samples AND
-gathers its minibatches inside the scan — zero host round-trips, still the
-same trajectory.  ``--stream-data`` is the fourth tier (data plane v2): the
-corpus stays on host and a bounded device-side LRU shard cache
-(``--cache-clients``) holds only upcoming participants, with chunk i+1's
-uploads overlapped with chunk i's compute — for corpora that do not fit
-device memory, still the same trajectory.  Picking a plane: if the packed
-``K * n_max`` corpus (``DeviceFederatedDataset.nbytes``) fits device memory
-use ``--device-data``; if at least one chunk's participant working set fits
-a cache budget use ``--stream-data``; otherwise stay on ``--scanned``.
+Execution is declared with ``--plan`` (see the table in ``--help``): every
+plane trains the SAME trajectory, only the engine/data placement differs.
+``--plan auto`` lets the system resolve the plane from the memory budget
+(``--memory-budget-mb``) vs the packed corpus and the chunk working set —
+the decision is printed and logged.  The legacy ``--scanned`` /
+``--device-data`` / ``--stream-data`` flags remain as aliases.
 ``--fused-server`` independently routes FedMom through the fused Pallas
 server update (a win on TPU; interpret mode on CPU).  ``--hetero``
 additionally gives each client a random H_k <= H of local work per round
@@ -38,26 +31,49 @@ from repro.core import (
     fedmom,
 )
 from repro.data import FederatedDataset, synthetic_femnist
+from repro.launch.plan import CacheSpec, ExecutionPlan
 from repro.launch.train import FederatedTrainer
 from repro.models import small
 
+PLAN_TABLE = """\
+plan selection (--plan):
+  value       engine                        data plane           pick when
+  ---------   ---------------------------   ------------------   --------------------------------------------
+  auto        resolved at run time          resolved             let the budget rule decide (decision logged)
+  per-round   one jitted round_step/round   host assembly        every round needs an eval / a host decision
+  scanned     chunked lax.scan + prefetch   host assembly        corpus unbounded, or a host-only sampler
+  device      fused sample+gather scan      device-resident      packed K*n_max corpus fits device memory
+  streaming   fused scan over shard cache   bounded device LRU   corpus > device memory, chunk set fits cache
+
+auto rule: packed_nbytes <= budget -> device; else chunk working set
+(clients_per_round * chunk_rounds slots) <= budget -> streaming; else
+scanned.  Fused planes need a Device* sampler (DeviceSampleable /
+KeyedReplayable capabilities)."""
+
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=PLAN_TABLE,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--rounds", type=int, default=150)
     ap.add_argument("--clients", type=int, default=60)
     ap.add_argument("--m", type=int, default=2, help="active clients/round")
     ap.add_argument("--local-steps", type=int, default=10)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--plan", default=None,
+                    choices=("auto", "per-round", "scanned", "device",
+                             "streaming"),
+                    help="execution plan (see table below); default: "
+                         "per-round, or whatever a legacy flag selects")
+    ap.add_argument("--memory-budget-mb", type=float, default=None,
+                    help="device memory budget for --plan auto (default: "
+                         "what the backend reports; unbounded on CPU)")
     ap.add_argument("--scanned", action="store_true",
-                    help="round-engine v2: compiled multi-round chunks")
+                    help="legacy alias for --plan scanned")
     ap.add_argument("--device-data", action="store_true",
-                    help="data plane v1: device-resident corpus, sampling + "
-                         "minibatch gather fused into the scan")
+                    help="legacy alias for --plan device")
     ap.add_argument("--stream-data", action="store_true",
-                    help="data plane v2: host-resident corpus behind a "
-                         "bounded device shard cache with overlapped H2D "
-                         "prefetch (for corpora bigger than device memory)")
+                    help="legacy alias for --plan streaming")
     ap.add_argument("--cache-clients", type=int, default=None,
                     help="shard-cache capacity in clients (default: one "
                          "chunk's worst case, m * chunk_rounds)")
@@ -69,6 +85,15 @@ def main():
     ap.add_argument("--hetero", action="store_true",
                     help="random per-client local work H_k <= H per round")
     args = ap.parse_args()
+
+    plane = args.plan or ("streaming" if args.stream_data
+                          else "device" if args.device_data
+                          else "scanned" if args.scanned else "per-round")
+    budget = (int(args.memory_budget_mb * 2**20)
+              if args.memory_budget_mb is not None else None)
+    plan = ExecutionPlan(plane=plane, chunk_rounds=args.chunk_rounds,
+                         cache=CacheSpec(clients=args.cache_clients),
+                         memory_budget_bytes=budget)
 
     clients, counts = synthetic_femnist(n_clients=args.clients, seed=0)
     ds = FederatedDataset(clients, seed=1)
@@ -101,41 +126,29 @@ def main():
                       ("FedMom (eta=K/M, beta=0.9)",
                        fedmom(eta=K / M, beta=0.9,
                               use_fused_kernel=args.fused_server))]:
-        tier = (" [stream-data]" if args.stream_data
-                else " [device-data]" if args.device_data
-                else " [scanned]" if args.scanned else "")
-        print(f"\n=== {name}{tier}"
+        print(f"\n=== {name} [plan={plan.plane}]"
               f"{' [hetero H_k]' if args.hetero else ''} ===")
-        needs_device_sampler = (args.scanned or args.device_data
-                                or args.stream_data)
-        sampler = (DeviceUniformSampler(pop, M, seed=2)
-                   if needs_device_sampler
-                   else UniformSampler(pop, M, seed=2))
+        # the per-round plane works with the paper's stateful sampler; the
+        # compiled/fused planes (and auto, which may resolve to one) need
+        # the keyed Device* capabilities
+        sampler = (UniformSampler(pop, M, seed=2)
+                   if plan.plane == "per_round"
+                   else DeviceUniformSampler(pop, M, seed=2))
         trainer = FederatedTrainer(
             loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg,
             dataset=ds, sampler=sampler, hetero_steps_fn=hetero_fn,
-            state=opt.init(w0)).set_local_batch(10)
-        if args.stream_data:
-            hist = trainer.run_streaming(args.rounds,
-                                         chunk_rounds=args.chunk_rounds,
-                                         cache_clients=args.cache_clients,
-                                         eval_fn=eval_fn)
-            c = trainer.stream_cache
-            print(f"shard cache: {len(c.resident())}/{K} clients resident "
-                  f"in {c.slots} slots ({c.nbytes / 2**20:.2f} MiB of "
-                  f"{trainer.streaming_dataset().packed_nbytes / 2**20:.2f} "
-                  f"MiB packed), hit-rate {c.hit_rate:.1%}, "
-                  f"{c.evictions} evictions")
-        elif args.device_data:
-            hist = trainer.run_device(args.rounds,
-                                      chunk_rounds=args.chunk_rounds,
-                                      eval_fn=eval_fn)
-        elif args.scanned:
-            hist = trainer.run_scanned(args.rounds,
-                                       chunk_rounds=args.chunk_rounds,
-                                       eval_fn=eval_fn)
-        else:
-            hist = trainer.run(args.rounds, log_every=25, eval_fn=eval_fn)
+            state=opt.init(w0), local_batch=10)
+        hist = trainer.run(args.rounds, plan=plan, log_every=25,
+                           eval_fn=eval_fn)
+        cache = trainer.stream_cache
+        if cache is not None:
+            sds = trainer.streaming_dataset()
+            print(f"shard cache: {len(cache.resident())}/{K} clients "
+                  f"resident in {cache.slots} slots "
+                  f"({cache.nbytes / 2**20:.2f} MiB of "
+                  f"{sds.packed_nbytes / 2**20:.2f} MiB packed), "
+                  f"hit-rate {cache.hit_rate:.1%}, "
+                  f"{cache.evictions} evictions")
         print(f"final: loss={hist[-1]['loss']:.4f} "
               f"acc={hist[-1]['eval_acc']:.3f}")
 

@@ -85,10 +85,13 @@ class AsyncCheckpointWriter:
                 self._failure.append(exc)
 
     def submit(self, path: str, state: ServerState,
-               meta: dict | None = None):
+               meta: dict | None = None, copy: bool = True):
+        """``copy=False`` skips the device-side snapshot when the caller
+        already holds one (e.g. a state copied before its buffer was
+        donated, submitted later so the metrics log is appended first)."""
         if self._failure:
             raise self._failure[0]
-        snap = jax.tree.map(jnp.copy, state)    # decouple from donation
+        snap = jax.tree.map(jnp.copy, state) if copy else state
         self._q.put((path, snap, meta))
 
     def close(self, raise_failure: bool = True):

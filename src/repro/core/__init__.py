@@ -9,8 +9,10 @@ from repro.core.multiround import (  # noqa: F401
 from repro.core.sampling import (  # noqa: F401
     ClientPopulation,
     DeviceDiurnalSampler,
+    DeviceSampleable,
     DeviceUniformSampler,
     DiurnalSampler,
+    KeyedReplayable,
     UniformSampler,
     participants_in_span,
 )

@@ -32,10 +32,10 @@ Three tiers of host involvement, one algorithm:
 
 The ``dataset`` of ``scan_rounds_ondevice`` is anything honoring the
 ``gather_round_batch(key, t, client_ids, H, b)`` contract: the fully packed
-``DeviceFederatedDataset`` (data plane v1, ``run_device``) or a streaming
+``DeviceFederatedDataset`` (data plane v1, ``plan="device"``) or a streaming
 ``data.stream.CacheView`` over a bounded shard cache (data plane v2,
-``run_streaming`` — the fourth driver path).  Both draw the same keyed
-minibatch indices, so every path trains the same trajectory.
+``plan="streaming"`` — the fourth execution plane).  Both draw the same
+keyed minibatch indices, so every path trains the same trajectory.
 """
 from __future__ import annotations
 

@@ -22,9 +22,42 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
+
+
+@runtime_checkable
+class DeviceSampleable(Protocol):
+    """Capability: S_t can be drawn *inside* a compiled scan.
+
+    Required by the fused on-device planes (``plan="device"`` /
+    ``plan="streaming"``): ``sample_device(key, t)`` must be traceable
+    (``t`` may be a tracer) and keyed by ``(key, t)`` alone.  The host
+    ``sample(t)`` need not replay it — see ``KeyedReplayable`` for that
+    stronger contract.  Checked structurally via ``isinstance`` (a
+    ``runtime_checkable`` Protocol), replacing the old ``hasattr`` probes.
+    """
+
+    def sample(self, t: int = 0) -> Tuple[np.ndarray, np.ndarray]: ...
+
+    def sample_device(self, key, t): ...
+
+
+@runtime_checkable
+class KeyedReplayable(DeviceSampleable, Protocol):
+    """Capability: the host path replays the keyed device draw exactly.
+
+    ``base_key()`` exposes the draw key and ``sample(t)`` must equal an
+    eager ``sample_device(base_key(), t)`` — draws depend only on
+    ``(seed, t)``, never on sequential host RNG state.  This is what lets
+    the streaming plane stage chunk i+1's shards ahead of its compute
+    (``participants_in_span``), and what makes resumed runs bit-equal to
+    uninterrupted ones.  ``Device*`` samplers provide it; the stateful
+    ``UniformSampler`` / ``DiurnalSampler`` deliberately do not.
+    """
+
+    def base_key(self): ...
 
 
 @dataclass
@@ -171,14 +204,13 @@ def participants_in_span(sampler, t_lo: int, t_hi: int) -> list:
     the LRU recency order for the shard cache.  Padded diurnal slots are
     included — zero-weight slots still index data in the gather.
     """
-    if not (hasattr(sampler, "sample_device")
-            and hasattr(sampler, "base_key")):
+    if not isinstance(sampler, KeyedReplayable):
         raise ValueError(
-            "participants_in_span needs a keyed Device* sampler whose host "
-            "sample REPLAYS the (seed, t)-keyed device draw (base_key + "
-            "sample_device, e.g. DeviceUniformSampler): a stateful host "
-            "sampler would peek a different client set than the in-scan "
-            "draw uses")
+            "participants_in_span needs the KeyedReplayable capability — a "
+            "keyed Device* sampler whose host sample REPLAYS the "
+            "(seed, t)-keyed device draw (base_key + sample_device, e.g. "
+            "DeviceUniformSampler): a stateful host sampler would peek a "
+            "different client set than the in-scan draw uses")
     seen: dict = {}
     for t in range(t_lo, t_hi):
         idx, _ = sampler.sample(t)

@@ -14,9 +14,10 @@ Memory ceiling: packing costs ``K * n_max * itemsize`` per field — the
 *maximum* client size times the client count, not the corpus size — so it is
 the right plane when client sizes are bounded (paper Table 2: FEMNIST
 n_max ~ a few hundred 28x28 images => tens of MB for K in the hundreds).
-For corpora past device memory, stay on the host prefetch-queue driver
-(``FederatedTrainer.run_scanned``); ``nbytes`` reports the packed footprint
-so callers can decide.
+For corpora past device memory, use the shard-cached streaming plane
+(``plan="streaming"``) or the host prefetch-queue plane (``plan="scanned"``);
+``nbytes`` reports the packed footprint, which is what ``plan="auto"``
+compares against the memory budget to decide.
 
 The class is a pytree, so it is passed to jitted chunk functions as a plain
 argument (no baked-in constants; the XLA executable is reusable across

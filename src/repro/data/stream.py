@@ -23,10 +23,11 @@ only the shards of *upcoming participants* in a bounded device-side cache:
   device-resident gather, keeping all four driver paths on one trajectory.
 
 Overlapped H2D prefetch: ``DeviceUniformSampler``'s host path replays the
-device draw, so chunk i+1's participants are known before its compute is
-dispatched.  The streaming driver (``FederatedTrainer.run_streaming``) calls
-``ensure`` for chunk i+1 right after dispatching chunk i: the scatters are
-dispatched asynchronously and the uploads overlap chunk i's scanned compute.
+device draw (the ``KeyedReplayable`` capability), so chunk i+1's
+participants are known before its compute is dispatched.  The streaming
+plane (``FederatedTrainer.run(n, plan="streaming")``) calls ``ensure`` for
+chunk i+1 right after dispatching chunk i: the scatters are dispatched
+asynchronously and the uploads overlap chunk i's scanned compute.
 Updates are functional (``.at[slots].set``), so the arrays captured by chunk
 i's ``CacheView`` are immutable — later uploads and evictions can never
 corrupt an in-flight chunk (double buffering for free).

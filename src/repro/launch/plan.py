@@ -1,0 +1,429 @@
+"""Declarative execution plans for ``FederatedTrainer.run`` (the driver API).
+
+One algorithm (FedMom, eq. (3)), one trajectory, four execution tiers.  The
+repo used to expose the tiers as four divergent ``run_*`` entry points whose
+knobs and capability rules lived in docstrings; this module makes the choice
+*declarative*: callers say **what** to train and (optionally) the budget, and
+the system picks **how**:
+
+    trainer.run(n_rounds, plan="auto")                # resolved + audited
+    trainer.run(n_rounds, plan=ExecutionPlan(
+        plane="streaming", chunk_rounds=50,
+        cache=CacheSpec(bytes=1 << 30),
+        ckpt=CkptSpec(every=100, path="ck.npz")))
+
+Pieces:
+
+* ``ExecutionPlan`` — frozen dataclass naming the plane (``"auto" |
+  "per_round" | "scanned" | "device" | "streaming"``) plus the knobs every
+  tier shares (``chunk_rounds``, ``prefetch``, ``cache=CacheSpec``,
+  ``eval=EvalSpec``, ``ckpt=CkptSpec``, ``memory_budget_bytes``,
+  ``local_batch``).  Validated eagerly (``PlanError`` on bad values).
+* ``resolve`` — turns ``plane="auto"`` into a concrete plane via the
+  ROADMAP decision rule: packed corpus (``packed_nbytes``) fits the device
+  memory budget -> **device**; otherwise one chunk's participant working set
+  fits -> **streaming**; otherwise (or when the sampler lacks the needed
+  capability) -> **scanned**.  Every resolution returns a ``PlanDecision``
+  that the trainer logs into ``TrainSession.plan_log`` (and, for auto runs,
+  into history + the metrics jsonl) so runs are auditable.
+* Capability checks are explicit ``Protocol``s (``DeviceSampleable``,
+  ``KeyedReplayable`` in ``core/sampling.py``), not ``hasattr`` duck-typing;
+  a plane whose capability is missing raises a structured ``PlanError``
+  naming the missing capability and the nearest viable plane.
+* ``TrainSession`` — the long-lived resources one logical training workload
+  owns across ``run()`` calls: the packed ``DeviceFederatedDataset``, the
+  host ``StreamingFederatedDataset``, the persistent ``ShardCache`` (warm
+  across calls: an eval loop or a resumed run re-uploads nothing for
+  already-resident clients) and the jit caches.  Trainers create one
+  implicitly; pass ``session=`` to share it between trainer instances.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Union
+
+from repro.core.sampling import DeviceSampleable, KeyedReplayable
+from repro.data.device import DeviceFederatedDataset
+from repro.data.stream import ShardCache, StreamingFederatedDataset
+
+PLANES = ("per_round", "scanned", "device", "streaming")
+_PLANE_ALIASES = {"per-round": "per_round", "python-loop": "per_round"}
+
+
+class PlanError(ValueError):
+    """A plan that cannot run as declared.
+
+    Structured: ``plane`` is the requested plane, ``missing`` names the
+    absent sampler capability (``"DeviceSampleable"`` / ``"KeyedReplayable"``,
+    or ``None`` for plain validation errors) and ``nearest`` names the
+    closest plane that *would* run with the given sampler/dataset.
+    """
+
+    def __init__(self, message: str, plane: Optional[str] = None,
+                 missing: Optional[str] = None,
+                 nearest: Optional[str] = None):
+        super().__init__(message)
+        self.plane = plane
+        self.missing = missing
+        self.nearest = nearest
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    """Shard-cache budget for the streaming plane (and the working-set term
+    of the auto rule): capacity in ``clients`` (slots) and/or ``bytes``
+    (tighter wins); both ``None`` means one chunk's worst-case working set,
+    ``clients_per_round * chunk_rounds`` slots."""
+    clients: Optional[int] = None
+    bytes: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class EvalSpec:
+    """Eval cadence in rounds.  Only the per-round plane can honor it
+    exactly; chunked planes eval once per chunk boundary (rounds inside a
+    chunk execute in one compiled scan)."""
+    cadence: int = 50
+
+
+@dataclass(frozen=True)
+class CkptSpec:
+    """Checkpoint sink: save every ``every`` rounds to ``path`` (async,
+    tmp+rename atomic).  Unset fields keep the trainer's configured values
+    (``path=None`` keeps ``ckpt_path``, ``every=None`` keeps
+    ``ckpt_every``); an explicit ``every=0`` disables periodic saves."""
+    every: Optional[int] = None
+    path: Optional[str] = None
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """What to run and under which budget — the engine picks the rest.
+
+    ``plane="auto"`` resolves against ``memory_budget_bytes`` (default: the
+    backend's reported device memory, unlimited when the backend reports
+    none — pass an explicit budget to constrain CPU runs).  ``prefetch`` is
+    the host prefetch-queue depth on the scanned plane and the
+    overlap-uploads-with-compute switch (truthiness) on the streaming plane.
+    ``local_batch`` overrides the trainer's ``local_batch`` field when set.
+    """
+    plane: str = "auto"
+    chunk_rounds: int = 25
+    prefetch: int = 2
+    cache: CacheSpec = CacheSpec()
+    eval: EvalSpec = EvalSpec()
+    ckpt: Optional[CkptSpec] = None
+    memory_budget_bytes: Optional[int] = None
+    local_batch: Optional[int] = None
+
+    def __post_init__(self):
+        plane = _PLANE_ALIASES.get(self.plane, self.plane)
+        object.__setattr__(self, "plane", plane)
+        if plane not in PLANES + ("auto",):
+            raise PlanError(
+                f"unknown plane {self.plane!r}: want 'auto' or one of "
+                f"{PLANES}", plane=self.plane)
+        if not isinstance(self.chunk_rounds, int) or self.chunk_rounds < 1:
+            raise PlanError(
+                f"chunk_rounds must be an int >= 1, got "
+                f"{self.chunk_rounds!r}", plane=plane)
+        if not isinstance(self.prefetch, int) or self.prefetch < 0:
+            raise PlanError(
+                f"prefetch must be an int >= 0, got {self.prefetch!r}",
+                plane=plane)
+        for name, v in (("cache.clients", self.cache.clients),
+                        ("cache.bytes", self.cache.bytes),
+                        ("memory_budget_bytes", self.memory_budget_bytes),
+                        ("local_batch", self.local_batch)):
+            if v is not None and (not isinstance(v, int) or v < 1):
+                raise PlanError(f"{name} must be a positive int, got {v!r}",
+                                plane=plane)
+        if not isinstance(self.eval.cadence, int) or self.eval.cadence < 1:
+            raise PlanError(
+                f"eval.cadence must be an int >= 1, got "
+                f"{self.eval.cadence!r}", plane=plane)
+        if (self.ckpt is not None and self.ckpt.every is not None
+                and self.ckpt.every < 0):
+            raise PlanError(
+                f"ckpt.every must be >= 0, got {self.ckpt.every}",
+                plane=plane)
+
+
+def as_plan(plan: Union[None, str, ExecutionPlan]) -> ExecutionPlan:
+    """Normalize ``run(plan=...)`` input: ``None`` keeps the historical
+    per-round behavior, a string names a plane (or ``"auto"``), an
+    ``ExecutionPlan`` passes through (already validated)."""
+    if plan is None:
+        return ExecutionPlan(plane="per_round")
+    if isinstance(plan, str):
+        return ExecutionPlan(plane=plan)
+    if isinstance(plan, ExecutionPlan):
+        return plan
+    if isinstance(plan, int):
+        # run()'s second positional used to be log_every — point migrating
+        # callers at the keyword instead of a bare type error
+        raise PlanError(
+            f"plan must be None, a plane name or an ExecutionPlan, got "
+            f"{plan!r} — run()'s second positional argument is now `plan`; "
+            f"if you meant the eval/log cadence, pass log_every={plan!r} "
+            f"by keyword (or EvalSpec(cadence={plan!r}))")
+    raise PlanError(
+        f"plan must be None, a plane name or an ExecutionPlan, "
+        f"got {type(plan).__name__}")
+
+
+@dataclass
+class PlanDecision:
+    """The audited outcome of resolving a plan (``record()`` is the
+    jsonl-able form logged to ``TrainSession.plan_log`` and, for auto runs,
+    to history + the metrics log; no ``"round"`` key, so resume's
+    ``prune_metrics`` never drops it)."""
+    plane: str
+    auto: bool
+    reason: str
+    packed_nbytes: Optional[int] = None
+    budget_bytes: Optional[int] = None
+    working_set_nbytes: Optional[int] = None
+
+    def record(self) -> dict:
+        rec = {"event": "plan", "plane": self.plane, "auto": self.auto,
+               "reason": self.reason}
+        for k in ("packed_nbytes", "budget_bytes", "working_set_nbytes"):
+            v = getattr(self, k)
+            if v is not None:
+                rec[k] = int(v)
+        return rec
+
+
+def device_memory_budget() -> Optional[int]:
+    """Device memory limit in bytes, when the backend reports one (TPU/GPU
+    ``memory_stats()['bytes_limit']``); ``None`` on backends that don't
+    (CPU) — the auto rule then treats memory as unbounded unless the plan
+    carries an explicit ``memory_budget_bytes``."""
+    import jax
+
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    limit = stats.get("bytes_limit")
+    return int(limit) if limit else None
+
+
+_CAPS = {"per_round": None, "scanned": None,
+         "device": ("DeviceSampleable", DeviceSampleable),
+         "streaming": ("KeyedReplayable", KeyedReplayable)}
+_CAP_DETAIL = {
+    "DeviceSampleable": "a traceable sample_device(key, t) drawn inside the "
+                        "compiled scan",
+    "KeyedReplayable": "a traceable sample_device(key, t) plus base_key(), "
+                       "with the host sample(t) a stateless replay of the "
+                       "(seed, t)-keyed device draw",
+}
+
+
+def nearest_viable_plane(sampler, dataset) -> str:
+    """Most capable plane this sampler/dataset pair can actually run."""
+    for plane in ("streaming", "device", "scanned", "per_round"):
+        name_cap = _CAPS[plane]
+        if name_cap is not None and not isinstance(sampler, name_cap[1]):
+            continue
+        if _dataset_supports(plane, dataset):
+            return plane
+    return "per_round"
+
+
+def _dataset_supports(plane: str, dataset) -> bool:
+    """Which planes a dataset can feed.  The two specialized dataset types
+    pin their own plane; a host ``FederatedDataset`` (or a compatible
+    custom dataset: keyed ``round_batches`` for the host-assembly planes,
+    per-client ``data`` shards for the packable/streamable ones) feeds any
+    plane."""
+    if isinstance(dataset, DeviceFederatedDataset):
+        return plane == "device"
+    if isinstance(dataset, StreamingFederatedDataset):
+        return plane == "streaming"
+    if plane in ("per_round", "scanned"):
+        return hasattr(dataset, "round_batches")
+    # packing/streaming build from per-client shards + the draw-keying seed
+    return hasattr(dataset, "data") and hasattr(dataset, "seed")
+
+
+def check_plane(plane: str, sampler, dataset) -> None:
+    """Raise a structured ``PlanError`` when ``plane`` cannot run with this
+    sampler/dataset (missing capability Protocol or unsupported dataset)."""
+    name_cap = _CAPS[plane]
+    if name_cap is not None and not isinstance(sampler, name_cap[1]):
+        name, _ = name_cap
+        nearest = nearest_viable_plane(sampler, dataset)
+        raise PlanError(
+            f"plane {plane!r} needs sampler capability {name} "
+            f"({_CAP_DETAIL[name]}) but {type(sampler).__name__} does not "
+            f"provide it; nearest viable plane: {nearest!r}",
+            plane=plane, missing=name, nearest=nearest)
+    if not _dataset_supports(plane, dataset):
+        nearest = nearest_viable_plane(sampler, dataset)
+        raise PlanError(
+            f"plane {plane!r} cannot use a {type(dataset).__name__} "
+            f"(per_round/scanned need host round_batches; device/streaming "
+            f"need packable per-client host data or an already-matching "
+            f"dataset); nearest viable plane: {nearest!r}",
+            plane=plane, nearest=nearest)
+
+
+def resolve(plan: ExecutionPlan, trainer, n_rounds: int) -> PlanDecision:
+    """Resolve ``plan`` to a concrete plane for ``trainer`` (the ROADMAP
+    decision rule, now executable).  Explicit planes are capability-checked;
+    ``"auto"`` compares the packed corpus and the chunk working set against
+    the memory budget.  Pure resolution — builds at most the host-side
+    streaming metadata, never uploads data."""
+    sampler, dataset = trainer.sampler, trainer.dataset
+    if plan.plane != "auto":
+        check_plane(plan.plane, sampler, dataset)
+        return PlanDecision(plan.plane, False,
+                            f"explicit plane {plan.plane!r}")
+    if isinstance(dataset, StreamingFederatedDataset):
+        check_plane("streaming", sampler, dataset)
+        return PlanDecision(
+            "streaming", True,
+            "dataset is a host-resident StreamingFederatedDataset")
+    if isinstance(dataset, DeviceFederatedDataset):
+        check_plane("device", sampler, dataset)
+        return PlanDecision(
+            "device", True, "dataset is already device-resident")
+    if not _dataset_supports("device", dataset):
+        # a host-assembly-only dataset (keyed round_batches but no
+        # per-client shards to pack or stream): the fused planes are out
+        # before any budget math
+        check_plane("scanned", sampler, dataset)
+        return PlanDecision(
+            "scanned", True,
+            f"dataset {type(dataset).__name__} supports only host assembly "
+            f"(no per-client data shards to pack or stream)")
+    budget = (plan.memory_budget_bytes if plan.memory_budget_bytes is not None
+              else device_memory_budget())
+    sds = trainer.session.streaming_dataset(dataset)   # host metadata only
+    packed = sds.packed_nbytes
+    if isinstance(sampler, DeviceSampleable) and (budget is None
+                                                  or packed <= budget):
+        return PlanDecision(
+            "device", True,
+            f"packed corpus ({packed} B) fits the device memory budget "
+            f"({'unbounded' if budget is None else f'{budget} B'})",
+            packed_nbytes=packed, budget_bytes=budget)
+    if plan.cache.clients is not None:
+        slots = plan.cache.clients
+    elif plan.cache.bytes is not None:
+        slots = max(1, plan.cache.bytes // sds.slot_nbytes)
+    else:
+        slots = trainer.rcfg.clients_per_round * plan.chunk_rounds
+    slots = min(slots, sds.n_clients)
+    working_set = slots * sds.slot_nbytes
+    if isinstance(sampler, KeyedReplayable) and (budget is None
+                                                 or working_set <= budget):
+        return PlanDecision(
+            "streaming", True,
+            f"packed corpus ({packed} B) exceeds the budget ({budget} B) "
+            f"but one chunk's participant working set ({slots} slots, "
+            f"{working_set} B) fits it",
+            packed_nbytes=packed, budget_bytes=budget,
+            working_set_nbytes=working_set)
+    if not isinstance(sampler, DeviceSampleable):
+        why = (f"sampler {type(sampler).__name__} lacks DeviceSampleable "
+               f"(no traceable sample_device), so the fused on-device "
+               f"planes are out")
+    elif not isinstance(sampler, KeyedReplayable):
+        why = (f"corpus exceeds the budget and sampler "
+               f"{type(sampler).__name__} lacks KeyedReplayable (host "
+               f"sample does not replay the keyed draw), so streaming is "
+               f"out")
+    else:
+        why = (f"even one chunk's participant working set ({working_set} B) "
+               f"exceeds the budget ({budget} B)")
+    check_plane("scanned", sampler, dataset)   # structured error, never a
+    return PlanDecision(                       # raw crash downstream
+        "scanned", True, f"host prefetch-queue fallback: {why}",
+        packed_nbytes=packed, budget_bytes=budget,
+        working_set_nbytes=working_set)
+
+
+class _IdKey:
+    """Identity-keyed jit-cache key component.  Holds a strong reference, so
+    the wrapped object's ``id`` can never be recycled while a cache entry
+    keyed on it is alive (the hazard of keying on bare ``id(obj)``)."""
+    __slots__ = ("obj",)
+
+    def __init__(self, obj):
+        self.obj = obj
+
+    def __hash__(self):
+        return id(self.obj)
+
+    def __eq__(self, other):
+        return isinstance(other, _IdKey) and other.obj is self.obj
+
+    def __repr__(self):
+        return f"_IdKey({type(self.obj).__name__}@{id(self.obj):#x})"
+
+
+@dataclass
+class TrainSession:
+    """Warm execution resources that outlive a single ``run()`` call.
+
+    Owns the packed/streaming datasets (built once), the persistent
+    ``ShardCache`` (resident shards survive across ``run()`` calls — a
+    second run, an eval loop or a resumed run re-uploads nothing for
+    already-cached clients) and the jit caches (keyed by config identity, so
+    a fresh trainer sharing the session — e.g. rebuilt for a resume — reuses
+    compiled executables).  ``plan_log`` is the in-memory audit trail of
+    every plan resolution."""
+    device_ds: Optional[DeviceFederatedDataset] = None
+    stream_ds: Optional[StreamingFederatedDataset] = None
+    shard_cache: Optional[ShardCache] = None
+    jit_cache: dict = field(default_factory=dict)
+    plan_log: list = field(default_factory=list)
+    _device_src: Any = None
+    _stream_src: Any = None
+    _cache_key: Any = None
+
+    def jit_fn(self, key, build):
+        fn = self.jit_cache.get(key)
+        if fn is None:
+            fn = self.jit_cache[key] = build()
+        return fn
+
+    def device_dataset(self, dataset,
+                       shard_clients: bool = True) -> DeviceFederatedDataset:
+        if self.device_ds is None or self._device_src is not dataset:
+            if isinstance(dataset, DeviceFederatedDataset):
+                self.device_ds = dataset
+            else:
+                self.device_ds = DeviceFederatedDataset.from_federated(
+                    dataset, shard_clients=shard_clients)
+            self._device_src = dataset
+        return self.device_ds
+
+    def streaming_dataset(self, dataset) -> StreamingFederatedDataset:
+        if self.stream_ds is None or self._stream_src is not dataset:
+            if isinstance(dataset, StreamingFederatedDataset):
+                self.stream_ds = dataset
+            else:
+                self.stream_ds = StreamingFederatedDataset.from_federated(
+                    dataset)
+            self._stream_src = dataset
+        return self.stream_ds
+
+    def shard_cache_for(self, sds: StreamingFederatedDataset,
+                        capacity_clients: Optional[int],
+                        capacity_bytes: Optional[int]) -> ShardCache:
+        """The persistent cache, rebuilt only when the dataset or the
+        declared capacity changes (same capacity => warm reuse)."""
+        key = (id(sds), capacity_clients, capacity_bytes)
+        if self.shard_cache is None or self._cache_key != key:
+            self.shard_cache = ShardCache(sds,
+                                          capacity_clients=capacity_clients,
+                                          capacity_bytes=capacity_bytes)
+            self._cache_key = key
+        return self.shard_cache

@@ -1,65 +1,60 @@
-"""Federated training driver (the runnable end-to-end loop).
+"""Federated training driver: one ``run()``, a declarative ``ExecutionPlan``.
 
 Couples the host-side scheduler (client sampling, round-batch assembly,
 checkpointing, logging) with the jitted round engine.  Used by the examples
 and the paper-reproduction benchmarks; the same driver scales from the
 paper's LeNet to the assigned-architecture reduced configs.
 
-Four execution tiers over the SAME algorithm (trajectory-equivalent, see
-tests/test_multiround.py, tests/test_device_data.py and
-tests/test_stream_data.py on the shared tests/_trajectory.py harness):
+The entry point is ``FederatedTrainer.run(n_rounds, plan=...)``.  ``plan``
+is a plane name or an ``ExecutionPlan`` (``launch/plan.py``); all four
+execution tiers train the SAME algorithm — trajectory-equivalent bit for
+bit, certified on the shared ``tests/_trajectory.py`` harness:
 
-* ``run(n_rounds)`` — round-engine v1: one jitted ``round_step`` per round,
-  host Python between rounds.  Simple, observable, and the right tool when
-  every round needs an eval or an external scheduling decision.
-* ``run_scanned(n_rounds, chunk_rounds=C)`` — round-engine v2: rounds are
-  executed in chunks of ``C`` as a single jitted ``lax.scan``
-  (``core/multiround.scan_rounds``) with the ``ServerState`` donated between
-  chunks, while a background producer thread assembles the next chunk's
-  round batches (a bounded prefetch queue).  Host work per round drops to
-  ~zero: one dispatch, one metrics sync and one checkpoint *per chunk*
-  instead of per round.
-* ``run_device(n_rounds, chunk_rounds=C)`` — data plane v1: the corpus is
-  packed once into a device-resident ``DeviceFederatedDataset`` and each
-  chunk runs ``core/multiround.scan_rounds_ondevice`` — client sampling AND
-  minibatch gather fused into the scan, zero host round-trips per chunk.
-  Per-chunk work on the host is O(chunk) scalars (round ids, lrs, step
-  masks), never data.  Draws are keyed by ``(seed, t, client_id)`` on both
-  planes, so all tiers stay on one trajectory.
-* ``run_streaming(n_rounds, chunk_rounds=C, cache_bytes=...)`` — data plane
-  v2: the corpus stays on HOST as per-client shards and a bounded
-  device-side LRU ``ShardCache`` holds only upcoming participants' shards
-  (``data/stream.py``).  Each chunk runs the same fused
-  ``scan_rounds_ondevice`` over a compacted ``[cache_slots, n_max, ...]``
-  view with a client→slot indirection table; because the keyed sampler
-  replays on host, chunk i+1's shard uploads are dispatched right after
-  chunk i's compute and overlap it (double-buffered staging).  The plane for
-  corpora whose packed ``nbytes`` exceed device memory.
+* ``plan="per_round"`` (the default when ``plan`` is omitted) — one jitted
+  ``round_step`` per round, host Python between rounds.  Simple, observable,
+  and the right tool when every round needs an eval or an external
+  scheduling decision (``EvalSpec.cadence`` is honored exactly).
+* ``plan="scanned"`` — chunks of ``chunk_rounds`` rounds execute as a single
+  jitted ``lax.scan`` (``core/multiround.scan_rounds``) with the
+  ``ServerState`` donated between chunks, while a background producer thread
+  assembles the next chunk's round batches (a bounded prefetch queue,
+  depth ``prefetch``).  Host work per round drops to ~zero.
+* ``plan="device"`` — the corpus is packed once into a device-resident
+  ``DeviceFederatedDataset`` and each chunk runs
+  ``core/multiround.scan_rounds_ondevice``: client sampling AND minibatch
+  gather fused into the scan, zero host round-trips per chunk.  Needs the
+  ``DeviceSampleable`` sampler capability.
+* ``plan="streaming"`` — the corpus stays on HOST as per-client shards and a
+  bounded device-side LRU ``ShardCache`` (``cache=CacheSpec(...)``) holds
+  only upcoming participants' shards, with chunk i+1's uploads dispatched
+  right after chunk i's compute (double-buffered staging).  Needs the
+  ``KeyedReplayable`` capability (the host replay is what names chunk i+1's
+  participants ahead of time).
+* ``plan="auto"`` — the system resolves the plane from the memory budget vs
+  ``packed_nbytes`` and the chunk working-set rule (``launch/plan.py:
+  resolve``); the decision is logged into ``session.plan_log``, the history
+  and the metrics jsonl, and the resolved run is bit-equal to requesting
+  that plane directly.
 
-Checkpointing in every tier goes through ``checkpoint.AsyncCheckpointWriter``:
-the device-to-host copy and npz write run on a background thread (flushed
-before ``run_*`` returns), keeping the save off the critical path while
-preserving tmp+rename atomicity.
+A ``TrainSession`` (created implicitly, shareable via ``session=``) owns the
+packed/streaming datasets, the persistent ``ShardCache`` and the jit caches
+across ``run()`` calls: a second ``run()``, an eval loop, or a resumed run
+re-uploads nothing for already-resident clients and recompiles nothing.
 
-Resuming: every ``run_*`` takes ``resume=True`` — ``checkpoint.latest_round``
-+ ``restore_state`` pick the trajectory up at the round after the last
-durable save.  Because sampling and minibatch draws are keyed by round (never
-by sequential RNG state), a resumed run is bit-equal to the uninterrupted one
-(tests/test_stream_data.py certifies it per driver).
+The legacy ``run_scanned`` / ``run_device`` / ``run_streaming`` drivers
+remain as thin deprecated shims over ``run(plan=...)`` (kept bit-equal by a
+dedicated CI lane until removal).
 
-Heterogeneous local work (stragglers / partial work): set
-``hetero_steps_fn(t) -> [C] ints`` and each round's clients run only their
-first H_k of the H staged local steps, via the step-mask path of
-``round_step`` (weights stay n_k/n — eq. (3) is exact under partial work).
-All drivers honor it identically.
-
-Sampling: any sampler with ``sample(t)`` works; a ``Device*`` sampler
-additionally guarantees the host draw replays the device draw
-(``sample_device``), keeping every tier on one trajectory.  Time-varying
-participation (``DeviceDiurnalSampler``) works in all tiers via the
-padded-C convention: the engine is lowered for ``sampler.lowered_clients``
-slots (= m_max) and inactive slots carry zero weight, so
-``rcfg.clients_per_round`` must equal that extent (validated at run time).
+Checkpointing in every tier goes through ``checkpoint.AsyncCheckpointWriter``
+(device-to-host copy + npz write on a background thread, flushed before
+``run`` returns, tmp+rename atomic).  Every run takes ``resume=True`` —
+``checkpoint.latest_round`` + ``restore_state`` pick the trajectory up at
+the round after the last durable save; keyed sampling/minibatch draws make
+the resumed run bit-equal to an uninterrupted one.  Heterogeneous local work
+(stragglers): ``hetero_steps_fn(t) -> [C] H_k`` runs each client's first H_k
+of the H staged local steps in every tier identically.  Time-varying
+participation (``DeviceDiurnalSampler``) works in all tiers via the padded-C
+convention (``rcfg.clients_per_round`` must equal ``sampler.lowered_clients``).
 """
 from __future__ import annotations
 
@@ -67,9 +62,10 @@ import contextlib
 import queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -79,11 +75,40 @@ from repro.checkpoint import (AsyncCheckpointWriter, append_metrics,
                               latest_round, prune_metrics, restore_state)
 from repro.core import RoundConfig, round_step, scan_rounds
 from repro.core.multiround import scan_rounds_ondevice
-from repro.core.sampling import UniformSampler, participants_in_span
+from repro.core.sampling import (KeyedReplayable, UniformSampler,
+                                 participants_in_span)
 from repro.core.server_opt import ServerOpt, ServerState
 from repro.data.device import DeviceFederatedDataset
 from repro.data.federated import FederatedDataset
 from repro.data.stream import ShardCache, StreamingFederatedDataset
+from repro.launch.plan import (CacheSpec, CkptSpec, ExecutionPlan, PlanError,
+                               TrainSession, _IdKey, as_plan, resolve)
+
+
+def _cache_counters(cache: Optional[ShardCache]):
+    return None if cache is None else (cache.hits, cache.misses,
+                                       cache.evictions)
+
+
+def _cache_stats(before, cache: Optional[ShardCache]):
+    """Per-chunk delta of the cache counters (+ cumulative hit rate), the
+    durable form of the stats that used to live only on the live cache
+    object.  Staging overlaps compute, so uploads dispatched for chunk i+1
+    during chunk i land on chunk i's record; the per-run sums are exact."""
+    if cache is None:
+        return None
+    return {"cache_hits": cache.hits - before[0],
+            "cache_misses": cache.misses - before[1],
+            "cache_evictions": cache.evictions - before[2],
+            "cache_hit_rate": round(cache.hit_rate, 6)}
+
+
+def _warn_shim(old: str, plane: str):
+    warnings.warn(
+        f"FederatedTrainer.{old}(...) is deprecated: use "
+        f"run(n_rounds, plan=ExecutionPlan(plane={plane!r}, ...)) — the shim "
+        f"stays bit-equal until removal (CI certifies it)",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclass
@@ -101,47 +126,103 @@ class FederatedTrainer:
     ckpt_path: Optional[str] = None
     ckpt_every: int = 0
     metrics_path: Optional[str] = None       # durable per-round jsonl log
+    local_batch: int = 10                    # b, the client minibatch size
+    session: Optional[TrainSession] = None   # warm resources across run()s
     history: list = field(default_factory=list)
-    _step: Optional[Callable] = None
-    _step_masked: Optional[Callable] = None
-    _scan_chunk: Optional[Callable] = None
-    _scan_chunk_masked: Optional[Callable] = None
-    _device_chunks: dict = field(default_factory=dict)
-    _device_ds: Optional[DeviceFederatedDataset] = None
-    _stream_ds: Optional[StreamingFederatedDataset] = None
-    stream_cache: Optional[ShardCache] = None  # last run_streaming's cache
 
     def __post_init__(self):
+        if int(self.local_batch) < 1:
+            raise PlanError(
+                f"local_batch must be a positive int, got "
+                f"{self.local_batch!r}")
+        self.local_batch = int(self.local_batch)
+        if self.session is None:
+            self.session = TrainSession()
+
+    # ------------------------------------------------------------------
+    # jitted engines (lazily built, cached on the session so a fresh
+    # trainer sharing the session — e.g. rebuilt for a resume or an eval
+    # loop — reuses the compiled executables)
+    # ------------------------------------------------------------------
+    def _sig(self):
+        return (_IdKey(self.loss_fn), _IdKey(self.server_opt), self.rcfg,
+                _IdKey(self.param_axes))
+
+    def _step_fn(self, masked: bool):
         rcfg, axes = self.rcfg, self.param_axes
         loss_fn, opt = self.loss_fn, self.server_opt
 
-        @jax.jit
-        def step(state, batches, weights, lr):
-            return round_step(loss_fn, opt, state, batches, weights, rcfg,
-                              param_axes=axes, lr=lr)
+        def build():
+            if masked:
+                @jax.jit
+                def step(state, batches, weights, lr, mask):
+                    return round_step(loss_fn, opt, state, batches, weights,
+                                      rcfg, param_axes=axes, lr=lr,
+                                      step_mask=mask)
+            else:
+                @jax.jit
+                def step(state, batches, weights, lr):
+                    return round_step(loss_fn, opt, state, batches, weights,
+                                      rcfg, param_axes=axes, lr=lr)
+            return step
 
-        @jax.jit
-        def step_masked(state, batches, weights, lr, mask):
-            return round_step(loss_fn, opt, state, batches, weights, rcfg,
-                              param_axes=axes, lr=lr, step_mask=mask)
+        return self.session.jit_fn(("step", masked) + self._sig(), build)
 
-        @partial(jax.jit, donate_argnums=(0,))
-        def chunk(state, batches, weights, lrs):
-            return scan_rounds(loss_fn, opt, state, batches, weights, rcfg,
-                               param_axes=axes, lrs=lrs)
+    def _scan_chunk_fn(self, masked: bool):
+        rcfg, axes = self.rcfg, self.param_axes
+        loss_fn, opt = self.loss_fn, self.server_opt
 
-        @partial(jax.jit, donate_argnums=(0,))
-        def chunk_masked(state, batches, weights, lrs, masks):
-            return scan_rounds(loss_fn, opt, state, batches, weights, rcfg,
-                               param_axes=axes, lrs=lrs, step_masks=masks)
+        def build():
+            if masked:
+                @partial(jax.jit, donate_argnums=(0,))
+                def chunk(state, batches, weights, lrs, masks):
+                    return scan_rounds(loss_fn, opt, state, batches, weights,
+                                       rcfg, param_axes=axes, lrs=lrs,
+                                       step_masks=masks)
+            else:
+                @partial(jax.jit, donate_argnums=(0,))
+                def chunk(state, batches, weights, lrs):
+                    return scan_rounds(loss_fn, opt, state, batches, weights,
+                                       rcfg, param_axes=axes, lrs=lrs)
+            return chunk
 
-        self._step = step
-        self._step_masked = step_masked
-        self._scan_chunk = chunk
-        self._scan_chunk_masked = chunk_masked
+        return self.session.jit_fn(("scan_chunk", masked) + self._sig(),
+                                   build)
+
+    def _device_chunk_fn(self, n_rounds: int, masked: bool):
+        """Jitted fused chunk, cached per (R, masked, b) — the ragged last
+        chunk is its own compile, like the scanned plane.  Shared by the
+        device and streaming planes: ``dds`` is any gather-contract pytree
+        (jit keys on argument structure, so the packed dataset and a
+        streaming ``CacheView`` each get their own trace under one
+        wrapper)."""
+        rcfg, axes = self.rcfg, self.param_axes
+        loss_fn, opt, sampler = self.loss_fn, self.server_opt, self.sampler
+        b = self.local_batch
+
+        def build():
+            if masked:
+                @partial(jax.jit, donate_argnums=(0,))
+                def fn(state, dds, sample_key, data_key, t0, lrs, masks):
+                    return scan_rounds_ondevice(
+                        loss_fn, opt, state, dds, sampler, data_key,
+                        sample_key, t0, n_rounds, rcfg, b, param_axes=axes,
+                        lrs=lrs, step_masks=masks)
+            else:
+                @partial(jax.jit, donate_argnums=(0,))
+                def fn(state, dds, sample_key, data_key, t0, lrs):
+                    return scan_rounds_ondevice(
+                        loss_fn, opt, state, dds, sampler, data_key,
+                        sample_key, t0, n_rounds, rcfg, b, param_axes=axes,
+                        lrs=lrs)
+            return fn
+
+        key = (("ondevice_chunk", n_rounds, masked, b, _IdKey(sampler))
+               + self._sig())
+        return self.session.jit_fn(key, build)
 
     # ------------------------------------------------------------------
-    # host-side round assembly (shared by both drivers and the prefetcher)
+    # host-side round assembly (shared by the drivers and the prefetcher)
     # ------------------------------------------------------------------
     def _check_client_extent(self):
         """The engine is lowered for rcfg.clients_per_round slots; a sampler
@@ -170,7 +251,7 @@ class FederatedTrainer:
         """Sample S_t and assemble its [C, H, b, ...] batches + knobs."""
         idx, weights = self.sampler.sample(t)
         batches = self.dataset.round_batches(
-            idx, self.rcfg.local_steps, self.local_batch_size(), t=t)
+            idx, self.rcfg.local_steps, self.local_batch, t=t)
         lr_t, mask = self._round_knobs(t)
         return batches, np.asarray(weights, np.float32), lr_t, mask
 
@@ -202,22 +283,23 @@ class FederatedTrainer:
         ``resume=True``, restore the latest durable checkpoint and continue
         at the round after it.  Keyed sampling/minibatch draws make the
         continued trajectory bit-equal to an uninterrupted one — which is
-        why a stateful host sampler (sequential numpy RNG that would
-        restart at its seed) is rejected here.  An absent or unreadable
-        checkpoint (``latest_round`` == -1) means a fresh start, not an
-        error — first launch and resume-after-crash share one code path.
-        The metrics jsonl is rewound to the restored round so the re-run
-        rounds are not double-logged."""
+        why a sampler without the ``KeyedReplayable`` capability (sequential
+        numpy RNG that would restart at its seed) is rejected here.  An
+        absent or unreadable checkpoint (``latest_round`` == -1) means a
+        fresh start, not an error — first launch and resume-after-crash
+        share one code path.  The metrics jsonl is rewound to the restored
+        round so the re-run rounds are never double-logged."""
         if not resume:
             return 0
         if not self.ckpt_path:
             raise ValueError("resume=True needs ckpt_path")
-        if not hasattr(self.sampler, "base_key"):
-            raise ValueError(
-                "resume=True needs a keyed Device* sampler (host replay of "
-                "the (seed, t)-keyed device draw): a stateful sampler's RNG "
-                "stream restarts at its seed, so resumed rounds would "
-                "silently replay round-0 client sets")
+        if not isinstance(self.sampler, KeyedReplayable):
+            raise PlanError(
+                "resume=True needs the KeyedReplayable capability — a keyed "
+                "Device* sampler (host replay of the (seed, t)-keyed device "
+                "draw): a stateful sampler's RNG stream restarts at its "
+                "seed, so resumed rounds would silently replay round-0 "
+                "client sets", missing="KeyedReplayable")
         t_ck = latest_round(self.ckpt_path)
         if t_ck < 0:
             return 0
@@ -228,7 +310,7 @@ class FederatedTrainer:
 
     @contextlib.contextmanager
     def _writer(self):
-        """Async checkpoint writer scoped to one run_* call: joined and
+        """Async checkpoint writer scoped to one run call: joined and
         flushed on normal exit; on an in-flight exception the writer is
         still retired but its own failures never mask the primary error."""
         writer = AsyncCheckpointWriter() if self.ckpt_path else None
@@ -243,12 +325,73 @@ class FederatedTrainer:
                 writer.close()
 
     # ------------------------------------------------------------------
-    # v1: one dispatch per round
+    # THE entry point: declarative plan -> resolved plane -> one trajectory
     # ------------------------------------------------------------------
-    def run(self, n_rounds: int, log_every: int = 50,
+    def run(self, n_rounds: int,
+            plan: Union[None, str, ExecutionPlan] = None, *,
+            log_every: Optional[int] = None,
             eval_fn: Optional[Callable] = None, verbose: bool = True,
             resume: bool = False):
-        self._check_client_extent()
+        """Train ``n_rounds`` federated rounds under ``plan``.
+
+        ``plan``: ``None`` (historical per-round behavior), a plane name
+        (``"auto" | "per_round" | "scanned" | "device" | "streaming"``), or
+        a full ``ExecutionPlan``.  The trajectory is a function of the
+        config alone — every plane (and ``"auto"``, whichever it resolves
+        to) trains the same model bit for bit.  A plan's ``local_batch`` /
+        ``ckpt`` overrides are scoped to THIS call: the trainer's own
+        fields are restored afterwards, so a one-off plan never leaks into
+        later runs.  ``log_every`` overrides ``plan.eval.cadence`` for the
+        per-round plane (chunked planes eval and log at chunk boundaries).
+        ``resume=True`` continues from the latest durable checkpoint.  Auto
+        resolutions are appended to the history and metrics jsonl as
+        ``{"event": "plan", ...}`` records.
+        """
+        plan = as_plan(plan)
+        saved = (self.local_batch, self.ckpt_path, self.ckpt_every)
+        if plan.local_batch is not None:
+            self.local_batch = plan.local_batch
+        if plan.ckpt is not None:
+            if plan.ckpt.path is not None:
+                self.ckpt_path = plan.ckpt.path
+            if plan.ckpt.every is not None:
+                self.ckpt_every = plan.ckpt.every
+        try:
+            self._check_client_extent()
+            decision = resolve(plan, self, n_rounds)
+            self.session.plan_log.append(decision.record())
+            if decision.auto:
+                rec = decision.record()
+                self.history.append(rec)
+                if self.metrics_path:
+                    append_metrics(self.metrics_path, [rec])
+                if verbose:
+                    print(f"  plan: auto -> {decision.plane} "
+                          f"({decision.reason})")
+            cadence = (log_every if log_every is not None
+                       else plan.eval.cadence)
+            if decision.plane == "per_round":
+                return self._run_per_round(n_rounds, cadence, eval_fn,
+                                           verbose, resume)
+            if decision.plane == "scanned":
+                return self._run_scanned(n_rounds, plan.chunk_rounds,
+                                         int(plan.prefetch), eval_fn,
+                                         verbose, resume)
+            if decision.plane == "device":
+                return self._run_device(n_rounds, plan.chunk_rounds,
+                                        eval_fn, verbose, resume)
+            return self._run_streaming(n_rounds, plan.chunk_rounds,
+                                       plan.cache.clients, plan.cache.bytes,
+                                       bool(plan.prefetch), eval_fn,
+                                       verbose, resume)
+        finally:
+            self.local_batch, self.ckpt_path, self.ckpt_every = saved
+
+    # ------------------------------------------------------------------
+    # plane: per_round — one dispatch per round
+    # ------------------------------------------------------------------
+    def _run_per_round(self, n_rounds: int, log_every: int, eval_fn,
+                       verbose: bool, resume: bool):
         t0 = self._resume_round(resume)
         t_start = time.time()
         with self._writer() as writer:
@@ -256,11 +399,11 @@ class FederatedTrainer:
                 batches, weights, lr_t, mask = self._round_inputs(t)
                 batches = jax.tree.map(jnp.asarray, batches)
                 if mask is None:
-                    self.state, metrics = self._step(
+                    self.state, metrics = self._step_fn(False)(
                         self.state, batches, jnp.asarray(weights),
                         jnp.float32(lr_t))
                 else:
-                    self.state, metrics = self._step_masked(
+                    self.state, metrics = self._step_fn(True)(
                         self.state, batches, jnp.asarray(weights),
                         jnp.float32(lr_t), jnp.asarray(mask))
                 rec = {"round": t, "loss": float(metrics["loss"]),
@@ -282,24 +425,10 @@ class FederatedTrainer:
         return self.history
 
     # ------------------------------------------------------------------
-    # v2: chunked lax.scan with host prefetch
+    # plane: scanned — chunked lax.scan with host prefetch
     # ------------------------------------------------------------------
-    def run_scanned(self, n_rounds: int, chunk_rounds: int = 25,
-                    prefetch: int = 2, eval_fn: Optional[Callable] = None,
-                    verbose: bool = True, resume: bool = False):
-        """Round-engine v2 (see module docstring).
-
-        ``chunk_rounds`` trades checkpoint/metrics granularity against
-        dispatch overhead; the last chunk may be ragged (its own compile).
-        ``prefetch`` bounds the queue of host-assembled chunks, overlapping
-        round-batch assembly for chunk i+1 with device compute of chunk i.
-
-        Eval cadence differs from ``run``: rounds inside a chunk execute in
-        one compiled scan, so ``eval_fn`` can only observe chunk-boundary
-        states — it runs once per chunk (on the last round's state), not on
-        a ``log_every`` grid.  The *training* trajectory is unaffected.
-        """
-        self._check_client_extent()
+    def _run_scanned(self, n_rounds: int, chunk_rounds: int, prefetch: int,
+                     eval_fn, verbose: bool, resume: bool):
         t0 = self._resume_round(resume)
         spans = [(s, min(s + chunk_rounds, n_rounds))
                  for s in range(t0, n_rounds, chunk_rounds)]
@@ -340,11 +469,11 @@ class FederatedTrainer:
                     batches, weights, lrs, masks = item
                     batches = jax.tree.map(jnp.asarray, batches)
                     if masks is None:
-                        self.state, metrics = self._scan_chunk(
+                        self.state, metrics = self._scan_chunk_fn(False)(
                             self.state, batches, jnp.asarray(weights),
                             jnp.asarray(lrs))
                     else:
-                        self.state, metrics = self._scan_chunk_masked(
+                        self.state, metrics = self._scan_chunk_fn(True)(
                             self.state, batches, jnp.asarray(weights),
                             jnp.asarray(lrs), jnp.asarray(masks))
                     self._finish_chunk(s, e, n_rounds, metrics, eval_fn,
@@ -355,106 +484,22 @@ class FederatedTrainer:
         return self.history
 
     # ------------------------------------------------------------------
-    # v3: device-resident data plane (zero host round-trips per chunk)
+    # plane: device — device-resident data (zero host round-trips/chunk)
     # ------------------------------------------------------------------
     def device_dataset(self,
                        shard_clients: bool = True) -> DeviceFederatedDataset:
-        """The packed corpus (built once, cached; see data/device.py for
-        the K * n_max memory ceiling this implies)."""
-        if self._device_ds is None:
-            if isinstance(self.dataset, DeviceFederatedDataset):
-                self._device_ds = self.dataset
-            else:
-                self._device_ds = DeviceFederatedDataset.from_federated(
-                    self.dataset, shard_clients=shard_clients)
-        return self._device_ds
-
-    def _device_chunk_fn(self, n_rounds: int, masked: bool):
-        """Jitted fused chunk, cached per (R, masked, b) — the ragged last
-        chunk is its own compile, like the v2 driver.  Shared by
-        ``run_device`` and ``run_streaming``: ``dds`` is any
-        gather-contract pytree (jit keys on argument structure, so the
-        packed dataset and a streaming ``CacheView`` each get their own
-        trace under one wrapper)."""
-        cache_key = (n_rounds, masked, self.local_batch_size())
-        fn = self._device_chunks.get(cache_key)
-        if fn is not None:
-            return fn
-        rcfg, axes = self.rcfg, self.param_axes
-        loss_fn, opt, sampler = self.loss_fn, self.server_opt, self.sampler
-        b = self.local_batch_size()
-
-        if masked:
-            @partial(jax.jit, donate_argnums=(0,))
-            def fn(state, dds, sample_key, data_key, t0, lrs, masks):
-                return scan_rounds_ondevice(
-                    loss_fn, opt, state, dds, sampler, data_key, sample_key,
-                    t0, n_rounds, rcfg, b, param_axes=axes, lrs=lrs,
-                    step_masks=masks)
-        else:
-            @partial(jax.jit, donate_argnums=(0,))
-            def fn(state, dds, sample_key, data_key, t0, lrs):
-                return scan_rounds_ondevice(
-                    loss_fn, opt, state, dds, sampler, data_key, sample_key,
-                    t0, n_rounds, rcfg, b, param_axes=axes, lrs=lrs)
-        self._device_chunks[cache_key] = fn
-        return fn
+        """The packed corpus (built once, owned by the session; see
+        data/device.py for the K * n_max memory ceiling this implies)."""
+        return self.session.device_dataset(self.dataset,
+                                           shard_clients=shard_clients)
 
     def _sample_key(self):
         return (self.sampler.base_key()
-                if hasattr(self.sampler, "base_key")
+                if isinstance(self.sampler, KeyedReplayable)
                 else jax.random.PRNGKey(self.sampler.seed))
 
-    def _run_fused_chunks(self, spans, n_rounds, view, data_key,
-                          prepare, upload, prefetch, eval_fn, verbose):
-        """The chunk loop shared by the fused on-device tiers (``run_device``
-        and ``run_streaming``): per-chunk knobs, one dispatch, shared
-        bookkeeping.  ``view`` is the gather-contract pytree for the first
-        span; with staging hooks, ``prepare(i)`` does the host-side lookahead
-        for span i (called BEFORE span i-1's dispatch, so its eager replay
-        ops never queue behind the in-flight chunk) and ``upload(prepared)``
-        makes span i's data resident and returns its view — dispatched right
-        after the chunk when ``prefetch`` (overlapping its compute), after
-        the metrics sync otherwise."""
-        sample_key = self._sample_key()
-        t_start = time.time()
-        with self._writer() as writer:
-            for i, (s, e) in enumerate(spans):
-                lrs, masks = self._chunk_knobs(s, e)
-                fn = self._device_chunk_fn(e - s, masks is not None)
-                nxt = (prepare(i + 1)
-                       if prepare and i + 1 < len(spans) else None)
-                args = (self.state, view, sample_key, data_key,
-                        jnp.int32(s), jnp.asarray(lrs))
-                if masks is not None:
-                    args += (jnp.asarray(masks),)
-                self.state, metrics = fn(*args)       # async dispatch
-                if nxt is not None and prefetch:
-                    # double-buffered staging: span i+1's H2D scatters are
-                    # dispatched now and overlap chunk i's scanned compute;
-                    # chunk i's view snapshot stays valid (functional
-                    # updates never touch captured arrays)
-                    view = upload(nxt)
-                self._finish_chunk(s, e, n_rounds, metrics, eval_fn,
-                                   verbose, writer, t_start)  # metrics sync
-                if nxt is not None and not prefetch:
-                    view = upload(nxt)                # serialized upload
-        return self.history
-
-    def run_device(self, n_rounds: int, chunk_rounds: int = 25,
-                   eval_fn: Optional[Callable] = None, verbose: bool = True,
-                   resume: bool = False):
-        """Data plane v1: sampling + minibatch gather + round steps fused in
-        one scan per chunk (see module docstring).  Requires a sampler with
-        a traceable ``sample_device`` (``DeviceUniformSampler`` /
-        ``DeviceDiurnalSampler`` keep host replay exact).  Eval cadence is
-        chunk-boundary, as in ``run_scanned``.
-        """
-        if not hasattr(self.sampler, "sample_device"):
-            raise ValueError(
-                "run_device needs a sampler with a traceable sample_device "
-                "(e.g. DeviceUniformSampler)")
-        self._check_client_extent()
+    def _run_device(self, n_rounds: int, chunk_rounds: int, eval_fn,
+                    verbose: bool, resume: bool):
         t0 = self._resume_round(resume)
         dds = self.device_dataset()
         spans = [(s, min(s + chunk_rounds, n_rounds))
@@ -464,54 +509,30 @@ class FederatedTrainer:
             prefetch=True, eval_fn=eval_fn, verbose=verbose)
 
     # ------------------------------------------------------------------
-    # v4: streaming shard-cached data plane (corpus larger than device)
+    # plane: streaming — shard-cached data (corpus larger than device)
     # ------------------------------------------------------------------
     def streaming_dataset(self) -> StreamingFederatedDataset:
-        """The host-resident shard set (built once, cached).  Costs no
-        device memory by itself; ``packed_nbytes`` reports what the
+        """The host-resident shard set (built once, owned by the session).
+        Costs no device memory by itself; ``packed_nbytes`` reports what the
         device-RESIDENT plane would pay — the plane-choice comparison."""
-        if self._stream_ds is None:
-            if isinstance(self.dataset, StreamingFederatedDataset):
-                self._stream_ds = self.dataset
-            else:
-                self._stream_ds = StreamingFederatedDataset.from_federated(
-                    self.dataset)
-        return self._stream_ds
+        return self.session.streaming_dataset(self.dataset)
 
-    def run_streaming(self, n_rounds: int, chunk_rounds: int = 25,
-                      cache_clients: Optional[int] = None,
-                      cache_bytes: Optional[int] = None,
-                      prefetch: bool = True,
-                      eval_fn: Optional[Callable] = None,
-                      verbose: bool = True, resume: bool = False):
-        """Data plane v2 (see module docstring): the fused on-device scan of
-        ``run_device`` over a bounded ``ShardCache`` instead of the fully
-        packed corpus.  Capacity comes from ``cache_clients`` and/or
-        ``cache_bytes`` (default: one chunk's worst-case working set,
-        ``lowered_clients * chunk_rounds`` slots).  Participants of chunk
-        i+1 are known from the keyed host replay, so their shard uploads are
-        dispatched right after chunk i's compute and overlap it
-        (``prefetch=False`` degrades to upload-then-compute, for A/B
-        timing).  Requires a ``Device*`` sampler, like ``run_device``.  The
-        cache is rebuilt per call and left on ``self.stream_cache`` so
-        callers can read hit/miss/eviction stats.
-        """
-        if not (hasattr(self.sampler, "sample_device")
-                and hasattr(self.sampler, "base_key")):
-            raise ValueError(
-                "run_streaming needs a keyed Device* sampler: a traceable "
-                "sample_device AND a host sample that replays the keyed "
-                "draw (base_key, e.g. DeviceUniformSampler) — the cache is "
-                "populated from the host replay, so a stateful sampler "
-                "would stage different clients than the in-scan draw uses")
-        self._check_client_extent()
+    @property
+    def stream_cache(self) -> Optional[ShardCache]:
+        """The session's persistent ``ShardCache`` (None before the first
+        streaming run).  Lives across ``run()`` calls: a second run with the
+        same capacity re-uploads nothing for already-resident clients."""
+        return self.session.shard_cache
+
+    def _run_streaming(self, n_rounds: int, chunk_rounds: int,
+                       cache_clients: Optional[int],
+                       cache_bytes: Optional[int], prefetch: bool, eval_fn,
+                       verbose: bool, resume: bool):
         t0 = self._resume_round(resume)
         sds = self.streaming_dataset()
         if cache_clients is None and cache_bytes is None:
             cache_clients = self.rcfg.clients_per_round * chunk_rounds
-        cache = ShardCache(sds, capacity_clients=cache_clients,
-                           capacity_bytes=cache_bytes)
-        self.stream_cache = cache
+        cache = self.session.shard_cache_for(sds, cache_clients, cache_bytes)
         spans = [(s, min(s + chunk_rounds, n_rounds))
                  for s in range(t0, n_rounds, chunk_rounds)]
 
@@ -522,25 +543,150 @@ class FederatedTrainer:
             cache.ensure(parts)
             return cache.view()
 
+        stats0 = _cache_counters(cache)
         view = upload(prepare(0)) if spans else None
         return self._run_fused_chunks(
             spans, n_rounds, view, sds.base_key(), prepare, upload,
-            prefetch, eval_fn=eval_fn, verbose=verbose)
+            prefetch, eval_fn=eval_fn, verbose=verbose, cache=cache,
+            cache_stats0=stats0)
 
     # ------------------------------------------------------------------
-    # shared per-chunk bookkeeping (metrics sync, logging, checkpoints)
+    # the chunk loop shared by the fused on-device planes
     # ------------------------------------------------------------------
-    def _finish_chunk(self, s: int, e: int, n_rounds: int, metrics,
-                      eval_fn, verbose: bool,
-                      writer: Optional[AsyncCheckpointWriter],
-                      t_start: float):
+    def _run_fused_chunks(self, spans, n_rounds, view, data_key,
+                          prepare, upload, prefetch, eval_fn, verbose,
+                          cache=None, cache_stats0=None):
+        """Per-chunk knobs, one dispatch, shared bookkeeping for the device
+        and streaming planes.  ``view`` is the gather-contract pytree for
+        the first span; with staging hooks, ``prepare(i)`` does the
+        host-side lookahead for span i (called BEFORE span i-1's dispatch,
+        so its eager replay ops never queue behind the in-flight chunk) and
+        ``upload(prepared)`` makes span i's data resident and returns its
+        view — dispatched right after the chunk when ``prefetch``
+        (overlapping its compute), after the metrics sync otherwise.
+
+        The host-blocking metrics d2h sync for chunk i is deferred until
+        chunk i+1 is in flight (the last per-chunk host-blocking step, now
+        overlapped with compute); chunk-boundary eval and the async
+        checkpoint snapshot still run *before* the next dispatch donates the
+        chunk's state.  Per-chunk ``ShardCache`` counter deltas ride on each
+        chunk's last metrics record (history + jsonl)."""
+        sample_key = self._sample_key()
+        t_start = time.time()
+        stats0 = cache_stats0 if cache_stats0 is not None \
+            else _cache_counters(cache)
+        pending = None        # chunk dispatched but not yet drained
+                              # (last element: sealed yet?)
+        with self._writer() as writer:
+            try:
+                for i, (s, e) in enumerate(spans):
+                    lrs, masks = self._chunk_knobs(s, e)
+                    fn = self._device_chunk_fn(e - s, masks is not None)
+                    nxt = (prepare(i + 1)
+                           if prepare and i + 1 < len(spans) else None)
+                    if pending is not None:
+                        # the previous chunk's state is live only until
+                        # this dispatch donates it: eval + ckpt snapshot
+                        # now, the blocking metrics sync after the dispatch
+                        pending = self._seal_chunk(pending, n_rounds,
+                                                   eval_fn, writer)
+                    args = (self.state, view, sample_key, data_key,
+                            jnp.int32(s), jnp.asarray(lrs))
+                    if masks is not None:
+                        args += (jnp.asarray(masks),)
+                    self.state, metrics = fn(*args)   # async dispatch
+                    if nxt is not None and prefetch:
+                        # double-buffered staging: span i+1's H2D scatters
+                        # are dispatched now and overlap chunk i's scanned
+                        # compute; chunk i's view snapshot stays valid
+                        # (functional updates never touch captured arrays)
+                        view = upload(nxt)
+                    if pending is not None:
+                        done, pending = pending, None
+                        self._drain_chunk(done, verbose, t_start,
+                                          writer)
+                    pending = (s, e, metrics,
+                               _cache_stats(stats0, cache), None,
+                               None, False)
+                    stats0 = _cache_counters(cache)
+                    if nxt is not None and not prefetch:
+                        # serialized A/B arm: retire THIS chunk first (the
+                        # metrics drain blocks until its compute finishes),
+                        # so the upload genuinely never overlaps compute —
+                        # this arm forgoes the deferred-sync optimization
+                        pending = self._seal_chunk(pending, n_rounds,
+                                                   eval_fn, writer)
+                        done, pending = pending, None
+                        self._drain_chunk(done, verbose, t_start, writer)
+                        view = upload(nxt)
+                if pending is not None:
+                    pending = self._seal_chunk(pending, n_rounds, eval_fn,
+                                               writer)
+                    done, pending = pending, None
+                    self._drain_chunk(done, verbose, t_start, writer)
+            except BaseException:
+                # retire the completed-but-unretired chunk before
+                # propagating: its compute finished and its checkpoint may
+                # already be durable, so append its metrics too — the jsonl
+                # and the checkpoint must stay one trajectory prefix.
+                # Best-effort: never mask the primary error.
+                if pending is not None:
+                    try:
+                        if not pending[-1]:
+                            # the next dispatch never happened, so
+                            # self.state is still this chunk's output —
+                            # safe to checkpoint (eval skipped on the
+                            # error path)
+                            pending = self._seal_chunk(pending, n_rounds,
+                                                       None, writer)
+                        self._drain_chunk(pending, verbose, t_start,
+                                          writer)
+                    except BaseException:
+                        pass
+                raise
+        return self.history
+
+    # ------------------------------------------------------------------
+    # per-chunk bookkeeping, split at the donation boundary
+    # ------------------------------------------------------------------
+    def _seal_chunk(self, pending, n_rounds: int, eval_fn,
+                    writer: Optional[AsyncCheckpointWriter]):
+        """The bookkeeping that must see the chunk's own state before the
+        next dispatch donates it: chunk-boundary eval + a device-side state
+        snapshot for the due checkpoint.  The snapshot is only *submitted*
+        in ``_drain_chunk``, after the chunk's metrics are appended — the
+        durable checkpoint must never run ahead of the metrics log (resume
+        prunes the log back to the checkpointed round, so rounds missing
+        below it could never be re-logged).  Save cadence matches the
+        per-round plane: when a round t > 0 with t % ckpt_every == 0 falls
+        inside the chunk, plus one final save so a chunked run always ends
+        restorable."""
+        s, e, metrics, cstats, _, _, _ = pending
+        ev = eval_fn(self.state) if eval_fn is not None else None
+        due = self.ckpt_every and any(
+            t > 0 and t % self.ckpt_every == 0 for t in range(s, e))
+        snap = None
+        if writer and (due or e == n_rounds):
+            # async device copy, dispatched before the next chunk's
+            # donation invalidates these buffers
+            snap = jax.tree.map(jnp.copy, self.state)
+        return (s, e, metrics, cstats, ev, snap, True)
+
+    def _drain_chunk(self, pending, verbose: bool, t_start: float,
+                     writer: Optional[AsyncCheckpointWriter]):
+        """The host-blocking half: one metrics d2h sync per chunk, history +
+        jsonl append, progress line, then the checkpoint submit (after the
+        append — see ``_seal_chunk``)."""
+        s, e, metrics, cstats, ev, snap, _ = pending
         losses = np.asarray(metrics["loss"])  # one sync per chunk
         dnorms = np.asarray(metrics["delta_norm"])
         recs = [{"round": t, "loss": float(losses[i]),
                  "delta_norm": float(dnorms[i])}
                 for i, t in enumerate(range(s, e))]
-        if eval_fn is not None:
-            recs[-1].update(eval_fn(self.state))
+        if ev is not None:
+            recs[-1].update(ev)
+        if cstats is not None:
+            recs[-1].update(cstats)
         self.history.extend(recs)
         if self.metrics_path:
             append_metrics(self.metrics_path, recs)
@@ -549,17 +695,74 @@ class FederatedTrainer:
                   f"loss={recs[-1]['loss']:.4f} "
                   f"delta_norm={recs[-1]['delta_norm']:.4f}  "
                   f"({time.time() - t_start:.1f}s)")
-        # same cadence as run(): save when a round t > 0 with
-        # t % ckpt_every == 0 falls inside this chunk; plus one
-        # final save so a chunked run always ends restorable
-        due = self.ckpt_every and any(
-            t > 0 and t % self.ckpt_every == 0 for t in range(s, e))
-        if writer and (due or e == n_rounds):
-            writer.submit(self.ckpt_path, self.state, {"round": e - 1})
+        if writer and snap is not None:
+            writer.submit(self.ckpt_path, snap, {"round": e - 1},
+                          copy=False)
+
+    def _finish_chunk(self, s: int, e: int, n_rounds: int, metrics,
+                      eval_fn, verbose: bool,
+                      writer: Optional[AsyncCheckpointWriter],
+                      t_start: float):
+        """Serialized seal + drain (the scanned plane has no in-flight next
+        chunk to overlap the sync with)."""
+        pending = self._seal_chunk(
+            (s, e, metrics, None, None, None, False), n_rounds,
+            eval_fn, writer)
+        self._drain_chunk(pending, verbose, t_start, writer)
+
+    # ------------------------------------------------------------------
+    # deprecated shims over run(plan=...) — bit-equal until removal (the
+    # CI legacy-shim lane re-runs the trajectory matrix through them)
+    # ------------------------------------------------------------------
+    def run_scanned(self, n_rounds: int, chunk_rounds: int = 25,
+                    prefetch: int = 2, eval_fn: Optional[Callable] = None,
+                    verbose: bool = True, resume: bool = False):
+        """Deprecated: ``run(n, plan=ExecutionPlan(plane="scanned", ...))``."""
+        _warn_shim("run_scanned", "scanned")
+        return self.run(n_rounds,
+                        plan=ExecutionPlan(plane="scanned",
+                                           chunk_rounds=chunk_rounds,
+                                           prefetch=prefetch),
+                        eval_fn=eval_fn, verbose=verbose, resume=resume)
+
+    def run_device(self, n_rounds: int, chunk_rounds: int = 25,
+                   eval_fn: Optional[Callable] = None, verbose: bool = True,
+                   resume: bool = False):
+        """Deprecated: ``run(n, plan=ExecutionPlan(plane="device", ...))``."""
+        _warn_shim("run_device", "device")
+        return self.run(n_rounds,
+                        plan=ExecutionPlan(plane="device",
+                                           chunk_rounds=chunk_rounds),
+                        eval_fn=eval_fn, verbose=verbose, resume=resume)
+
+    def run_streaming(self, n_rounds: int, chunk_rounds: int = 25,
+                      cache_clients: Optional[int] = None,
+                      cache_bytes: Optional[int] = None,
+                      prefetch: bool = True,
+                      eval_fn: Optional[Callable] = None,
+                      verbose: bool = True, resume: bool = False):
+        """Deprecated: ``run(n, plan=ExecutionPlan(plane="streaming",
+        cache=CacheSpec(...)))``."""
+        _warn_shim("run_streaming", "streaming")
+        return self.run(n_rounds,
+                        plan=ExecutionPlan(plane="streaming",
+                                           chunk_rounds=chunk_rounds,
+                                           cache=CacheSpec(
+                                               clients=cache_clients,
+                                               bytes=cache_bytes),
+                                           prefetch=int(bool(prefetch))),
+                        eval_fn=eval_fn, verbose=verbose, resume=resume)
 
     def local_batch_size(self) -> int:
-        return getattr(self, "_local_batch", 10)
+        """Deprecated accessor for the ``local_batch`` field."""
+        return self.local_batch
 
     def set_local_batch(self, b: int):
-        self._local_batch = b
+        """Deprecated: pass ``local_batch=b`` to the constructor (or set it
+        on an ``ExecutionPlan``)."""
+        warnings.warn(
+            "set_local_batch is deprecated: pass local_batch= to "
+            "FederatedTrainer (or ExecutionPlan(local_batch=...))",
+            DeprecationWarning, stacklevel=2)
+        self.local_batch = int(b)
         return self

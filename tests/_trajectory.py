@@ -1,8 +1,8 @@
 """Shared trajectory-equivalence harness.
 
-Every driver tier (per-round ``run``, prefetch-queue ``run_scanned``,
-device-resident ``run_device``, shard-cached streaming ``run_streaming``)
-must train the SAME model: sampling and minibatch draws are keyed by
+Every execution plane (``plan="per_round" | "scanned" | "device" |
+"streaming"``, plus ``"auto"`` resolving to any of them) must train the
+SAME model: sampling and minibatch draws are keyed by
 ``(seed, t, client_id)``, so the trajectory is a function of the config
 alone, never of which engine executes it or whether the run was interrupted.
 This module is the single place that contract is exercised:
@@ -11,16 +11,25 @@ This module is the single place that contract is exercised:
     assert_same_trajectory((hist, state), (hist_ref, state_ref))
 
 ``run_trajectory`` builds a fresh trainer (so jit caches and RNG state never
-leak between configs), runs ``n_rounds`` under the named driver, and returns
-``(history, final_state)``.  With ``resume_at=t`` it runs two *separate*
-trainers — the first checkpoints every round and stops at ``t``, the second
-restores with ``resume=True`` and finishes — returning the stitched history;
-comparing against the uninterrupted run certifies resume bit-equality.
+leak between configs), runs ``n_rounds`` under the named driver via the
+plan-based ``FederatedTrainer.run``, and returns ``(history, final_state)``
+(with ``{"event": ...}`` audit records stripped — trajectory records only).
+With ``resume_at=t`` it runs two *separate* trainers — the first checkpoints
+every round and stops at ``t``, the second restores with ``resume=True`` and
+finishes — returning the stitched history; comparing against the
+uninterrupted run certifies resume bit-equality.
 
-test_multiround.py / test_device_data.py / test_stream_data.py parametrize
-their equivalence matrices over DRIVERS and the configs here.
+``REPRO_LEGACY_DRIVERS=1`` re-routes ``run_driver`` through the deprecated
+``run_*`` shims (``DeprecationWarning`` filtered): the CI legacy-shim lane
+re-runs the whole matrix that way, guaranteeing the old API stays bit-equal
+until removal.
+
+test_multiround.py / test_device_data.py / test_stream_data.py /
+test_plan.py parametrize their equivalence matrices over DRIVERS (and
+AUTO_DRIVERS) and the configs here.
 """
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +37,14 @@ import numpy as np
 
 from repro.core import DeviceDiurnalSampler, DeviceUniformSampler, RoundConfig
 from repro.data import FederatedDataset
+from repro.launch.plan import CacheSpec, ExecutionPlan
 from repro.launch.train import FederatedTrainer
 
 DRIVERS = ("per-round", "scanned", "device", "streaming")
+AUTO_DRIVERS = DRIVERS + ("auto",)
+LEGACY_SHIMS = os.environ.get("REPRO_LEGACY_DRIVERS", "") == "1"
+_PLANE_OF = {"per-round": "per_round", "scanned": "scanned",
+             "device": "device", "streaming": "streaming", "auto": "auto"}
 
 
 def linreg_loss(params, batch):
@@ -71,24 +85,54 @@ def make_trainer(opt, rcfg, clients, sampler_fn=None, hetero_fn=None,
     return FederatedTrainer(
         loss_fn=linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
         sampler=sampler, state=opt.init(linreg_params()),
-        hetero_steps_fn=hetero_fn, **kw).set_local_batch(local_batch)
+        hetero_steps_fn=hetero_fn, local_batch=local_batch, **kw)
+
+
+def strip_events(hist):
+    """Trajectory records only (drop {"event": "plan", ...} audit rows)."""
+    return [r for r in hist if "event" not in r]
+
+
+def _run_legacy_shim(tr, driver, n_rounds, chunk_rounds, **kw):
+    """The deprecated run_* entry points, warnings filtered (the CI
+    legacy-shim lane certifies they stay bit-equal to the plan API)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        if driver == "per-round":
+            return tr.run(n_rounds, verbose=False, **kw)
+        if driver == "scanned":
+            return tr.run_scanned(n_rounds, chunk_rounds=chunk_rounds,
+                                  verbose=False, **kw)
+        if driver == "device":
+            return tr.run_device(n_rounds, chunk_rounds=chunk_rounds,
+                                 verbose=False, **kw)
+        return tr.run_streaming(n_rounds, chunk_rounds=chunk_rounds,
+                                verbose=False, **kw)
 
 
 def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
-    """Dispatch ``n_rounds`` to the named driver tier with quiet defaults."""
-    if driver == "per-round":
-        return tr.run(n_rounds, verbose=False, **kw)
-    if driver == "scanned":
-        return tr.run_scanned(n_rounds, chunk_rounds=chunk_rounds,
-                              verbose=False, **kw)
-    if driver == "device":
-        return tr.run_device(n_rounds, chunk_rounds=chunk_rounds,
-                             verbose=False, **kw)
-    if driver == "streaming":
-        kw.setdefault("cache_clients", None)  # trainer default: chunk set
-        return tr.run_streaming(n_rounds, chunk_rounds=chunk_rounds,
-                                verbose=False, **kw)
-    raise ValueError(f"unknown driver {driver!r} (want one of {DRIVERS})")
+    """Dispatch ``n_rounds`` to the named plane with quiet defaults.
+
+    ``driver`` is a DRIVERS/AUTO_DRIVERS name; extra ``cache_clients`` /
+    ``cache_bytes`` / ``memory_budget_bytes`` kwargs land on the
+    ``ExecutionPlan``, the rest (``resume``, ``eval_fn``) pass through to
+    ``run``.  Returns the trajectory records (audit events stripped).
+    """
+    if driver not in _PLANE_OF:
+        raise ValueError(
+            f"unknown driver {driver!r} (want one of {AUTO_DRIVERS})")
+    cache = CacheSpec(clients=kw.pop("cache_clients", None),
+                      bytes=kw.pop("cache_bytes", None))
+    budget = kw.pop("memory_budget_bytes", None)
+    if LEGACY_SHIMS and driver != "auto":
+        hist = _run_legacy_shim(tr, driver, n_rounds, chunk_rounds,
+                                **({"cache_clients": cache.clients,
+                                    "cache_bytes": cache.bytes}
+                                   if driver == "streaming" else {}), **kw)
+        return strip_events(hist)
+    plan = ExecutionPlan(plane=_PLANE_OF[driver], chunk_rounds=chunk_rounds,
+                         cache=cache, memory_budget_bytes=budget)
+    return strip_events(tr.run(n_rounds, plan=plan, verbose=False, **kw))
 
 
 def run_trajectory(driver, opt, rcfg, clients, n_rounds, *,
@@ -122,9 +166,12 @@ def run_trajectory(driver, opt, rcfg, clients, n_rounds, *,
 
 def assert_same_trajectory(got, want, atol=1e-6):
     """(history, state) pairs trained the same model: allclose final params
-    and per-round loss/delta_norm streams, equal round ids."""
+    and per-round loss/delta_norm streams, equal round ids.  Audit event
+    records (plan resolutions) are not part of the trajectory and are
+    ignored."""
     hist_a, state_a = got
     hist_b, state_b = want
+    hist_a, hist_b = strip_events(hist_a), strip_events(hist_b)
     np.testing.assert_allclose(flat_w(state_a), flat_w(state_b), atol=atol)
     assert [r["round"] for r in hist_a] == [r["round"] for r in hist_b]
     for key in ("loss", "delta_norm"):

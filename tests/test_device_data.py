@@ -198,12 +198,15 @@ def test_client_extent_mismatch_raises():
                       sampler_fn=diurnal_sampler_fn(m_min=2, m_max=5,
                                                     period=1000, seed=3))
     with pytest.raises(ValueError, match="clients_per_round"):
-        tr.run_device(4, verbose=False)
+        tr.run(4, plan="device", verbose=False)
     with pytest.raises(ValueError, match="clients_per_round"):
-        tr.run_scanned(4, verbose=False)
+        tr.run(4, plan="scanned", verbose=False)
 
 
 def test_run_device_requires_device_sampler():
+    """The device plane needs the DeviceSampleable capability; the PlanError
+    names it and points at the nearest viable plane."""
+    from repro.launch.plan import PlanError
     clients = make_clients(seed=35)
     rcfg = default_rcfg(local_steps=2)
     opt = fedavg()
@@ -213,8 +216,10 @@ def test_run_device_requires_device_sampler():
         def sample(self, t):
             raise NotImplementedError
     tr.sampler = HostOnly()
-    with pytest.raises(ValueError, match="sample_device"):
-        tr.run_device(2, verbose=False)
+    with pytest.raises(PlanError, match="sample_device") as ei:
+        tr.run(2, plan="device", verbose=False)
+    assert ei.value.missing == "DeviceSampleable"
+    assert ei.value.nearest == "scanned"
 
 
 # ---------------------------------------------------------------------------
@@ -227,9 +232,11 @@ def test_run_device_checkpoints_and_metrics(tmp_path):
     opt = fedavg(eta=1.0)
     ck = os.path.join(tmp_path, "state.npz")
     mp = os.path.join(tmp_path, "metrics.jsonl")
+    from repro.launch.plan import ExecutionPlan
     tr = make_trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=1,
                       metrics_path=mp)
-    tr.run_device(10, chunk_rounds=4, verbose=False)
+    tr.run(10, plan=ExecutionPlan(plane="device", chunk_rounds=4),
+           verbose=False)
     assert latest_round(ck) == 9
     restored, meta = restore_state(ck, tr.state)
     np.testing.assert_allclose(flat_w(restored), flat_w(tr.state))
@@ -278,6 +285,8 @@ def test_scanned_driver_still_checkpoints_with_async_writer(tmp_path):
     rcfg = default_rcfg(local_steps=2)
     opt = fedavg(eta=1.0)
     ck = os.path.join(tmp_path, "state.npz")
+    from repro.launch.plan import ExecutionPlan
     tr = make_trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=3)
-    tr.run_scanned(9, chunk_rounds=4, verbose=False)
+    tr.run(9, plan=ExecutionPlan(plane="scanned", chunk_rounds=4),
+           verbose=False)
     assert latest_round(ck) == 8

@@ -223,7 +223,9 @@ def test_scanned_driver_checkpoints_each_chunk(tmp_path):
     mp = os.path.join(tmp_path, "metrics.jsonl")
     tr = make_trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=1,
                       metrics_path=mp)
-    tr.run_scanned(10, chunk_rounds=4, verbose=False)
+    from repro.launch.plan import ExecutionPlan
+    tr.run(10, plan=ExecutionPlan(plane="scanned", chunk_rounds=4),
+           verbose=False)
     assert latest_round(ck) == 9
     restored, meta = restore_state(ck, tr.state)
     np.testing.assert_allclose(flat_w(restored), flat_w(tr.state))

@@ -19,6 +19,7 @@ from _trajectory import (
 from repro.core import fedavg, fedmom, participants_in_span
 from repro.core.sampling import DeviceUniformSampler
 from repro.data import FederatedDataset, ShardCache, StreamingFederatedDataset
+from repro.launch.plan import CacheSpec, ExecutionPlan, PlanError
 
 
 # ---------------------------------------------------------------------------
@@ -46,8 +47,9 @@ def test_streaming_with_forced_evictions_stays_on_trajectory():
     opt = fedmom()
     ref = run_trajectory("per-round", opt, rcfg, clients, 13)
     tr = make_trainer(opt, rcfg, clients)
-    hist = tr.run_streaming(13, chunk_rounds=1, cache_clients=3,
-                            verbose=False)
+    hist = tr.run(13, plan=ExecutionPlan(plane="streaming", chunk_rounds=1,
+                                         cache=CacheSpec(clients=3)),
+                  verbose=False)
     assert_same_trajectory((hist, tr.state), ref)
     cache = tr.stream_cache
     assert cache.slots == 3
@@ -67,8 +69,9 @@ def test_streaming_corpus_exceeds_cache_capacity():
     budget = sds.packed_nbytes // 2             # cannot hold the corpus
     ref = run_trajectory("per-round", opt, rcfg, clients, 9)
     tr = make_trainer(opt, rcfg, clients)
-    hist = tr.run_streaming(9, chunk_rounds=1, cache_bytes=budget,
-                            verbose=False)
+    hist = tr.run(9, plan=ExecutionPlan(plane="streaming", chunk_rounds=1,
+                                        cache=CacheSpec(bytes=budget)),
+                  verbose=False)
     assert_same_trajectory((hist, tr.state), ref)
     assert tr.stream_cache.nbytes <= budget
     assert tr.stream_cache.nbytes < sds.packed_nbytes
@@ -144,15 +147,17 @@ def test_resume_rewinds_metrics_log(tmp_path):
     opt = fedmom()
     ck, mp = str(tmp_path / "ck.npz"), str(tmp_path / "m.jsonl")
 
+    plan = ExecutionPlan(plane="device", chunk_rounds=3)
+
     def mk():
         return make_trainer(opt, rcfg, clients, ckpt_path=ck, ckpt_every=1,
                             metrics_path=mp)
-    mk().run_device(6, chunk_rounds=3, verbose=False)    # durable round 5
+    mk().run(6, plan=plan, verbose=False)                # durable round 5
     # simulate a crash that logged rounds 6-7 before their save landed
     append_metrics(mp, [{"round": 6, "loss": 999.0, "delta_norm": 0.0},
                         {"round": 7, "loss": 999.0, "delta_norm": 0.0}])
     tr = mk()
-    tr.run_device(12, chunk_rounds=3, verbose=False, resume=True)
+    tr.run(12, plan=plan, verbose=False, resume=True)
     with open(mp) as f:
         recs = [json.loads(line) for line in f]
     assert [r["round"] for r in recs] == list(range(12))  # each exactly once
@@ -192,22 +197,27 @@ def test_run_streaming_requires_device_sampler():
         def sample(self, t):
             raise NotImplementedError
     tr.sampler = HostOnly()
-    with pytest.raises(ValueError, match="sample_device"):
-        tr.run_streaming(2, verbose=False)
+    with pytest.raises(PlanError, match="sample_device") as ei:
+        tr.run(2, plan="streaming", verbose=False)
+    assert ei.value.missing == "KeyedReplayable"
 
 
 def test_run_streaming_rejects_stateful_sampler():
     """UniformSampler HAS sample_device but its host path is a sequential
     RNG, not a replay — staging the cache from it would silently feed the
-    scan other clients' shards.  run_streaming must refuse it."""
+    scan other clients' shards.  The streaming plane must refuse it, naming
+    the missing KeyedReplayable capability and the nearest viable plane."""
     from repro.core import UniformSampler
     clients = make_clients(seed=75)
     rcfg = default_rcfg(local_steps=2)
     tr = make_trainer(fedavg(), rcfg, clients)
     ds = FederatedDataset([dict(c) for c in clients], seed=1)
     tr.sampler = UniformSampler(ds.population(), 3, seed=2)
-    with pytest.raises(ValueError, match="replay"):
-        tr.run_streaming(2, verbose=False)
+    with pytest.raises(PlanError, match="replay") as ei:
+        tr.run(2, plan="streaming", verbose=False)
+    assert ei.value.missing == "KeyedReplayable"
+    assert ei.value.nearest == "device"      # stateful sampler can still
+    # run the fused device plane (keyed in-scan draws need no host replay)
 
 
 def test_chunk_needing_more_clients_than_slots_raises():
@@ -216,7 +226,40 @@ def test_chunk_needing_more_clients_than_slots_raises():
     tr = make_trainer(fedavg(), rcfg, clients)
     with pytest.raises(ValueError, match="distinct clients"):
         # 4 rounds x M=3 from K=8 surfaces >2 distinct clients
-        tr.run_streaming(4, chunk_rounds=4, cache_clients=2, verbose=False)
+        tr.run(4, plan=ExecutionPlan(plane="streaming", chunk_rounds=4,
+                                     cache=CacheSpec(clients=2)),
+               verbose=False)
+
+
+def test_cache_stats_logged_in_chunk_metrics(tmp_path):
+    """ShardCache hit/miss/eviction stats land durably on each chunk's last
+    metrics record (history AND jsonl), not just on the live cache object —
+    so perf_compare and resumed runs can read them after the fact."""
+    import json
+    clients = make_clients(seed=83, n=8)
+    rcfg = default_rcfg()
+    mp = str(tmp_path / "m.jsonl")
+    tr = make_trainer(fedmom(), rcfg, clients, metrics_path=mp)
+    tr.run(8, plan=ExecutionPlan(plane="streaming", chunk_rounds=2,
+                                 cache=CacheSpec(clients=6)),
+           verbose=False)
+    cache = tr.stream_cache
+    chunk_ends = [r for r in tr.history if "cache_misses" in r]
+    assert [r["round"] for r in chunk_ends] == [1, 3, 5, 7]  # one per chunk
+    assert sum(r["cache_hits"] for r in chunk_ends) == cache.hits
+    assert sum(r["cache_misses"] for r in chunk_ends) == cache.misses
+    assert sum(r["cache_evictions"] for r in chunk_ends) == cache.evictions
+    assert chunk_ends[-1]["cache_hit_rate"] == pytest.approx(cache.hit_rate)
+    with open(mp) as f:
+        durable = [json.loads(line) for line in f]
+    assert [r.get("cache_misses") for r in durable
+            if "cache_misses" in r] == \
+        [r["cache_misses"] for r in chunk_ends]
+    # non-streaming planes carry no cache keys
+    tr2 = make_trainer(fedmom(), rcfg, clients)
+    tr2.run(4, plan=ExecutionPlan(plane="device", chunk_rounds=2),
+            verbose=False)
+    assert not any("cache_misses" in r for r in tr2.history)
 
 
 def test_participants_in_span_replays_and_orders():

@@ -40,7 +40,7 @@ def _femnist_trainer(opt, rounds=40, seed=0):
     tr = FederatedTrainer(
         loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
         sampler=UniformSampler(pop, 2, seed=seed + 2),
-        state=opt.init(w0)).set_local_batch(10)
+        state=opt.init(w0), local_batch=10)
     return tr.run(rounds, log_every=10_000, verbose=False)
 
 
@@ -89,7 +89,7 @@ def test_end_to_end_reduced_arch_federated_lm():
     tr = FederatedTrainer(loss_fn=loss_fn, server_opt=opt, rcfg=rcfg,
                           dataset=ds, sampler=UniformSampler(pop, 2, seed=2),
                           state=opt.init(params),
-                          param_axes=axes).set_local_batch(4)
+                          param_axes=axes, local_batch=4)
     hist = tr.run(25, log_every=10_000, verbose=False)
     assert _tail(hist, 3) < hist[0]["loss"], (hist[0], hist[-1])
 
@@ -112,7 +112,7 @@ def test_diurnal_participation_end_to_end():
     tr = FederatedTrainer(
         loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
         sampler=DiurnalSampler(pop, m_min=2, m_max=6, period=20, seed=5),
-        state=opt.init(small.lenet_init(jax.random.PRNGKey(0)))
-    ).set_local_batch(10)
+        state=opt.init(small.lenet_init(jax.random.PRNGKey(0))),
+        local_batch=10)
     hist = tr.run(30, log_every=10_000, verbose=False)
     assert _tail(hist, 5) < hist[0]["loss"]
