@@ -16,10 +16,13 @@ fused into the scan, zero host round-trips per chunk) vs shard-cached
 streaming (``plan="streaming"``: bounded device LRU of client shards, chunk
 i+1's H2D uploads overlapped with chunk i's compute) — the same trajectory,
 only the data plane differs.  The streaming row also reports cache hit-rate
-and the cache-vs-packed footprint (the plane-choice decision numbers), and a
+and the cache-vs-packed footprint (the plane-choice decision numbers), a
 warm-session row reruns the streaming lane on the SAME ``TrainSession``: the
 persistent shard cache makes the second ``run()`` re-upload nothing for
-already-resident clients (measured upload savings):
+already-resident clients (measured upload savings), and a tiered-vs-uniform
+row trains one Zipfian-n_k corpus under both slot layouts
+(``CacheSpec(tiers=None)`` vs ``tiers=1``) at equal trajectory, reporting
+cache device bytes + hit-rate (the n_k-tiered footprint win):
 
     PYTHONPATH=src python -m benchmarks.perf_compare --data-plane \
         [--model lenet|linreg] [--rounds 100] [--chunk-rounds 25] \
@@ -272,6 +275,67 @@ def bench_data_plane(argv):
           f"{cold_s / args.rounds * 1e3:.3f} -> "
           f"{warm_s / args.rounds * 1e3:.3f} ms/round (cold includes "
           f"compile)")
+    bench_tiered_cache(args)
+
+
+def bench_tiered_cache(args):
+    """Tiered vs uniform slot sizing on one Zipfian-n_k corpus: the same
+    keyed trajectory, strictly smaller cache device bytes under skew (the
+    n_k-tiered ShardCache row; asserts the footprint win so the CI smoke
+    lane catches a regression)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import DeviceUniformSampler, RoundConfig, fedmom
+    from repro.data import FederatedDataset
+    from repro.launch.plan import CacheSpec, ExecutionPlan
+    from repro.launch.train import FederatedTrainer
+
+    rng = np.random.default_rng(0)
+    K, d = (24, 16) if getattr(args, "smoke", False) else (60, 32)
+    n_top = 256 if getattr(args, "smoke", False) else 1024
+    counts = [max(2, int(n_top / (r + 1) ** 1.2)) for r in range(K)]
+    clients = []
+    for n in counts:
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        y = (x @ rng.normal(size=d)).astype(np.float32)
+        clients.append({"x": x, "y": y})
+
+    def loss_fn(params, b):
+        pred = b["x"] @ params["w"] + params["b"]
+        return jnp.mean(jnp.square(pred - b["y"])), {}
+
+    ds = FederatedDataset(clients, seed=1)
+    rcfg = RoundConfig(clients_per_round=args.m,
+                       local_steps=args.local_steps, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    opt = fedmom(eta=2.0, beta=0.9)
+    w0 = {"w": jnp.zeros(d), "b": jnp.zeros(())}
+
+    results = {}
+    for name, tiers in (("tiered", None), ("uniform", 1)):
+        tr = FederatedTrainer(
+            loss_fn=loss_fn, server_opt=opt, rcfg=rcfg,
+            dataset=FederatedDataset(list(ds.data), seed=1),
+            sampler=DeviceUniformSampler(ds.population(), args.m, seed=2),
+            state=opt.init(w0), local_batch=2)
+        tr.run(args.rounds,
+               plan=ExecutionPlan(plane="streaming",
+                                  chunk_rounds=args.chunk_rounds,
+                                  cache=CacheSpec(tiers=tiers)),
+               verbose=False)
+        results[name] = (tr.stream_cache, tr.history[-1]["loss"])
+    (tc, tl), (uc, ul) = results["tiered"], results["uniform"]
+    drift = abs(tl - ul)
+    assert drift < 1e-4, f"tiered/uniform trajectories diverged: {tl} {ul}"
+    assert tc.nbytes < uc.nbytes, \
+        f"tiered cache not smaller: {tc.nbytes} vs {uc.nbytes}"
+    print(f"  tiered-slots   Zipfian n_k (K={K}, n_max={max(counts)}): "
+          f"cache {tc.nbytes / 2**20:.3f} MiB over {len(tc.tier_sizes)} "
+          f"tiers vs {uc.nbytes / 2**20:.3f} MiB uniform "
+          f"({1 - tc.nbytes / uc.nbytes:.0%} smaller), hit-rate "
+          f"{tc.hit_rate:.1%} vs {uc.hit_rate:.1%}, final-loss drift "
+          f"{drift:.2e}")
 
 
 if __name__ == "__main__":

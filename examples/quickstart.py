@@ -43,12 +43,20 @@ plan selection (--plan):
   per-round   one jitted round_step/round   host assembly        every round needs an eval / a host decision
   scanned     chunked lax.scan + prefetch   host assembly        corpus unbounded, or a host-only sampler
   device      fused sample+gather scan      device-resident      packed K*n_max corpus fits device memory
-  streaming   fused scan over shard cache   bounded device LRU   corpus > device memory, chunk set fits cache
+  streaming   fused scan over shard cache   n_k-tiered LRU cache corpus > device memory, chunk set fits cache
 
 auto rule: packed_nbytes <= budget -> device; else chunk working set
-(clients_per_round * chunk_rounds slots) <= budget -> streaming; else
-scanned.  Fused planes need a Device* sampler (DeviceSampleable /
-KeyedReplayable capabilities)."""
+(clients_per_round * chunk_rounds clients, priced at the ACTUAL tiered
+cache bytes) <= budget -> streaming; else scanned.  Fused planes need a
+Device* sampler (DeviceSampleable / KeyedReplayable capabilities).
+
+streaming cache slots are n_k-TIERED (CacheSpec.tiers / --cache-tiers):
+clients bucket into power-of-two size tiers so small clients never pay
+n_max-row padding — several-fold fewer cache device bytes under skewed
+n_k, same trajectory bit for bit.  Default: one tier per natural
+power-of-two bucket; --cache-tiers 1 forces the uniform n_max-slot
+layout; --cache-tiers m caps the tier count (smallest buckets merge
+upward)."""
 
 
 def main():
@@ -77,6 +85,10 @@ def main():
     ap.add_argument("--cache-clients", type=int, default=None,
                     help="shard-cache capacity in clients (default: one "
                          "chunk's worst case, m * chunk_rounds)")
+    ap.add_argument("--cache-tiers", type=int, default=None,
+                    help="max n_k slot-size tiers for the shard cache "
+                         "(default: every natural power-of-two bucket; "
+                         "1 = uniform n_max slots)")
     ap.add_argument("--fused-server", action="store_true",
                     help="route FedMom through the fused Pallas update "
                          "(compiled on TPU; interpret mode — slower — on "
@@ -92,7 +104,8 @@ def main():
     budget = (int(args.memory_budget_mb * 2**20)
               if args.memory_budget_mb is not None else None)
     plan = ExecutionPlan(plane=plane, chunk_rounds=args.chunk_rounds,
-                         cache=CacheSpec(clients=args.cache_clients),
+                         cache=CacheSpec(clients=args.cache_clients,
+                                         tiers=args.cache_tiers),
                          memory_budget_bytes=budget)
 
     clients, counts = synthetic_femnist(n_clients=args.clients, seed=0)
@@ -144,7 +157,9 @@ def main():
         if cache is not None:
             sds = trainer.streaming_dataset()
             print(f"shard cache: {len(cache.resident())}/{K} clients "
-                  f"resident in {cache.slots} slots "
+                  f"resident in {cache.slots} slots over "
+                  f"{len(cache.tier_sizes)} size tier(s) "
+                  f"{list(cache.tier_sizes)} "
                   f"({cache.nbytes / 2**20:.2f} MiB of "
                   f"{sds.packed_nbytes / 2**20:.2f} MiB packed), "
                   f"hit-rate {cache.hit_rate:.1%}, "

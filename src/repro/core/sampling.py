@@ -193,16 +193,21 @@ class DeviceDiurnalSampler(_DeviceReplayMixin, DiurnalSampler):
     pairing ``sample_device`` weights with host-assembled batches."""
 
 
-def participants_in_span(sampler, t_lo: int, t_hi: int) -> list:
-    """Distinct client ids drawn in rounds [t_lo, t_hi), via the host replay.
+def participants_in_span(sampler, t_lo: int, t_hi: int,
+                         dedup: bool = True) -> list:
+    """Client ids drawn in rounds [t_lo, t_hi), via the host replay.
 
     Requires a ``Device*`` sampler (keyed draws: the host ``sample`` is a
     stateless replay of the device draw, so peeking ahead never perturbs the
     trajectory).  This is what lets the streaming data plane know chunk
     i+1's participants before its compute is dispatched and overlap their
-    shard uploads with chunk i.  Order is first appearance, which doubles as
-    the LRU recency order for the shard cache.  Padded diurnal slots are
-    included — zero-weight slots still index data in the gather.
+    shard uploads with chunk i.  With ``dedup=True`` (default) each id
+    appears once, in first-appearance order.  ``dedup=False`` returns the
+    RAW round-by-round sequence (repeats kept, round order preserved) — the
+    form ``ShardCache.ensure`` needs so LRU recency lands in last-use
+    order, never first-use (eviction must not target a client the span's
+    final round just drew).  Padded diurnal slots are included —
+    zero-weight slots still index data in the gather.
     """
     if not isinstance(sampler, KeyedReplayable):
         raise ValueError(
@@ -212,8 +217,10 @@ def participants_in_span(sampler, t_lo: int, t_hi: int) -> list:
             "DeviceUniformSampler): a stateful host sampler would peek a "
             "different client set than the in-scan draw uses")
     seen: dict = {}
+    raw: list = []
     for t in range(t_lo, t_hi):
         idx, _ = sampler.sample(t)
         for c in np.asarray(idx).tolist():
+            raw.append(int(c))
             seen.setdefault(int(c), None)
-    return list(seen)
+    return list(seen) if dedup else raw

@@ -7,6 +7,8 @@ from repro.data.stream import (  # noqa: F401
     CacheView,
     ShardCache,
     StreamingFederatedDataset,
+    TierLayout,
+    next_pow2,
 )
 from repro.data.partition import (  # noqa: F401
     dirichlet_partition,

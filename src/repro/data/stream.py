@@ -1,4 +1,4 @@
-"""Streaming shard-cached federated data plane (Data plane v2).
+"""Streaming shard-cached federated data plane (Data plane v2, tiered slots).
 
 The device-resident plane (``data/device.py``) pays ``K * n_max * itemsize``
 per field — the whole padded corpus up front.  In the paper's motivating
@@ -6,36 +6,60 @@ setting (mobile crowdsensing, devices "continuously generate a significant
 quantity of data") and at real federated scale (LEAF FEMNIST/Shakespeare with
 thousands of clients, heavily skewed n_k) that ceiling does not fit device
 memory.  This plane keeps the corpus on HOST as per-client shards and holds
-only the shards of *upcoming participants* in a bounded device-side cache:
+only the shards of *upcoming participants* in a bounded device-side cache.
+
+Slot-size tiers: federated corpora are heavily unbalanced (McMahan et al.
+2016; Li et al. 2019), so padding EVERY cache slot to the global ``n_max``
+lets one huge client inflate the footprint of all resident clients.  The
+cache therefore buckets clients into power-of-two size tiers
+(``n_tier = min(next_pow2(n_k), n_max)``) and allocates per-tier
+``[slots_t, n_tier, ...]`` device arrays with per-tier LRU: a 3-sample
+crowdsensing client costs a 4-row slot, not an ``n_max``-row one.  At
+Zipfian n_k skew this cuts cache device bytes several-fold at equal
+hit-rate.  ``tiers=1`` recovers the uniform single-tier layout (every slot
+``n_max`` rows); ``tiers=m`` caps the number of distinct tiers by merging
+the smallest buckets upward.
 
 * ``StreamingFederatedDataset`` — host per-client shards (same field dtypes
   and the same ``(seed, t, client_id)``-keyed minibatch draws as the other
-  planes), plus the packing metadata (n_max, per-slot bytes) the cache needs;
-* ``ShardCache`` — ``[cache_slots, n_max, ...]`` device arrays per field with
-  LRU eviction over client shards.  Capacity is set in bytes or clients.
-  ``ensure(client_ids)`` uploads the missing shards (one batched scatter per
-  field) and ``view()`` snapshots the cache as a ``CacheView``;
+  planes), plus the packing metadata the cache needs (``tier_layout``:
+  tier sizes, per-client tier assignment, tiered byte accounting);
+* ``ShardCache`` — per-tier ``[slots_t, n_tier, ...]`` device arrays per
+  field with per-tier LRU eviction over client shards.  ``capacity_clients``
+  guarantees any request of that many distinct clients fits regardless of
+  how they spread over tiers (each tier gets ``min(K_t, capacity)`` slots);
+  ``capacity_bytes`` is translated to the largest such guarantee whose
+  tiered footprint fits the budget — a budget below one slot per occupied
+  tier raises (never silently exceeded).  ``ensure(client_ids)`` uploads the
+  missing shards (one batched scatter per tier per field, padded only to the
+  tier's rows) and refreshes LRU recency in LAST-use order of the raw
+  ``client_ids`` sequence; ``view()`` snapshots the cache as a ``CacheView``;
 * ``CacheView`` — a pytree with the exact ``gather_round_batch`` contract of
   ``DeviceFederatedDataset``, so ``core.multiround.scan_rounds_ondevice``
   consumes it unchanged: the in-scan gather resolves a participant through a
-  client→slot indirection table and draws ``minibatch_indices`` keyed by the
-  TRUE client id and n_k — bit-equal to host assembly and to the
-  device-resident gather, keeping all four driver paths on one trajectory.
+  client→(tier, slot) indirection — row-indexing (``a[slot][idx]`` with
+  ``idx < n_k <= n_tier``) yields the same ``[need, ...]`` shape in every
+  tier, so the per-client tier dispatch is a traceable ``lax.switch`` — and
+  draws ``minibatch_indices`` keyed by the TRUE client id and n_k, bit-equal
+  to host assembly and to the device-resident gather, keeping all driver
+  paths on one trajectory.
 
 Overlapped H2D prefetch: ``DeviceUniformSampler``'s host path replays the
 device draw (the ``KeyedReplayable`` capability), so chunk i+1's
 participants are known before its compute is dispatched.  The streaming
 plane (``FederatedTrainer.run(n, plan="streaming")``) calls ``ensure`` for
-chunk i+1 right after dispatching chunk i: the scatters are dispatched
-asynchronously and the uploads overlap chunk i's scanned compute.
+chunk i+1 right after dispatching chunk i: the per-tier scatters are
+dispatched asynchronously and the uploads overlap chunk i's scanned compute.
 Updates are functional (``.at[slots].set``), so the arrays captured by chunk
 i's ``CacheView`` are immutable — later uploads and evictions can never
 corrupt an in-flight chunk (double buffering for free).
 """
 from __future__ import annotations
 
+from bisect import bisect_left
 from collections import OrderedDict
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +69,60 @@ from repro.core.sampling import ClientPopulation
 from repro.data.federated import (FederatedDataset, minibatch_indices,
                                   validate_client_data)
 from repro.sharding import rules as sharding_rules
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << (int(n) - 1).bit_length()
+
+
+@dataclass(frozen=True)
+class TierLayout:
+    """How a corpus buckets into slot-size tiers (host metadata only).
+
+    ``sizes``: ascending tier row capacities; the last always covers n_max.
+    ``tier_of``: [K] tier index per client (the smallest tier whose rows
+    hold the client's n_k).  ``tier_counts``: clients per tier.
+    ``row_nbytes``: device bytes of ONE sample row summed over fields — a
+    tier-``t`` slot costs ``sizes[t] * row_nbytes``.
+    """
+    sizes: Tuple[int, ...]
+    tier_of: np.ndarray
+    tier_counts: Tuple[int, ...]
+    row_nbytes: int
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.sizes)
+
+    def slot_nbytes(self, tier: int) -> int:
+        return self.sizes[tier] * self.row_nbytes
+
+    def bytes_for_capacity(self, capacity: int) -> int:
+        """Tiered device footprint of a cache guaranteeing ``capacity``
+        distinct clients per request: each tier holds
+        ``min(K_t, capacity)`` slots of its own row size."""
+        return sum(min(k_t, capacity) * self.slot_nbytes(t)
+                   for t, k_t in enumerate(self.tier_counts))
+
+    @property
+    def min_viable_bytes(self) -> int:
+        """One slot in every occupied tier — the smallest honest cache."""
+        return self.bytes_for_capacity(1)
+
+    def capacity_for_bytes(self, budget: int) -> Optional[int]:
+        """Largest per-request client guarantee whose tiered footprint fits
+        ``budget`` (bytes), or None when even one slot per occupied tier
+        does not fit.  bytes_for_capacity is monotone in capacity, so a
+        linear scan up to max(K_t) suffices (K is host metadata, tiny)."""
+        if self.bytes_for_capacity(1) > budget:
+            return None
+        cap = 1
+        for c in range(2, max(self.tier_counts) + 1):
+            if self.bytes_for_capacity(c) > budget:
+                break
+            cap = c
+        return cap
 
 
 class StreamingFederatedDataset:
@@ -77,11 +155,17 @@ class StreamingFederatedDataset:
         return len(self.data)
 
     @property
-    def slot_nbytes(self) -> int:
-        """Device bytes one cached client costs (padded to n_max)."""
-        return sum(self.n_max * int(np.prod(tail, dtype=np.int64))
+    def row_nbytes(self) -> int:
+        """Device bytes of one sample row, summed over fields."""
+        return sum(int(np.prod(tail, dtype=np.int64))
                    * np.dtype(dtype).itemsize
                    for tail, dtype in self.fields.values())
+
+    @property
+    def slot_nbytes(self) -> int:
+        """Device bytes one UNIFORM cache slot costs (padded to n_max) —
+        what every resident client pays in the tiers=1 layout."""
+        return self.n_max * self.row_nbytes
 
     @property
     def packed_nbytes(self) -> int:
@@ -89,16 +173,44 @@ class StreamingFederatedDataset:
         compare against a cache budget to pick a plane."""
         return self.n_clients * self.slot_nbytes
 
+    def tier_layout(self, tiers: Optional[int] = None) -> TierLayout:
+        """Bucket clients into power-of-two slot-size tiers.
+
+        Natural tiers are the distinct ``min(next_pow2(n_k), n_max)`` values
+        present in the corpus (a client whose n_k is an exact power of two
+        lands in that tier, not the next one).  ``tiers=m`` keeps only the
+        m LARGEST natural sizes — clients of merged-away small tiers pad up
+        into the smallest kept tier — so ``tiers=1`` is exactly the uniform
+        n_max-slot layout.  ``tiers=None`` keeps every natural tier.
+        """
+        natural = sorted({min(next_pow2(int(n)), self.n_max)
+                          for n in self.counts})
+        if tiers is not None:
+            if int(tiers) < 1:
+                raise ValueError(f"tiers must be >= 1, got {tiers!r}")
+            natural = natural[-int(tiers):]
+        sizes = tuple(natural)
+        tier_of = np.asarray(
+            [bisect_left(sizes, min(next_pow2(int(n)), self.n_max))
+             for n in self.counts], np.int32)
+        tier_counts = tuple(int((tier_of == t).sum())
+                            for t in range(len(sizes)))
+        return TierLayout(sizes=sizes, tier_of=tier_of,
+                          tier_counts=tier_counts,
+                          row_nbytes=self.row_nbytes)
+
     def population(self) -> ClientPopulation:
         return ClientPopulation(counts=np.asarray(self.counts))
 
     def base_key(self):
         return jax.random.PRNGKey(self.seed)
 
-    def padded_shard(self, cid: int, name: str) -> np.ndarray:
-        """Client ``cid``'s field ``name`` padded to [n_max, ...] (host)."""
+    def padded_shard(self, cid: int, name: str,
+                     rows: Optional[int] = None) -> np.ndarray:
+        """Client ``cid``'s field ``name`` padded to [rows, ...] (host);
+        ``rows`` defaults to the global n_max, a tier passes its own size."""
         tail, dtype = self.fields[name]
-        out = np.zeros((self.n_max,) + tail, dtype)
+        out = np.zeros((self.n_max if rows is None else rows,) + tail, dtype)
         arr = np.asarray(self.data[cid][name])
         out[: len(arr)] = arr
         return out
@@ -109,32 +221,39 @@ class CacheView:
     """Immutable snapshot of a ``ShardCache`` for one chunk dispatch.
 
     Same ``gather_round_batch`` contract as ``DeviceFederatedDataset`` (so
-    ``scan_rounds_ondevice`` takes it verbatim), over a compacted
-    ``[cache_slots, n_max, ...]`` corpus: ``client_slots`` ([K] int32, -1
-    when absent) resolves a participant to its cache slot, while the draw
-    stays keyed by the true client id and true n_k — bit-equal to every
-    other plane.
+    ``scan_rounds_ondevice`` takes it verbatim), over per-tier compacted
+    ``[slots_t, n_tier, ...]`` corpora: ``client_tiers``/``client_slots``
+    ([K] int32, slot -1 when absent) resolve a participant to its tier and
+    cache slot, while the draw stays keyed by the true client id and true
+    n_k — bit-equal to every other plane.
     """
 
-    def __init__(self, arrays: Dict[str, jax.Array], counts: jax.Array,
+    def __init__(self, tier_arrays: Tuple[Dict[str, jax.Array], ...],
+                 counts: jax.Array, client_tiers: jax.Array,
                  client_slots: jax.Array, seed: int = 0):
-        self.arrays = arrays
+        self.tier_arrays = tuple(tier_arrays)
         self.counts = counts            # [K] true n_k (not slot-compacted)
-        self.client_slots = client_slots  # [K] int32 client -> slot
+        self.client_tiers = client_tiers  # [K] int32 client -> tier
+        self.client_slots = client_slots  # [K] int32 client -> slot in tier
         self.seed = seed
 
     # -- pytree protocol (jit-arg friendly) -----------------------------
     def tree_flatten(self):
-        keys = tuple(sorted(self.arrays))
-        children = tuple(self.arrays[k] for k in keys) + (
-            self.counts, self.client_slots)
-        return children, (keys, self.seed)
+        keys = tuple(sorted(self.tier_arrays[0]))
+        children = tuple(arrs[k] for arrs in self.tier_arrays
+                         for k in keys) + (
+            self.counts, self.client_tiers, self.client_slots)
+        return children, (keys, len(self.tier_arrays), self.seed)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        keys, seed = aux
-        *leaves, counts, client_slots = children
-        return cls(dict(zip(keys, leaves)), counts, client_slots, seed)
+        keys, n_tiers, seed = aux
+        *leaves, counts, client_tiers, client_slots = children
+        per = len(keys)
+        tier_arrays = tuple(
+            dict(zip(keys, leaves[t * per:(t + 1) * per]))
+            for t in range(n_tiers))
+        return cls(tier_arrays, counts, client_tiers, client_slots, seed)
 
     def base_key(self):
         return jax.random.PRNGKey(self.seed)
@@ -144,32 +263,64 @@ class CacheView:
                            local_steps: int, batch_size: int):
         """Round ``t``'s ``[C, H, b, ...]`` batch stack, fully traceable.
 
-        Indirection happens only on the DATA fetch (``arrays[name][slot]``);
-        the index draw is ``minibatch_indices(key, t, cid, n_k, need)`` with
+        Indirection happens only on the DATA fetch: a ``lax.switch`` over
+        the client's tier selects which ``[slots_t, n_tier, ...]`` corpus
+        to row-index — every branch returns the same ``[need, ...]`` shape
+        because ``idx < n_k <= n_tier`` in the client's own tier.  The
+        index draw is ``minibatch_indices(key, t, cid, n_k, need)`` with
         the true client id — the same numbers every other plane draws.
+
+        Cost note: under ``vmap`` the batched switch evaluates every
+        branch and selects, so the gather reads ``need`` rows from EACH
+        tier corpus per participant (n_tiers x the uniform gather traffic
+        for an O(H*b)-row fetch — small next to the local-step compute on
+        those same rows, and bounded by ``CacheSpec.tiers`` when a corpus
+        spans many natural power-of-two buckets).
         """
         need = local_steps * batch_size
+
+        def rows_in(tier):
+            def branch(slot, idx):
+                return {name: a[slot][idx]
+                        for name, a in self.tier_arrays[tier].items()}
+            return branch
 
         def one(cid):
             slot = self.client_slots[cid]
             idx = minibatch_indices(key, t, cid, self.counts[cid], need)
+            if len(self.tier_arrays) == 1:
+                rows = rows_in(0)(slot, idx)
+            else:
+                rows = jax.lax.switch(
+                    self.client_tiers[cid],
+                    [rows_in(t_) for t_ in range(len(self.tier_arrays))],
+                    slot, idx)
             return {
-                name: a[slot][idx].reshape(
-                    (local_steps, batch_size) + a.shape[2:])
-                for name, a in self.arrays.items()
+                name: r.reshape((local_steps, batch_size) + r.shape[1:])
+                for name, r in rows.items()
             }
 
         return jax.vmap(one)(jnp.asarray(client_ids))
 
 
 class ShardCache:
-    """Bounded device-side LRU cache of client shards.
+    """Bounded device-side LRU cache of client shards, tiered by n_k.
 
-    Capacity: ``capacity_clients`` slots, or ``capacity_bytes`` translated
-    through the dataset's per-slot footprint (whichever is tighter when both
-    are given), clamped to [1, K].  ``ensure`` raises when one request needs
-    more distinct clients than there are slots — the caller must shrink
-    ``chunk_rounds`` or grow the cache, never silently thrash.
+    ``capacity_clients`` is a per-request guarantee: any ``ensure`` of that
+    many distinct clients fits no matter how they spread over size tiers
+    (tier t gets ``min(K_t, capacity)`` slots of its own row size, so total
+    allocated slots can exceed the capacity while total bytes stay far below
+    the uniform layout under skew).  ``capacity_bytes`` is translated to the
+    largest such guarantee whose tiered footprint fits (tighter wins when
+    both are given); a budget below one slot per occupied tier raises a
+    ``ValueError`` naming the minimum viable budget instead of silently
+    exceeding the declaration.  ``ensure`` raises when one request needs
+    more distinct clients than the capacity guarantee — the caller must
+    shrink ``chunk_rounds`` or grow the cache, never silently thrash.
+
+    ``tiers``: None keeps every natural power-of-two tier; ``tiers=1`` is
+    the uniform single-tier layout (every slot n_max rows); ``tiers=m``
+    merges the smallest buckets upward into at most m tiers.
 
     Slot updates are functional scatters, so views snapshotted before an
     ``ensure`` stay valid while it uploads (this is what lets the streaming
@@ -178,25 +329,41 @@ class ShardCache:
 
     def __init__(self, dataset: StreamingFederatedDataset,
                  capacity_clients: Optional[int] = None,
-                 capacity_bytes: Optional[int] = None):
+                 capacity_bytes: Optional[int] = None,
+                 tiers: Optional[int] = None):
         if capacity_clients is None and capacity_bytes is None:
             raise ValueError(
                 "ShardCache needs capacity_clients or capacity_bytes")
-        slots = dataset.n_clients
+        layout = dataset.tier_layout(tiers)
+        cap = dataset.n_clients
         if capacity_clients is not None:
-            slots = min(slots, int(capacity_clients))
+            cap = min(cap, max(1, int(capacity_clients)))
         if capacity_bytes is not None:
-            slots = min(slots, int(capacity_bytes) // dataset.slot_nbytes)
-        self.slots = max(1, slots)
+            by_bytes = layout.capacity_for_bytes(int(capacity_bytes))
+            if by_bytes is None:
+                raise ValueError(
+                    f"capacity_bytes={int(capacity_bytes)} is below the "
+                    f"minimum viable cache budget: one slot in each of the "
+                    f"{layout.n_tiers} occupied size tier(s) (rows "
+                    f"{layout.sizes}) needs {layout.min_viable_bytes} B — "
+                    f"raise capacity_bytes to at least that, or declare "
+                    f"capacity_clients instead")
+            cap = min(cap, by_bytes)
+        self.capacity = cap
+        self.layout = layout
+        self.tier_slots = tuple(min(k_t, cap) for k_t in layout.tier_counts)
         self.dataset = dataset
-        self.arrays = {
-            name: self._put(np.zeros((self.slots, dataset.n_max) + tail,
-                                     dtype))
-            for name, (tail, dtype) in dataset.fields.items()
-        }
+        self.tier_arrays = [
+            {name: self._put(np.zeros((slots_t, size_t) + tail, dtype))
+             for name, (tail, dtype) in dataset.fields.items()}
+            for slots_t, size_t in zip(self.tier_slots, layout.sizes)
+        ]
         self._counts_dev = jnp.asarray(dataset.counts)
-        self._slot_of: Dict[int, int] = {}
-        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self._tier_of = layout.tier_of
+        self._slot_of: List[Dict[int, int]] = [
+            {} for _ in range(layout.n_tiers)]
+        self._lru: List["OrderedDict[int, None]"] = [
+            OrderedDict() for _ in range(layout.n_tiers)]
         self.hits = self.misses = self.evictions = 0
 
     @staticmethod
@@ -209,58 +376,88 @@ class ShardCache:
 
     # -- inspection -----------------------------------------------------
     @property
+    def slots(self) -> int:
+        """Total allocated slots across tiers (>= capacity when clients
+        spread over tiers; bytes, not slot count, is the footprint)."""
+        return sum(self.tier_slots)
+
+    @property
+    def tier_sizes(self) -> Tuple[int, ...]:
+        return self.layout.sizes
+
+    @property
     def nbytes(self) -> int:
         """Device footprint of the cache (<= dataset.packed_nbytes)."""
-        return sum(int(a.nbytes) for a in self.arrays.values())
+        return sum(int(a.nbytes) for arrs in self.tier_arrays
+                   for a in arrs.values())
 
     @property
     def hit_rate(self) -> float:
         return self.hits / max(self.hits + self.misses, 1)
 
     def resident(self) -> set:
-        return set(self._slot_of)
+        return set().union(*(set(s) for s in self._slot_of))
 
     # -- population -----------------------------------------------------
     def ensure(self, client_ids) -> None:
-        """Make every client in ``client_ids`` resident (LRU eviction, one
-        batched async scatter per field for the missing shards)."""
-        need = list(OrderedDict((int(c), None) for c in client_ids))
+        """Make every client in ``client_ids`` resident (per-tier LRU
+        eviction, one batched async scatter per tier per field for the
+        missing shards).  ``client_ids`` may repeat — pass the chunk's RAW
+        per-round participant sequence so recency refresh lands in
+        LAST-use order (eviction must never target a client the chunk's
+        final round just used)."""
+        seq = [int(c) for c in client_ids]
+        need = list(OrderedDict((c, None) for c in seq))
         distinct = set(need)
-        if len(distinct) > self.slots:
+        if len(distinct) > self.capacity:
             raise ValueError(
                 f"chunk needs {len(distinct)} distinct clients but the "
-                f"shard cache has {self.slots} slots; lower chunk_rounds or "
-                f"raise the cache capacity")
-        fresh = [cid for cid in need if cid not in self._slot_of]
-        self.hits += len(need) - len(fresh)
-        self.misses += len(fresh)
-        assigned = []
-        for cid in fresh:
-            if len(self._slot_of) < self.slots:
-                slot = len(self._slot_of)
-            else:
-                victim = next(c for c in self._lru if c not in distinct)
-                slot = self._slot_of.pop(victim)
-                del self._lru[victim]
-                self.evictions += 1
-            self._slot_of[cid] = slot
-            assigned.append(slot)
-        for cid in need:                     # refresh recency, oldest first
-            self._lru[cid] = None
-            self._lru.move_to_end(cid)
-        if not fresh:
-            return
-        idx = jnp.asarray(np.asarray(assigned, np.int32))
-        for name in self.arrays:
-            stacked = np.stack(
-                [self.dataset.padded_shard(cid, name) for cid in fresh])
-            self.arrays[name] = self.arrays[name].at[idx].set(
-                self._put(stacked))
+                f"shard cache guarantees {self.capacity} slots; lower "
+                f"chunk_rounds or raise the cache capacity")
+        fresh_by_tier: Dict[int, List[int]] = {}
+        n_fresh = 0
+        for cid in need:
+            tier = int(self._tier_of[cid])
+            if cid not in self._slot_of[tier]:
+                fresh_by_tier.setdefault(tier, []).append(cid)
+                n_fresh += 1
+        self.hits += len(need) - n_fresh
+        self.misses += n_fresh
+        for tier, fresh in fresh_by_tier.items():
+            slot_of, lru = self._slot_of[tier], self._lru[tier]
+            assigned = []
+            for cid in fresh:
+                if len(slot_of) < self.tier_slots[tier]:
+                    slot = len(slot_of)
+                else:
+                    # guaranteed to exist: distinct-in-tier <= min(K_t,
+                    # capacity) = tier_slots[tier] once the global check
+                    # above passed
+                    victim = next(c for c in lru if c not in distinct)
+                    slot = slot_of.pop(victim)
+                    del lru[victim]
+                    self.evictions += 1
+                slot_of[cid] = slot
+                assigned.append(slot)
+            idx = jnp.asarray(np.asarray(assigned, np.int32))
+            rows = self.layout.sizes[tier]
+            arrs = self.tier_arrays[tier]
+            for name in arrs:
+                stacked = np.stack(
+                    [self.dataset.padded_shard(cid, name, rows=rows)
+                     for cid in fresh])
+                arrs[name] = arrs[name].at[idx].set(self._put(stacked))
+        for cid in seq:             # refresh recency in LAST-use order
+            lru = self._lru[int(self._tier_of[cid])]
+            lru[cid] = None
+            lru.move_to_end(cid)
 
     def view(self) -> CacheView:
         """Snapshot the cache for one chunk dispatch (see class docstring)."""
         client_slots = np.full(self.dataset.n_clients, -1, np.int32)
-        for cid, slot in self._slot_of.items():
-            client_slots[cid] = slot
-        return CacheView(dict(self.arrays), self._counts_dev,
+        for slot_of in self._slot_of:
+            for cid, slot in slot_of.items():
+                client_slots[cid] = slot
+        return CacheView(tuple(dict(arrs) for arrs in self.tier_arrays),
+                         self._counts_dev, jnp.asarray(self._tier_of),
                          jnp.asarray(client_slots), self.dataset.seed)

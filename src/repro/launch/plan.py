@@ -71,11 +71,18 @@ class PlanError(ValueError):
 @dataclass(frozen=True)
 class CacheSpec:
     """Shard-cache budget for the streaming plane (and the working-set term
-    of the auto rule): capacity in ``clients`` (slots) and/or ``bytes``
-    (tighter wins); both ``None`` means one chunk's worst-case working set,
-    ``clients_per_round * chunk_rounds`` slots."""
+    of the auto rule): capacity in ``clients`` (a per-chunk distinct-client
+    guarantee) and/or ``bytes`` (tighter wins); both ``None`` means one
+    chunk's worst-case working set, ``clients_per_round * chunk_rounds``.
+
+    ``tiers`` controls n_k-tiered slot sizing: ``None`` (default) buckets
+    clients into every natural power-of-two size tier so small clients
+    never pay n_max-row padding; ``1`` recovers the uniform single-tier
+    layout; ``m`` caps the tier count, merging the smallest buckets upward.
+    Tiering changes only the cache footprint, never the trajectory."""
     clients: Optional[int] = None
     bytes: Optional[int] = None
+    tiers: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -133,6 +140,7 @@ class ExecutionPlan:
                 plane=plane)
         for name, v in (("cache.clients", self.cache.clients),
                         ("cache.bytes", self.cache.bytes),
+                        ("cache.tiers", self.cache.tiers),
                         ("memory_budget_bytes", self.memory_budget_bytes),
                         ("local_batch", self.local_batch)):
             if v is not None and (not isinstance(v, int) or v < 1):
@@ -313,21 +321,43 @@ def resolve(plan: ExecutionPlan, trainer, n_rounds: int) -> PlanDecision:
             f"packed corpus ({packed} B) fits the device memory budget "
             f"({'unbounded' if budget is None else f'{budget} B'})",
             packed_nbytes=packed, budget_bytes=budget)
-    if plan.cache.clients is not None:
-        slots = plan.cache.clients
-    elif plan.cache.bytes is not None:
-        slots = max(1, plan.cache.bytes // sds.slot_nbytes)
+    # streaming working set: the ACTUAL tiered cache footprint the declared
+    # CacheSpec would allocate, not a uniform slot_nbytes multiple — under
+    # n_k skew the tiered bytes are several-fold smaller, which can flip
+    # the plane choice at mid budgets
+    layout = sds.tier_layout(plan.cache.tiers)
+    if plan.cache.clients is None and plan.cache.bytes is None:
+        cap = min(trainer.rcfg.clients_per_round * plan.chunk_rounds,
+                  sds.n_clients)
     else:
-        slots = trainer.rcfg.clients_per_round * plan.chunk_rounds
-    slots = min(slots, sds.n_clients)
-    working_set = slots * sds.slot_nbytes
-    if isinstance(sampler, KeyedReplayable) and (budget is None
-                                                 or working_set <= budget):
+        # mirror ShardCache exactly (tighter declaration wins); None when
+        # the declared byte budget is below one slot per occupied tier —
+        # ShardCache would refuse it, so streaming is out
+        cap = sds.n_clients
+        if plan.cache.clients is not None:
+            cap = min(cap, plan.cache.clients)
+        if plan.cache.bytes is not None:
+            by_bytes = layout.capacity_for_bytes(plan.cache.bytes)
+            cap = None if by_bytes is None else min(cap, by_bytes)
+    working_set = None if cap is None else layout.bytes_for_capacity(cap)
+    if (cap is not None and isinstance(sampler, KeyedReplayable)
+            and (budget is None or working_set <= budget)):
+        # say what actually ruled the device plane out: the budget only
+        # when there IS one and the corpus exceeds it, the missing
+        # capability otherwise (never "exceeds the budget (None B)")
+        if not isinstance(sampler, DeviceSampleable):
+            blocked = (f"the device plane is out (sampler "
+                       f"{type(sampler).__name__} lacks DeviceSampleable)")
+        else:
+            blocked = (f"packed corpus ({packed} B) exceeds the budget "
+                       f"({budget} B)")
+        fits = ("the unbounded budget" if budget is None
+                else f"the budget ({budget} B)")
         return PlanDecision(
             "streaming", True,
-            f"packed corpus ({packed} B) exceeds the budget ({budget} B) "
-            f"but one chunk's participant working set ({slots} slots, "
-            f"{working_set} B) fits it",
+            f"{blocked} but one chunk's participant working set ({cap} "
+            f"clients over {layout.n_tiers} size tier(s), {working_set} B "
+            f"tiered) fits {fits}",
             packed_nbytes=packed, budget_bytes=budget,
             working_set_nbytes=working_set)
     if not isinstance(sampler, DeviceSampleable):
@@ -339,9 +369,14 @@ def resolve(plan: ExecutionPlan, trainer, n_rounds: int) -> PlanDecision:
                f"{type(sampler).__name__} lacks KeyedReplayable (host "
                f"sample does not replay the keyed draw), so streaming is "
                f"out")
+    elif cap is None:
+        why = (f"the declared cache budget ({plan.cache.bytes} B) is below "
+               f"the minimum viable tiered cache ({layout.min_viable_bytes} "
+               f"B: one slot in each of {layout.n_tiers} occupied size "
+               f"tier(s)), so streaming is out")
     else:
-        why = (f"even one chunk's participant working set ({working_set} B) "
-               f"exceeds the budget ({budget} B)")
+        why = (f"even one chunk's participant working set ({working_set} B "
+               f"tiered) exceeds the budget ({budget} B)")
     check_plane("scanned", sampler, dataset)   # structured error, never a
     return PlanDecision(                       # raw crash downstream
         "scanned", True, f"host prefetch-queue fallback: {why}",
@@ -417,13 +452,18 @@ class TrainSession:
 
     def shard_cache_for(self, sds: StreamingFederatedDataset,
                         capacity_clients: Optional[int],
-                        capacity_bytes: Optional[int]) -> ShardCache:
+                        capacity_bytes: Optional[int],
+                        tiers: Optional[int] = None) -> ShardCache:
         """The persistent cache, rebuilt only when the dataset or the
-        declared capacity changes (same capacity => warm reuse)."""
-        key = (id(sds), capacity_clients, capacity_bytes)
+        declared capacity/tiering changes (same declaration => warm reuse).
+        Keyed on ``_IdKey(sds)``, never bare ``id(sds)``: the key holds a
+        strong reference, so a rebuilt dataset can never land on a recycled
+        id and silently inherit another corpus's resident shards."""
+        key = (_IdKey(sds), capacity_clients, capacity_bytes, tiers)
         if self.shard_cache is None or self._cache_key != key:
             self.shard_cache = ShardCache(sds,
                                           capacity_clients=capacity_clients,
-                                          capacity_bytes=capacity_bytes)
+                                          capacity_bytes=capacity_bytes,
+                                          tiers=tiers)
             self._cache_key = key
         return self.shard_cache

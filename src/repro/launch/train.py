@@ -26,10 +26,11 @@ bit, certified on the shared ``tests/_trajectory.py`` harness:
   ``DeviceSampleable`` sampler capability.
 * ``plan="streaming"`` — the corpus stays on HOST as per-client shards and a
   bounded device-side LRU ``ShardCache`` (``cache=CacheSpec(...)``) holds
-  only upcoming participants' shards, with chunk i+1's uploads dispatched
-  right after chunk i's compute (double-buffered staging).  Needs the
-  ``KeyedReplayable`` capability (the host replay is what names chunk i+1's
-  participants ahead of time).
+  only upcoming participants' shards in n_k-tiered slots (power-of-two size
+  buckets, ``CacheSpec.tiers``; small clients never pay n_max-row padding),
+  with chunk i+1's uploads dispatched right after chunk i's compute
+  (double-buffered staging).  Needs the ``KeyedReplayable`` capability (the
+  host replay is what names chunk i+1's participants ahead of time).
 * ``plan="auto"`` — the system resolves the plane from the memory budget vs
   ``packed_nbytes`` and the chunk working-set rule (``launch/plan.py:
   resolve``); the decision is logged into ``session.plan_log``, the history
@@ -382,6 +383,7 @@ class FederatedTrainer:
                                         eval_fn, verbose, resume)
             return self._run_streaming(n_rounds, plan.chunk_rounds,
                                        plan.cache.clients, plan.cache.bytes,
+                                       plan.cache.tiers,
                                        bool(plan.prefetch), eval_fn,
                                        verbose, resume)
         finally:
@@ -526,18 +528,24 @@ class FederatedTrainer:
 
     def _run_streaming(self, n_rounds: int, chunk_rounds: int,
                        cache_clients: Optional[int],
-                       cache_bytes: Optional[int], prefetch: bool, eval_fn,
+                       cache_bytes: Optional[int],
+                       cache_tiers: Optional[int], prefetch: bool, eval_fn,
                        verbose: bool, resume: bool):
         t0 = self._resume_round(resume)
         sds = self.streaming_dataset()
         if cache_clients is None and cache_bytes is None:
             cache_clients = self.rcfg.clients_per_round * chunk_rounds
-        cache = self.session.shard_cache_for(sds, cache_clients, cache_bytes)
+        cache = self.session.shard_cache_for(sds, cache_clients, cache_bytes,
+                                             cache_tiers)
         spans = [(s, min(s + chunk_rounds, n_rounds))
                  for s in range(t0, n_rounds, chunk_rounds)]
 
         def prepare(i):
-            return participants_in_span(self.sampler, *spans[i])
+            # raw per-round sequence (dedup=False): ensure() refreshes LRU
+            # recency from it in last-use order, so cross-chunk eviction
+            # never targets a client the chunk's final round just used
+            return participants_in_span(self.sampler, *spans[i],
+                                        dedup=False)
 
         def upload(parts):
             cache.ensure(parts)

@@ -50,8 +50,9 @@ FED_MESH_RULES: AxisRules = {
     "layers": None,
     "lora": None,
     # streaming shard cache: slot order is LRU-arbitrary (a round's clients
-    # land in unrelated slots), so the cached corpus stays replicated — the
-    # in-scan gather would otherwise cross data shards every round
+    # land in unrelated slots of unrelated n_k size tiers), so every tier's
+    # [slots_t, n_tier, ...] corpus stays replicated — the in-scan
+    # (tier, slot) gather would otherwise cross data shards every round
     "cache_slots": None,
     # server master/momentum state: ZeRO-shard the embed dim over data
     "opt_embed": _DP,

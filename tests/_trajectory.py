@@ -41,10 +41,15 @@ from repro.launch.plan import CacheSpec, ExecutionPlan
 from repro.launch.train import FederatedTrainer
 
 DRIVERS = ("per-round", "scanned", "device", "streaming")
+# "streaming" uses the default n_k-tiered shard cache; "streaming-uniform"
+# pins CacheSpec(tiers=1) — the single-tier n_max-slot layout.  Same plane,
+# same trajectory, different cache footprint.
+STREAM_VARIANTS = ("streaming", "streaming-uniform")
 AUTO_DRIVERS = DRIVERS + ("auto",)
 LEGACY_SHIMS = os.environ.get("REPRO_LEGACY_DRIVERS", "") == "1"
 _PLANE_OF = {"per-round": "per_round", "scanned": "scanned",
-             "device": "device", "streaming": "streaming", "auto": "auto"}
+             "device": "device", "streaming": "streaming",
+             "streaming-uniform": "streaming", "auto": "auto"}
 
 
 def linreg_loss(params, batch):
@@ -113,18 +118,25 @@ def _run_legacy_shim(tr, driver, n_rounds, chunk_rounds, **kw):
 def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
     """Dispatch ``n_rounds`` to the named plane with quiet defaults.
 
-    ``driver`` is a DRIVERS/AUTO_DRIVERS name; extra ``cache_clients`` /
-    ``cache_bytes`` / ``memory_budget_bytes`` kwargs land on the
+    ``driver`` is a DRIVERS/AUTO_DRIVERS name or ``"streaming-uniform"``
+    (the tiers=1 cache layout); extra ``cache_clients`` / ``cache_bytes`` /
+    ``cache_tiers`` / ``memory_budget_bytes`` kwargs land on the
     ``ExecutionPlan``, the rest (``resume``, ``eval_fn``) pass through to
     ``run``.  Returns the trajectory records (audit events stripped).
     """
     if driver not in _PLANE_OF:
         raise ValueError(
-            f"unknown driver {driver!r} (want one of {AUTO_DRIVERS})")
+            f"unknown driver {driver!r} (want one of "
+            f"{AUTO_DRIVERS + STREAM_VARIANTS[1:]})")
     cache = CacheSpec(clients=kw.pop("cache_clients", None),
-                      bytes=kw.pop("cache_bytes", None))
+                      bytes=kw.pop("cache_bytes", None),
+                      tiers=kw.pop("cache_tiers",
+                                   1 if driver == "streaming-uniform"
+                                   else None))
     budget = kw.pop("memory_budget_bytes", None)
-    if LEGACY_SHIMS and driver != "auto":
+    if LEGACY_SHIMS and driver in DRIVERS:
+        # streaming-uniform has no legacy shim (run_streaming predates the
+        # tiers knob) — it always routes through the plan API below
         hist = _run_legacy_shim(tr, driver, n_rounds, chunk_rounds,
                                 **({"cache_clients": cache.clients,
                                     "cache_bytes": cache.bytes}

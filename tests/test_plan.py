@@ -66,10 +66,13 @@ def test_auto_picks_device_when_corpus_fits_budget():
 
 
 def test_auto_picks_streaming_at_mid_budget():
-    """Budget below the packed corpus but above one chunk's working set."""
+    """Budget below the packed corpus but above one chunk's working set —
+    the working set priced at the ACTUAL tiered cache footprint."""
     clients = make_clients(seed=17, n=8)
     sds = _sds_of(clients)
-    budget = 4 * sds.slot_nbytes          # < packed (8 slots), >= 3-slot set
+    # exactly one chunk's tiered working set (M=3 distinct, chunk_rounds=1):
+    # far below packed, and precisely what the cache will allocate
+    budget = sds.tier_layout().bytes_for_capacity(3)
     tr = make_trainer(fedmom(), default_rcfg(), clients)
     tr.run(4, plan=ExecutionPlan(plane="auto", chunk_rounds=1,
                                  memory_budget_bytes=budget),
@@ -165,6 +168,75 @@ def test_partial_dataset_contracts_raise_structured_errors():
     assert ei.value.plane == "streaming"
 
 
+def test_auto_working_set_priced_at_tiered_bytes():
+    """The auto rule's working-set term is the ACTUAL tiered footprint, not
+    slots * uniform slot_nbytes: under n_k skew a budget too small for the
+    uniform working set still resolves to streaming (pre-tentpole this fell
+    back to scanned)."""
+    rng = np.random.default_rng(5)
+    clients = []
+    for n in (64, 3, 5, 2, 7, 4, 6, 3):          # one huge, many tiny
+        x = rng.normal(size=(n, 5)).astype(np.float32)
+        clients.append({"x": x, "y": x[:, 0].copy()})
+    sds = _sds_of(clients)
+    uniform_ws = 3 * sds.slot_nbytes             # 3 clients at n_max rows
+    tiered_ws = sds.tier_layout().bytes_for_capacity(3)
+    assert tiered_ws < uniform_ws
+    tr = make_trainer(fedmom(), default_rcfg(), clients, local_batch=2)
+    dec = resolve(as_plan(ExecutionPlan(plane="auto", chunk_rounds=1,
+                                        memory_budget_bytes=tiered_ws)),
+                  tr, 4)
+    assert dec.plane == "streaming"
+    assert dec.working_set_nbytes == tiered_ws <= dec.budget_bytes
+
+
+def test_auto_skips_streaming_when_cache_bytes_below_viable():
+    """A declared CacheSpec.bytes below one slot per occupied tier can never
+    be honored — auto must fall to scanned and say why, instead of letting
+    ShardCache blow up mid-run."""
+    clients = make_clients(seed=107, n=6)
+    tr = make_trainer(fedmom(), default_rcfg(), clients)
+    dec = resolve(as_plan(ExecutionPlan(
+        plane="auto", chunk_rounds=1, cache=CacheSpec(bytes=1),
+        memory_budget_bytes=1 << 10)), tr, 4)
+    assert dec.plane == "scanned"
+    assert "minimum viable" in dec.reason
+    # ... including when a (viable) clients cap rides along: the byte
+    # declaration still wins, exactly as ShardCache enforces it
+    dec2 = resolve(as_plan(ExecutionPlan(
+        plane="auto", chunk_rounds=1, cache=CacheSpec(clients=3, bytes=1),
+        memory_budget_bytes=1 << 10)), tr, 4)
+    assert dec2.plane == "scanned"
+    assert "minimum viable" in dec2.reason
+
+
+def test_streaming_reason_with_unbounded_budget_names_capability(
+        monkeypatch):
+    """Regression: when the device plane is skipped for a CAPABILITY (not
+    the budget) and the budget is unbounded, the streaming decision used to
+    claim 'packed corpus (… B) exceeds the budget (None B)'.  The audited
+    reason must state what actually happened."""
+    from typing import Protocol, runtime_checkable
+
+    import repro.launch.plan as plan_mod
+
+    @runtime_checkable
+    class _MissingCap(Protocol):
+        def not_a_sampler_method(self): ...
+
+    clients = make_clients(seed=109)
+    tr = make_trainer(fedmom(), default_rcfg(), clients)
+    # simulate a sampler that streams (KeyedReplayable) but cannot run the
+    # fused device plane: the resolve-time DeviceSampleable gate fails
+    monkeypatch.setattr(plan_mod, "DeviceSampleable", _MissingCap)
+    dec = plan_mod.resolve(as_plan("auto"), tr, 4)
+    assert dec.plane == "streaming"
+    assert dec.budget_bytes is None
+    assert "None" not in dec.reason                  # no "(None B)"
+    assert "DeviceSampleable" in dec.reason          # the real blocker
+    assert "unbounded" in dec.reason
+
+
 def test_auto_honors_dataset_type():
     """A streaming/device dataset pins the plane regardless of budget."""
     clients = make_clients(seed=29)
@@ -185,7 +257,7 @@ def test_auto_honors_dataset_type():
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("target,budget_of", [
     ("device", lambda sds: 1 << 40),
-    ("streaming", lambda sds: 4 * sds.slot_nbytes),
+    ("streaming", lambda sds: sds.tier_layout().bytes_for_capacity(4)),
     ("scanned", lambda sds: 1),
 ])
 def test_auto_bit_equal_to_resolved_plane(target, budget_of):
@@ -220,8 +292,8 @@ def test_auto_diurnal_and_hetero_matrix():
                           hetero_fn=hetero_fn)
     got2 = run_trajectory("auto", opt, rcfg2, clients, 10,
                           hetero_fn=hetero_fn, chunk_rounds=4,
-                          memory_budget_bytes=_sds_of(clients).slot_nbytes
-                          * 4)
+                          memory_budget_bytes=_sds_of(clients).tier_layout()
+                          .bytes_for_capacity(8))
     assert_same_trajectory(got2, ref2)
 
 
@@ -268,6 +340,10 @@ def test_plan_validation_rejects_bad_values():
         ExecutionPlan(local_batch=0)
     with pytest.raises(PlanError, match="cache.clients"):
         ExecutionPlan(cache=CacheSpec(clients=-1))
+    with pytest.raises(PlanError, match="cache.tiers"):
+        ExecutionPlan(cache=CacheSpec(tiers=0))
+    with pytest.raises(PlanError, match="cache.tiers"):
+        ExecutionPlan(cache=CacheSpec(tiers=2.5))
     with pytest.raises(PlanError, match="log_every"):
         as_plan(42)          # old positional run(n, log_every) migration
     with pytest.raises(PlanError, match="plan must be"):
@@ -485,7 +561,15 @@ def test_cache_rebuilt_when_capacity_changes():
     tr.run(4, plan=ExecutionPlan(plane="streaming", chunk_rounds=1,
                                  cache=CacheSpec(clients=3)), verbose=False)
     assert tr.stream_cache is not first
-    assert tr.stream_cache.slots == 3
+    assert tr.stream_cache.capacity == 3
+    second = tr.stream_cache
+    # ... and a tiering change alone rebuilds too (different slot layout)
+    tr.run(4, plan=ExecutionPlan(plane="streaming", chunk_rounds=1,
+                                 cache=CacheSpec(clients=3, tiers=1)),
+           verbose=False)
+    assert tr.stream_cache is not second
+    assert tr.stream_cache.capacity == 3
+    assert len(tr.stream_cache.tier_sizes) == 1
 
 
 # ---------------------------------------------------------------------------
