@@ -22,14 +22,22 @@ persistent shard cache makes the second ``run()`` re-upload nothing for
 already-resident clients (measured upload savings), and a tiered-vs-uniform
 row trains one Zipfian-n_k corpus under both slot layouts
 (``CacheSpec(tiers=None)`` vs ``tiers=1``) at equal trajectory, reporting
-cache device bytes + hit-rate (the n_k-tiered footprint win):
+cache device bytes + hit-rate (the n_k-tiered footprint win).  A
+bucketed-vs-padded row trains the same Zipfian corpus under
+``CacheSpec(bucketed=True)`` (one sized launch per n_k tier,
+``scan_rounds_bucketed``) vs the padded switch-under-vmap gather, asserting
+the bucketed compute is no slower at equal trajectory:
 
     PYTHONPATH=src python -m benchmarks.perf_compare --data-plane \
         [--model lenet|linreg] [--rounds 100] [--chunk-rounds 25] \
-        [--cache-clients N] [--smoke]
+        [--cache-clients N] [--smoke] [--emit-bench BENCH_6.json]
 
 ``--smoke`` shrinks the config to a seconds-long CI sanity pass (with a
 cache smaller than the corpus, so the streaming lane actually streams).
+``--emit-bench PATH`` writes the bucketed-vs-padded numbers as a JSON
+snapshot — the per-PR perf record (``BENCH_<pr>.json``, committed; CI
+regenerates and fails the lane when the snapshot is missing or the
+bucketed lane regresses to slower-than-padded).
 """
 from __future__ import annotations
 
@@ -148,6 +156,10 @@ def _lane_args(argv, flag: str, smoke: bool = False):
         ap.add_argument("--smoke", action="store_true",
                         help="tiny config for the fast CI lane (sanity, "
                              "not numbers)")
+        ap.add_argument("--emit-bench", metavar="PATH", default=None,
+                        help="write the bucketed-vs-padded numbers as a "
+                             "JSON snapshot (the committed BENCH_<pr>.json "
+                             "perf record)")
     return ap.parse_args(argv)
 
 
@@ -276,6 +288,152 @@ def bench_data_plane(argv):
           f"{warm_s / args.rounds * 1e3:.3f} ms/round (cold includes "
           f"compile)")
     bench_tiered_cache(args)
+    snap = bench_bucketed(args)
+    if getattr(args, "emit_bench", None):
+        with open(args.emit_bench, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"  bench snapshot -> {args.emit_bench}")
+
+
+def _zipf_clients(args, K=None, d=None, n_top=None):
+    """Zipfian-n_k linreg corpus — the skew the n_k-tiered cache (and the
+    bucketed compute) target.  Returns (clients, counts, d)."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    smoke = getattr(args, "smoke", False)
+    K = K if K is not None else (24 if smoke else 60)
+    d = d if d is not None else (16 if smoke else 32)
+    n_top = n_top if n_top is not None else (256 if smoke else 1024)
+    counts = [max(2, int(n_top / (r + 1) ** 1.2)) for r in range(K)]
+    clients = []
+    for n in counts:
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        y = (x @ rng.normal(size=d)).astype(np.float32)
+        clients.append({"x": x, "y": y})
+    return clients, counts, d
+
+
+def _zipf_trainer(args, clients, d, m=None, local_batch=2):
+    import jax.numpy as jnp
+
+    from repro.core import DeviceUniformSampler, RoundConfig, fedmom
+    from repro.data import FederatedDataset
+    from repro.launch.train import FederatedTrainer
+
+    m = m if m is not None else args.m
+    ds = FederatedDataset([dict(c) for c in clients], seed=1)
+    rcfg = RoundConfig(clients_per_round=m,
+                       local_steps=args.local_steps, lr=0.05,
+                       placement="mesh", compute_dtype="float32")
+    opt = fedmom(eta=2.0, beta=0.9)
+    w0 = {"w": jnp.zeros(d), "b": jnp.zeros(())}
+    return FederatedTrainer(
+        loss_fn=_linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
+        sampler=DeviceUniformSampler(ds.population(), m, seed=2),
+        state=opt.init(w0), local_batch=local_batch)
+
+
+def _linreg_loss(params, b):
+    import jax.numpy as jnp
+
+    pred = b["x"] @ params["w"] + params["b"]
+    return jnp.mean(jnp.square(pred - b["y"])), {}
+
+
+def bench_bucketed(args):
+    """n_max-padded vs n_k-shaped streaming PIPELINE at one equal cache
+    byte budget, on a Zipfian-n_k corpus with K >> cache capacity.
+
+    The padded lane is ``CacheSpec(tiers=1)``: every cache slot is padded
+    to n_max rows, so the byte budget holds only a handful of clients and
+    every LRU miss re-uploads an n_max-row shard; the compute is the
+    C-wide switch-under-vmap gather.  The bucketed lane gives the SAME
+    byte budget to the n_k-tiered layout (``CacheSpec(bucketed=True)``):
+    slots are tier-sized, the same bytes hold an order of magnitude more
+    clients (under skew, usually the whole population), and each round
+    runs sized per-tier launches over staged minibatch indices
+    (``scan_rounds_bucketed`` fused-concat form) — no in-scan PRNG, no
+    switch, no n_max-shaped fills.  That is the paper's on-device claim:
+    a 4-sample crowdsensing client should never move or compute
+    n_max-shaped data.  Asserts equal trajectory and that the n_k-shaped
+    pipeline is no slower (with timing slack for the smoke sizes);
+    returns the snapshot dict ``--emit-bench`` records."""
+    import time
+
+    import jax
+
+    from repro.launch.plan import CacheSpec, ExecutionPlan
+
+    smoke = bool(getattr(args, "smoke", False))
+    # corpus/budget knobs are the lane's own (not the lenet driver args):
+    # K >> padded capacity so the uniform layout churns, n_top a power of
+    # two so the uniform slot is exactly n_max rows, and the budget is one
+    # chunk's worst-case PADDED working set — the least memory the uniform
+    # layout can run with, handed identically to both lanes
+    K, d, n_top, m, cr = ((96, 32, 1024, 4, 4) if smoke
+                          else (512, 64, 8192, 8, 8))
+    clients, counts, d = _zipf_clients(args, K=K, d=d, n_top=n_top)
+    row_nbytes = d * 4 + 4                     # one x row + one y scalar
+    budget = m * cr * max(counts) * row_nbytes
+    results = {}
+    for name, tiers, bucketed in (("padded", 1, False),
+                                  ("bucketed", None, True)):
+        tr = _zipf_trainer(args, clients, d, m=m,
+                           local_batch=4 if smoke else 8)
+        plan = ExecutionPlan(
+            plane="streaming", chunk_rounds=cr,
+            cache=CacheSpec(bytes=budget, tiers=tiers, bucketed=bucketed))
+
+        def go(n):
+            tr.run(n, plan=plan, verbose=False)
+            jax.tree.leaves(tr.state.w)[0].block_until_ready()
+
+        init_state = tr.server_opt.init(tr.state.w)
+        go(args.rounds)                     # warmup: compiles + uploads
+        tr.state, tr.history = init_state, []
+        up0 = tr.stream_cache.misses
+        t0 = time.perf_counter()
+        go(args.rounds)
+        results[name] = ((time.perf_counter() - t0) / args.rounds,
+                         tr.history[-1]["loss"], tr.stream_cache,
+                         (tr.stream_cache.misses - up0) / args.rounds)
+    (pms, ploss, pcache, pup) = results["padded"]
+    (bms, bloss, bcache, bup) = results["bucketed"]
+    drift = abs(ploss - bloss)
+    assert drift < 1e-4, \
+        f"bucketed/padded trajectories diverged: {ploss} {bloss}"
+    # "no slower" with slack for single-shot wall-clock noise; the real
+    # win is the removed n_max-shaped fill traffic + in-scan PRNG/switch,
+    # which dwarfs timer jitter at the non-smoke sizes
+    assert bms <= pms * 1.25, \
+        (f"n_k-shaped pipeline slower than padded: {bms * 1e3:.3f} vs "
+         f"{pms * 1e3:.3f} ms/round")
+    print(f"  bucketed       Zipfian n_k (K={K}, n_max={max(counts)}, "
+          f"{len(bcache.tier_sizes)} tiers, "
+          f"{budget / 2**20:.1f} MiB budget): "
+          f"{pms * 1e3:.3f} ms/round padded -> {bms * 1e3:.3f} "
+          f"n_k-shaped ({pms / bms:.2f}x); uploads/round "
+          f"{pup:.1f} -> {bup:.1f}, hit-rate {pcache.hit_rate:.1%} -> "
+          f"{bcache.hit_rate:.1%}, final-loss drift {drift:.2e}")
+    return {
+        "bench": "bucketed_vs_padded_zipf",
+        "config": {"model": "linreg", "n_clients": K,
+                   "n_max": max(counts), "d": d, "rounds": args.rounds,
+                   "chunk_rounds": cr, "m": m,
+                   "local_steps": args.local_steps,
+                   "cache_budget_bytes": budget, "smoke": smoke},
+        "tiers": len(bcache.tier_sizes),
+        "padded_ms_per_round": round(pms * 1e3, 4),
+        "bucketed_ms_per_round": round(bms * 1e3, 4),
+        "speedup": round(pms / bms, 4),
+        "padded_uploads_per_round": round(pup, 2),
+        "bucketed_uploads_per_round": round(bup, 2),
+        "padded_hit_rate": round(pcache.hit_rate, 4),
+        "bucketed_hit_rate": round(bcache.hit_rate, 4),
+        "final_loss_drift": float(drift),
+    }
 
 
 def bench_tiered_cache(args):
@@ -283,42 +441,13 @@ def bench_tiered_cache(args):
     keyed trajectory, strictly smaller cache device bytes under skew (the
     n_k-tiered ShardCache row; asserts the footprint win so the CI smoke
     lane catches a regression)."""
-    import jax.numpy as jnp
-    import numpy as np
-
-    from repro.core import DeviceUniformSampler, RoundConfig, fedmom
-    from repro.data import FederatedDataset
     from repro.launch.plan import CacheSpec, ExecutionPlan
-    from repro.launch.train import FederatedTrainer
 
-    rng = np.random.default_rng(0)
-    K, d = (24, 16) if getattr(args, "smoke", False) else (60, 32)
-    n_top = 256 if getattr(args, "smoke", False) else 1024
-    counts = [max(2, int(n_top / (r + 1) ** 1.2)) for r in range(K)]
-    clients = []
-    for n in counts:
-        x = rng.normal(size=(n, d)).astype(np.float32)
-        y = (x @ rng.normal(size=d)).astype(np.float32)
-        clients.append({"x": x, "y": y})
-
-    def loss_fn(params, b):
-        pred = b["x"] @ params["w"] + params["b"]
-        return jnp.mean(jnp.square(pred - b["y"])), {}
-
-    ds = FederatedDataset(clients, seed=1)
-    rcfg = RoundConfig(clients_per_round=args.m,
-                       local_steps=args.local_steps, lr=0.05,
-                       placement="mesh", compute_dtype="float32")
-    opt = fedmom(eta=2.0, beta=0.9)
-    w0 = {"w": jnp.zeros(d), "b": jnp.zeros(())}
-
+    clients, counts, d = _zipf_clients(args)
+    K = len(counts)
     results = {}
     for name, tiers in (("tiered", None), ("uniform", 1)):
-        tr = FederatedTrainer(
-            loss_fn=loss_fn, server_opt=opt, rcfg=rcfg,
-            dataset=FederatedDataset(list(ds.data), seed=1),
-            sampler=DeviceUniformSampler(ds.population(), args.m, seed=2),
-            state=opt.init(w0), local_batch=2)
+        tr = _zipf_trainer(args, clients, d)
         tr.run(args.rounds,
                plan=ExecutionPlan(plane="streaming",
                                   chunk_rounds=args.chunk_rounds,

@@ -56,7 +56,18 @@ n_max-row padding — several-fold fewer cache device bytes under skewed
 n_k, same trajectory bit for bit.  Default: one tier per natural
 power-of-two bucket; --cache-tiers 1 forces the uniform n_max-slot
 layout; --cache-tiers m caps the tier count (smallest buckets merge
-upward)."""
+upward).
+
+--bucketed additionally makes the COMPUTE n_k-shaped (streaming plane
+only): each round's cohort is regrouped by tier and dispatched as one
+sized launch per occupied tier, so small clients stop paying
+n_max-shaped gathers and the cache fills n_k-sized slots instead of
+n_max ones.  Same trajectory (bit-equal at one occupied tier,
+fp32-reduction-order tolerance across several).  --chunk-rounds auto
+sizes the scan chunk from the measured per-dispatch overhead instead of
+a fixed guess.  Perf snapshots: benchmarks/perf_compare.py --data-plane
+--emit-bench BENCH_<pr>.json records the bucketed-vs-padded pipeline
+win at Zipf-skewed n_k (committed per PR; CI re-checks a smoke run)."""
 
 
 def main():
@@ -89,11 +100,17 @@ def main():
                     help="max n_k slot-size tiers for the shard cache "
                          "(default: every natural power-of-two bucket; "
                          "1 = uniform n_max slots)")
+    ap.add_argument("--bucketed", action="store_true",
+                    help="n_k-bucketed compute: one sized launch per "
+                         "occupied cache tier (streaming plane only)")
     ap.add_argument("--fused-server", action="store_true",
                     help="route FedMom through the fused Pallas update "
                          "(compiled on TPU; interpret mode — slower — on "
                          "CPU)")
-    ap.add_argument("--chunk-rounds", type=int, default=25)
+    ap.add_argument("--chunk-rounds", default=25,
+                    type=lambda s: s if s == "auto" else int(s),
+                    help="rounds per jitted scan chunk, or 'auto' to size "
+                         "from the measured dispatch overhead")
     ap.add_argument("--hetero", action="store_true",
                     help="random per-client local work H_k <= H per round")
     args = ap.parse_args()
@@ -105,7 +122,8 @@ def main():
               if args.memory_budget_mb is not None else None)
     plan = ExecutionPlan(plane=plane, chunk_rounds=args.chunk_rounds,
                          cache=CacheSpec(clients=args.cache_clients,
-                                         tiers=args.cache_tiers),
+                                         tiers=args.cache_tiers,
+                                         bucketed=args.bucketed),
                          memory_budget_bytes=budget)
 
     clients, counts = synthetic_femnist(n_clients=args.clients, seed=0)

@@ -1,8 +1,13 @@
 """The paper's primary contribution: federated optimization as a
 biased-gradient method (server optimizers + client solver + round engine)."""
-from repro.core.round import RoundConfig, round_step  # noqa: F401
+from repro.core.round import (  # noqa: F401
+    RoundConfig,
+    bucketed_round_step,
+    round_step,
+)
 from repro.core.multiround import (  # noqa: F401
     scan_rounds,
+    scan_rounds_bucketed,
     scan_rounds_ondevice,
     scan_rounds_sampled,
 )

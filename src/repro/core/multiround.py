@@ -44,7 +44,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.round import RoundConfig, round_step
+from repro.core.round import RoundConfig, bucketed_round_step, round_step
 from repro.core.server_opt import ServerOpt, ServerState
 
 
@@ -159,4 +159,129 @@ def scan_rounds_ondevice(loss_fn: Callable, server_opt: ServerOpt,
 
     xs = ((rounds, lrs) if step_masks is None
           else (rounds, lrs, step_masks))
+    return jax.lax.scan(body, state, xs)
+
+
+def scan_rounds_bucketed(loss_fn: Callable, server_opt: ServerOpt,
+                         state: ServerState, view, tiers_present: tuple,
+                         tier_cids: tuple, tier_weights: tuple,
+                         data_key: jax.Array, t0: jax.Array, n_rounds: int,
+                         rcfg: RoundConfig, local_batch_size: int,
+                         param_axes: Optional[Any] = None,
+                         lrs: Optional[jax.Array] = None,
+                         tier_masks: Optional[tuple] = None,
+                         tier_idx: Optional[tuple] = None,
+                         client_step_fn: Optional[Callable] = None) -> tuple:
+    """Run ``n_rounds`` with HOST-staged, tier-bucketed cohorts.
+
+    ``scan_rounds_ondevice`` samples S_t in the scan and gathers through a
+    per-client ``lax.switch`` which — under vmap — reads ``need`` rows from
+    EVERY tier corpus per participant, and then runs one C-wide launch per
+    round.  The streaming plane already knows every chunk participant before
+    dispatch (the ``KeyedReplayable`` lookahead that drives the H2D
+    prefetch), so here the cohort is staged on host, grouped by cache tier,
+    and each tier runs ONE sized launch: a switch-free
+    ``CacheView.gather_tier_batch`` + per-tier vmapped local updates via
+    ``bucketed_round_step``.
+
+    ``tiers_present``: static tuple of the tier indices with any participant
+    in the chunk.  ``tier_cids`` / ``tier_weights``: tuples (aligned with
+    ``tiers_present``) of [R, C_i] arrays — per-round per-tier cohorts,
+    right-padded with a chunk-resident client of the SAME tier at weight 0
+    (the diurnal padded-C convention: zero weight => zero delta and excluded
+    from the loss metric, so padding never perturbs the trajectory).
+    ``tier_masks``: optional matching tuple of [R, C_i, H] H_k masks
+    (padding rows carry all-ones masks so their eff_w stays exactly 0).
+
+    ``tier_idx``: optional matching tuple of [R, C_i, H*b] HOST-staged
+    minibatch indices (the eager replay of ``minibatch_indices`` — bit-equal
+    to the in-scan draw).  When given (and no ``client_step_fn``), the chunk
+    runs in fused-concat form: ONE switch-free row gather per tier covering
+    all R rounds (``CacheView.gather_tier_rows`` over the flattened
+    [R*C_i] cohort), one ``concatenate`` along the cohort axis, then the
+    plain pre-staged ``scan_rounds`` engine — device-side chunk assembly.
+    The in-scan PRNG chains, the per-participant tier switch and the
+    per-tier launch pipelines all collapse: the compiled chunk carries
+    FEWER device ops than the padded switch path (the dispatch-overhead
+    win on CPU; the n_tiers-x gather-traffic win everywhere), at a
+    transient [R, C, H, b, ...] device intermediate the ``chunk_rounds``
+    knob bounds — gathered from the resident cache, never re-uploaded.
+    Without it, every tier keeps its own keyed draw + sized launch via
+    ``bucketed_round_step``.
+
+    ``client_step_fn``: optional fused gather+local-SGD hook (see
+    ``kernels/client_step``) replacing gather + vmap per tier:
+    ``(view, tier, key, t, cids, w_c, lr, mask, local_steps, batch_size)
+    -> (final_params [C_i, ...], losses [C_i])``.
+
+    Same trajectory as the padded planes up to fp32 reduction order (the
+    delta sums tier-by-tier instead of in cohort order): multi-tier chunks
+    are tolerance-equal, single-tier chunks bit-equal.
+    """
+    R = int(n_rounds)
+    if lrs is None:
+        lrs = jnp.full((R,), rcfg.lr, jnp.float32)
+    rounds = t0 + jnp.arange(R, dtype=jnp.int32)
+
+    if tier_idx is not None and client_step_fn is None:
+        # fused-concat form: the minibatch index draws were staged on the
+        # host (bit-equal to the device draw — threefry is counter-based),
+        # so the scan body is pure data motion + compute: one switch-free
+        # sized gather per occupied tier, a cohort concat, and a single
+        # C_tot-wide ``round_step``.  No in-scan PRNG, no lax.switch.  The
+        # per-tier xs keep their own [R, C_i, ...] shapes so jit's shape
+        # signature carries the full width split (a packed [R, C_tot]
+        # layout would alias chunks whose totals collide).  Round metrics
+        # stamp from the carried state.t, so no round index rides the scan.
+        def body_concat(st, xs):
+            if tier_masks is None:
+                lr, cids, ws, idxs = xs
+                ms = None
+            else:
+                lr, cids, ws, idxs, ms = xs
+            parts = [
+                view.gather_tier_rows(tier, cids[i], idxs[i],
+                                      rcfg.local_steps, local_batch_size)
+                for i, tier in enumerate(tiers_present)]
+            batch = jax.tree.map(
+                lambda *ls: jnp.concatenate(ls, axis=0), *parts)
+            w = jnp.concatenate(ws, axis=0)
+            m = None if ms is None else jnp.concatenate(ms, axis=0)
+            st, metrics = round_step(loss_fn, server_opt, st, batch,
+                                     w, rcfg, param_axes=param_axes,
+                                     lr=lr, step_mask=m)
+            del metrics["losses"]
+            return st, metrics
+
+        xs = ((lrs, tier_cids, tier_weights, tier_idx)
+              if tier_masks is None
+              else (lrs, tier_cids, tier_weights, tier_idx, tier_masks))
+        return jax.lax.scan(body_concat, state, xs)
+
+    def body(st, xs):
+        if tier_masks is None:
+            t, lr, cids, ws = xs
+            ms = None
+        else:
+            t, lr, cids, ws, ms = xs
+        if client_step_fn is None:
+            data = tuple(
+                view.gather_tier_batch(tier, data_key, t, cids[i],
+                                       rcfg.local_steps, local_batch_size)
+                for i, tier in enumerate(tiers_present))
+            update = None
+        else:
+            data = cids
+
+            def update(w_c, i, cids_i, mask):
+                return client_step_fn(view, tiers_present[i], data_key, t,
+                                      cids_i, w_c, lr, mask,
+                                      rcfg.local_steps, local_batch_size)
+        st, metrics = bucketed_round_step(
+            loss_fn, server_opt, st, data, ws, rcfg, param_axes=param_axes,
+            lr=lr, tier_masks=ms, tier_update_fn=update)
+        return st, metrics
+
+    xs = ((rounds, lrs, tier_cids, tier_weights) if tier_masks is None
+          else (rounds, lrs, tier_cids, tier_weights, tier_masks))
     return jax.lax.scan(body, state, xs)

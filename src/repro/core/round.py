@@ -91,12 +91,24 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
             final, losses = vmapped(local0, batches, step_mask)
         if param_axes is not None:
             final = shard_tree(final, param_axes, prefix=("clients",))
+        # products and accumulation stay fp32 no matter delta_dtype: rounding
+        # the n_k/n weights (or the per-client diffs) to bf16 BEFORE the
+        # reduction leaks weight mass under skewed n_k; only the final result
+        # is rounded to ddt, so the bf16 delta is the correctly-rounded fp32
+        # reduction
         delta = jax.tree.map(
             lambda w0, wk: jnp.einsum(
-                "c,c...->...", weights.astype(ddt),
-                (w0[None] - wk).astype(ddt)),
+                "c,c...->...", weights, w0[None] - wk,
+                preferred_element_type=jnp.float32).astype(ddt),
             w_c, final)
     elif rcfg.placement == "scan":
+        if param_axes is not None:
+            # scan placement promises FSDP-sharded params: constrain the
+            # broadcast model once here, and the accumulator every iteration
+            # below, so XLA keeps the sharded layout through the whole scan
+            # instead of gathering the replica per client
+            w_c = shard_tree(w_c, param_axes)
+
         def body(acc, xs):
             if step_mask is None:
                 b_k, a_k = xs
@@ -104,15 +116,20 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
             else:
                 b_k, a_k, m_k = xs
             wk, loss = one_client(w_c, b_k, m_k)
+            # fp32 accumulator to match the mesh-path einsum; cast to ddt
+            # once after the scan
             acc = jax.tree.map(
-                lambda d, w0, wkl: d + a_k.astype(ddt)
-                * (w0 - wkl).astype(ddt),
+                lambda d, w0, wkl: d + a_k
+                * (w0 - wkl).astype(jnp.float32),
                 acc, w_c, wk)
+            if param_axes is not None:
+                acc = shard_tree(acc, param_axes)
             return acc, loss
-        delta0 = jax.tree.map(lambda x: jnp.zeros(x.shape, ddt), w_c)
+        delta0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), w_c)
         xs = ((batches, weights) if step_mask is None
               else (batches, weights, step_mask))
         delta, losses = jax.lax.scan(body, delta0, xs)
+        delta = jax.tree.map(lambda d: d.astype(ddt), delta)
     else:
         raise ValueError(rcfg.placement)
 
@@ -124,6 +141,93 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
     metrics = {
         "loss": jnp.sum(eff_w * losses) / wsum,
         "losses": losses,
+        "delta_norm": _global_norm(delta),
+        "round": state.t,
+    }
+    return new_state, metrics
+
+
+def bucketed_round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
+                        tier_data: tuple, tier_weights: tuple,
+                        rcfg: RoundConfig,
+                        param_axes: Optional[Any] = None,
+                        lr: Optional[jax.Array] = None,
+                        tier_masks: Optional[tuple] = None,
+                        tier_update_fn=None) -> tuple:
+    """One federated round dispatched as per-tier SIZED launches.
+
+    The padded ``round_step`` lowers every round for the full client extent
+    C with n_max-shaped gathers; here the cohort arrives pre-grouped by the
+    cache's n_k size tiers (``data/stream.py tier_layout``) and each tier
+    runs one launch of its own extent — a 4-sample crowdsensing client never
+    rides in the same vmap as a 4096-sample one.
+
+    ``tier_data`` / ``tier_weights`` / ``tier_masks``: tuples over OCCUPIED
+    tiers; ``tier_weights[i]``: [C_i] fp32 n_k/n (zero-weight right-padding
+    follows the diurnal padded-C convention — zero delta, excluded from the
+    loss metric); ``tier_data[i]``: the tier's [C_i, H, b, ...] batch stack,
+    or an opaque payload when ``tier_update_fn`` is given;
+    ``tier_masks[i]``: optional [C_i, H] heterogeneous-H_k masks.
+
+    ``tier_update_fn(w_c, i, data, mask) -> (final_params [C_i, ...],
+    losses [C_i])`` replaces the gathered-batch vmap (the fused
+    ``kernels/client_step`` hook plugs in here).
+
+    Reduction-order caveat: the delta is accumulated tier-by-tier (each tier
+    one fp32 einsum) instead of a single cohort-order einsum, so multi-tier
+    results are tolerance-equal to the padded path (fp32 reassociation),
+    while a single occupied tier is bit-equal.  Returns (new_state, metrics)
+    with the same keys as ``round_step`` minus the per-client ``losses``
+    stream (its width varies per tier).
+    """
+    if rcfg.placement != "mesh":
+        raise ValueError(
+            "bucketed dispatch is a per-tier vmap — placement='mesh' only "
+            f"(got {rcfg.placement!r}); use the padded round_step for scan")
+    opt = local_opt_lib.get(rcfg.local_opt, **dict(rcfg.local_opt_kwargs))
+    lr = jnp.asarray(rcfg.lr if lr is None else lr, jnp.float32)
+    w_c = _cast_tree(state.w, jnp.dtype(rcfg.compute_dtype))
+    ddt = jnp.dtype(rcfg.delta_dtype)
+
+    def one_client(p, b, m=None):
+        return client_lib.local_update(loss_fn, p, b, lr, opt, step_mask=m)
+
+    def run_tier(w_c, i, batches, mask):
+        C_i = tier_weights[i].shape[0]
+        local0 = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (C_i,) + p.shape), w_c)
+        if param_axes is not None:
+            local0 = shard_tree(local0, param_axes, prefix=("clients",))
+        spmd = spmd_client_axes()
+        vmapped = jax.vmap(one_client, spmd_axis_name=spmd) if spmd \
+            else jax.vmap(one_client)
+        final, losses = (vmapped(local0, batches) if mask is None
+                         else vmapped(local0, batches, mask))
+        if param_axes is not None:
+            final = shard_tree(final, param_axes, prefix=("clients",))
+        return final, losses
+
+    update = tier_update_fn or run_tier
+    acc = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), w_c)
+    loss_num = jnp.zeros((), jnp.float32)
+    loss_den = jnp.zeros((), jnp.float32)
+    for i, (data, weights) in enumerate(zip(tier_data, tier_weights)):
+        mask = None if tier_masks is None else tier_masks[i]
+        final, losses = update(w_c, i, data, mask)
+        acc = jax.tree.map(
+            lambda d, w0, wk: d + jnp.einsum(
+                "c,c...->...", weights, w0[None] - wk,
+                preferred_element_type=jnp.float32),
+            acc, w_c, final)
+        eff_w = weights
+        if mask is not None:
+            eff_w = weights * (jnp.sum(mask, axis=1) > 0)
+        loss_num = loss_num + jnp.sum(eff_w * losses)
+        loss_den = loss_den + jnp.sum(eff_w)
+    delta = jax.tree.map(lambda d: d.astype(ddt), acc)
+    new_state = server_opt.update(state, delta)
+    metrics = {
+        "loss": loss_num / jnp.maximum(loss_den, 1e-12),
         "delta_norm": _global_norm(delta),
         "round": state.t,
     }

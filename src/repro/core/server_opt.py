@@ -72,7 +72,8 @@ def fedavg(eta: float = 1.0) -> ServerOpt:
 
 
 def fedmom(eta: float = 1.0, beta: float = 0.9, *,
-           use_fused_kernel: bool = False) -> ServerOpt:
+           use_fused_kernel: bool = False,
+           interpret: Optional[bool] = None) -> ServerOpt:
     """Algorithm 3 (FedMom): Nesterov's accelerated gradient on the server.
 
         v_{t+1} = w_t - eta * delta_t
@@ -81,6 +82,9 @@ def fedmom(eta: float = 1.0, beta: float = 0.9, *,
     beta=0.9 everywhere in the paper's experiments.  ``use_fused_kernel``
     routes the elementwise update through the Pallas kernel
     (kernels/fedmom_update) — one HBM pass instead of three ops.
+    ``interpret`` pins the kernel's interpret mode for jitted launches whose
+    target device differs from ``jax.default_backend()`` (inside jit the
+    operands are tracers, so the kernel cannot see the real target itself).
     """
     def init_extra(w):
         return {"v": jax.tree.map(jnp.copy, w)}   # v_0 = w_0
@@ -89,7 +93,8 @@ def fedmom(eta: float = 1.0, beta: float = 0.9, *,
         if use_fused_kernel:
             from repro.kernels import fedmom_ops
             w_new, v_new = fedmom_ops.fused_update_tree(
-                w, extra["v"], delta, eta=eta, beta=beta)
+                w, extra["v"], delta, eta=eta, beta=beta,
+                interpret=interpret)
             return w_new, {"v": v_new}
         v_new = _tmap(lambda wi, di: wi - eta * di, w, delta)
         w_new = _tmap(lambda vn, vo: vn + beta * (vn - vo), v_new, extra["v"])
@@ -102,18 +107,21 @@ def fedmom(eta: float = 1.0, beta: float = 0.9, *,
 # beyond-paper members of the biased-gradient family
 # ---------------------------------------------------------------------------
 def fedavgm(eta: float = 1.0, beta: float = 0.9, *,
-            use_fused_kernel: bool = False) -> ServerOpt:
+            use_fused_kernel: bool = False,
+            interpret: Optional[bool] = None) -> ServerOpt:
     """Heavy-ball (Polyak) server momentum on the biased gradient.
 
     ``use_fused_kernel`` routes the update through the fused Pallas stream
     (kernels/fedmom_update, ``kind='fedavgm'``) — one HBM pass over the
-    whole parameter tree instead of two unfused tree ops.
+    whole parameter tree instead of two unfused tree ops.  ``interpret``:
+    see ``fedmom``.
     """
     def apply(w, extra, delta, t):
         if use_fused_kernel:
             from repro.kernels import fedmom_ops
             w_new, m_new = fedmom_ops.fused_avgm_tree(
-                w, extra["m"], delta, eta=eta, beta=beta)
+                w, extra["m"], delta, eta=eta, beta=beta,
+                interpret=interpret)
             return w_new, {"m": m_new}
         m = _tmap(lambda mi, di: beta * mi + di, extra["m"], delta)
         return _tmap(lambda wi, mi: wi - eta * mi, w, m), {"m": m}

@@ -302,6 +302,63 @@ class CacheView:
 
         return jax.vmap(one)(jnp.asarray(client_ids))
 
+    def gather_tier_batch(self, tier: int, key: jax.Array, t, client_ids,
+                          local_steps: int, batch_size: int):
+        """Switch-free gather for clients KNOWN to live in ``tier``.
+
+        The bucketed dispatch (``core.multiround.scan_rounds_bucketed``)
+        stages each round's cohort per tier on host, so the per-client
+        ``lax.switch`` of ``gather_round_batch`` — which under vmap reads
+        every tier corpus per participant — collapses to one direct
+        row-index into the single ``[slots_t, n_tier, ...]`` corpus.  The
+        index draw is the identical ``minibatch_indices(key, t, cid, n_k,
+        need)``, so the rows are bit-equal to every other plane's gather.
+
+        The caller guarantees residency and tier membership: a client of a
+        different tier would row-index the wrong corpus (garbage rows, not
+        an error) — zero-weight padding therefore always reuses a client of
+        the SAME tier.
+        """
+        need = local_steps * batch_size
+        arrs = self.tier_arrays[tier]
+
+        def one(cid):
+            slot = self.client_slots[cid]
+            idx = minibatch_indices(key, t, cid, self.counts[cid], need)
+            return {
+                name: a[slot][idx].reshape(
+                    (local_steps, batch_size) + a.shape[2:])
+                for name, a in arrs.items()
+            }
+
+        return jax.vmap(one)(jnp.asarray(client_ids))
+
+    def gather_tier_rows(self, tier: int, client_ids, idx,
+                         local_steps: int, batch_size: int):
+        """``gather_tier_batch`` with the index draw already staged.
+
+        ``idx``: [C_i, need] precomputed minibatch indices (the host replay
+        of ``minibatch_indices`` — threefry is counter-based, so the staged
+        draw is bit-equal to the in-scan one).  Staging moves the per-tier
+        fold-in/randint op chains out of the compiled chunk entirely: the
+        bucketed scan body keeps only the two-level row gather per tier,
+        which is what lets its device op count undercut the padded
+        switch-gather path.  Same residency/tier-membership caveats as
+        ``gather_tier_batch``; padding rows may carry any in-range indices
+        (their zero weight drops them from delta and loss alike).
+        """
+        arrs = self.tier_arrays[tier]
+
+        def one(cid, ix):
+            slot = self.client_slots[cid]
+            return {
+                name: a[slot][ix].reshape(
+                    (local_steps, batch_size) + a.shape[2:])
+                for name, a in arrs.items()
+            }
+
+        return jax.vmap(one)(jnp.asarray(client_ids), idx)
+
 
 class ShardCache:
     """Bounded device-side LRU cache of client shards, tiered by n_k.

@@ -5,6 +5,7 @@ Each kernel lives in its own subpackage with the required trio:
   ops.py    — jit'd public wrapper (shape plumbing, interpret switch)
   ref.py    — pure-jnp oracle used by the allclose test sweeps
 """
+from repro.kernels.client_step import ops as client_step_ops  # noqa: F401
 from repro.kernels.fedmom_update import ops as fedmom_ops  # noqa: F401
 from repro.kernels.flash_attention import ops as flash_ops  # noqa: F401
 from repro.kernels.rglru_scan import ops as rglru_ops  # noqa: F401

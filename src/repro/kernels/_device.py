@@ -1,0 +1,39 @@
+"""Interpret-mode resolution shared by the kernel zoo's ops wrappers.
+
+Every Pallas kernel here compiles on TPU and runs the same body in interpret
+mode elsewhere.  Picking the mode from ``jax.default_backend()`` alone is a
+trace-time guess: a launch committed to a non-default device (e.g. CPU arrays
+in a TPU-default process, or an explicit ``jax.device_put``) would get the
+wrong mode and either miscompile or crash in lowering.  ``resolve_interpret``
+therefore inspects the ACTUAL operands first — a concrete array knows the
+device it is committed to — and only falls back to the default backend for
+tracers (inside jit the caller should thread an explicit ``interpret=`` from
+whoever knows the launch target, e.g. the trainer).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+
+def resolve_interpret(operands: Any, interpret: Optional[bool] = None) -> bool:
+    """True when the kernel must run in interpret mode (non-TPU target).
+
+    ``interpret`` is authoritative when given (the threaded override).
+    Otherwise the first concrete operand's committed device decides; only
+    when every operand is a tracer (inside jit, devices unknowable) does
+    ``jax.default_backend()`` break the tie.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    for x in jax.tree.leaves(operands):
+        if isinstance(x, jax.core.Tracer):
+            continue
+        if isinstance(x, jax.Array):
+            try:
+                dev = next(iter(x.devices()))
+            except Exception:
+                continue
+            return dev.platform != "tpu"
+    return jax.default_backend() != "tpu"

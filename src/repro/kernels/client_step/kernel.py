@@ -1,0 +1,116 @@
+"""Fused client-step kernel: cache gather + H local SGD steps, one launch.
+
+The bucketed streaming plane resolves a round's cohort to (tier, slot)
+before dispatch, so the per-client work — fetch my shard's minibatch rows,
+run H SGD steps — is a perfectly regular grid over the tier's clients.
+Unfused, that is a gather kernel writing [C, H, b, ...] batches to HBM
+followed by a vmapped local-update reading them straight back; fused, each
+grid program pulls its client's ``[1, N, D]`` corpus slot into VMEM ONCE
+(block selection via scalar-prefetched slot ids — the
+``PrefetchScalarGridSpec`` pattern), slices its minibatch rows in-VMEM, and
+carries the H-step parameter recurrence in registers.  The [C, H, b, D]
+batch stack never exists in HBM: per client the traffic drops from
+``n_tier * D + 2 * H * b * D`` (gather write + update read) to ``n_tier * D``.
+
+Scope: the linear-regression family (MSE loss, plain-SGD local optimizer)
+— the model the trajectory harness certifies — with the full
+heterogeneous-H_k mask semantics of ``core.client.local_update``.  The
+grids are sized by the TIER extent, so a 4-sample client's program loads a
+4-row slot, never an n_max-row one.
+
+TPU mapping: grid=(C,), one program per client.  The corpus block
+``[1, N, Dp]`` (Dp = D padded to the 128 lane width) streams HBM->VMEM per
+program; params/lr ride in [1, ...] blocks; H and b are static so the
+step/row loops fully unroll into straight-line VPU code.  On TPU the kernel
+compiles; elsewhere (this CPU container) it runs in interpret mode and the
+test sweeps pin it to ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128                # VPU lane width: pad D up to a multiple
+SUBLANE = 8               # fp32 sublane: pad N up to a multiple
+
+
+def _client_body(slots_ref, x_ref, y_ref, idx_ref, w_ref, b_ref, lr_ref,
+                 m_ref, wo_ref, bo_ref, lo_ref, *, local_steps: int,
+                 batch_size: int):
+    x = x_ref[0]                       # [N, Dp] this client's corpus slot
+    y = y_ref[0]                       # [N]
+    w = w_ref[0]                       # [Dp] broadcast server model
+    b = b_ref[0, 0]
+    lr = lr_ref[0, 0]
+    lsum = jnp.float32(0.0)
+    asum = jnp.float32(0.0)
+    for h in range(local_steps):
+        rows_x, rows_y = [], []
+        for j in range(batch_size):
+            r = idx_ref[0, h * batch_size + j]
+            rows_x.append(jax.lax.dynamic_slice_in_dim(x, r, 1, axis=0))
+            rows_y.append(jax.lax.dynamic_slice_in_dim(y, r, 1, axis=0))
+        xb = jnp.concatenate(rows_x, axis=0)          # [b, Dp]
+        yb = jnp.concatenate(rows_y, axis=0)          # [b]
+        err = jnp.dot(xb, w) + b - yb
+        loss = jnp.mean(jnp.square(err))
+        gw = (2.0 / batch_size) * jnp.dot(err, xb)
+        gb = (2.0 / batch_size) * jnp.sum(err)
+        active = m_ref[0, h]
+        w = jnp.where(active > 0, w - lr * gw, w)
+        b = jnp.where(active > 0, b - lr * gb, b)
+        lsum += loss * active
+        asum += active
+    wo_ref[0, :] = w
+    bo_ref[0, 0] = b
+    lo_ref[0, 0] = lsum / jnp.maximum(asum, 1.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("local_steps", "batch_size", "interpret"))
+def client_step_flat(xs: jax.Array, ys: jax.Array, slots: jax.Array,
+                     idx: jax.Array, w: jax.Array, b: jax.Array,
+                     lr: jax.Array, mask: jax.Array, local_steps: int,
+                     batch_size: int, interpret: bool = True):
+    """One launch over a tier's C clients (pre-padded operands).
+
+    ``xs``: [S, Np, Dp] f32 tier corpus (Np mult of 8, Dp mult of 128);
+    ``ys``: [S, Np]; ``slots``: [C] int32 (scalar-prefetched — they select
+    each program's corpus block); ``idx``: [C, H*b] int32 row indices;
+    ``w``: [1, Dp]; ``b``/``lr``: [1, 1]; ``mask``: [C, H] f32.
+    Returns ``(w_out [C, Dp], b_out [C, 1], loss [C, 1])``.
+    """
+    C = slots.shape[0]
+    _, Np, Dp = xs.shape
+    H = local_steps
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, Np, Dp), lambda c, s: (s[c], 0, 0)),
+            pl.BlockSpec((1, Np), lambda c, s: (s[c], 0)),
+            pl.BlockSpec((1, H * batch_size), lambda c, s: (c, 0)),
+            pl.BlockSpec((1, Dp), lambda c, s: (0, 0)),
+            pl.BlockSpec((1, 1), lambda c, s: (0, 0)),
+            pl.BlockSpec((1, 1), lambda c, s: (0, 0)),
+            pl.BlockSpec((1, H), lambda c, s: (c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Dp), lambda c, s: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, s: (c, 0)),
+            pl.BlockSpec((1, 1), lambda c, s: (c, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_client_body, local_steps=H,
+                          batch_size=batch_size),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((C, Dp), jnp.float32),
+                   jax.ShapeDtypeStruct((C, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((C, 1), jnp.float32)],
+        interpret=interpret,
+    )(slots, xs, ys, idx, w, b, lr, mask)

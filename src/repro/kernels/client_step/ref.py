@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the fused client step (gather + H local SGD steps).
+
+Mirrors ``core.client.local_update`` with the sgd local optimizer for the
+linear-regression family (MSE loss ``mean((x @ w + b - y)^2)``), but takes
+the STREAMING layout directly: a tier corpus ``[S, N, ...]`` plus per-client
+cache slots and pre-drawn minibatch row indices.  The kernel's test sweeps
+(tests/test_client_step.py) assert against this, and this in turn is
+asserted against ``local_update`` on host-gathered batches — chaining the
+fused kernel to the engine's reference semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def client_step(xs: jax.Array, ys: jax.Array, slots: jax.Array,
+                idx: jax.Array, w: jax.Array, b: jax.Array, lr,
+                local_steps: int, batch_size: int,
+                step_mask: Optional[jax.Array] = None):
+    """H local SGD steps per client over slot-gathered minibatches.
+
+    ``xs``: [S, N, D] tier corpus (S cache slots), ``ys``: [S, N];
+    ``slots``: [C] int32 cache slot per client; ``idx``: [C, H*b] int32 row
+    indices (each ``< n_k <= N``); ``w``: [D] / ``b``: [] broadcast start
+    params; ``step_mask``: optional [C, H] {0,1} heterogeneous-H_k masks
+    (a masked step freezes the params; its loss is excluded from the mean).
+
+    Returns ``(w_out [C, D], b_out [C], mean_loss [C])``.
+    """
+    H, bsz = int(local_steps), int(batch_size)
+    lr = jnp.asarray(lr, jnp.float32)
+
+    def one(slot, idx_c, mask_c):
+        xb = xs[slot][idx_c].reshape(H, bsz, xs.shape[-1])
+        yb = ys[slot][idx_c].reshape(H, bsz)
+
+        def step(carry, hx):
+            wc, bc = carry
+            x_h, y_h, active = hx
+            err = x_h @ wc + bc - y_h
+            loss = jnp.mean(jnp.square(err))
+            gw = (2.0 / bsz) * (err @ x_h)
+            gb = (2.0 / bsz) * jnp.sum(err)
+            wc = jnp.where(active > 0, wc - lr * gw, wc)
+            bc = jnp.where(active > 0, bc - lr * gb, bc)
+            return (wc, bc), loss * active
+
+        (wf, bf), losses = jax.lax.scan(step, (w, b), (xb, yb, mask_c))
+        return wf, bf, jnp.sum(losses) / jnp.maximum(jnp.sum(mask_c), 1.0)
+
+    C = slots.shape[0]
+    mask = (jnp.ones((C, H), jnp.float32) if step_mask is None
+            else step_mask.astype(jnp.float32))
+    return jax.vmap(one)(slots, idx, mask)

@@ -3,32 +3,39 @@
 On TPU the Pallas kernel runs compiled; everywhere else (this CPU container)
 it runs in interpret mode, which executes the same kernel body in Python —
 the tests sweep shapes/dtypes against ref.py.
+
+Mode selection goes through ``kernels._device.resolve_interpret``: the
+committed device of the actual operands decides (a CPU-committed launch in a
+TPU-default process still interprets), with an explicit ``interpret=``
+override for jitted callers — ``server_opt.fedmom(..., interpret=...)``
+threads it — and ``jax.default_backend()`` only as the tracer-time fallback.
 """
 from __future__ import annotations
 
-import jax
+from typing import Optional
 
+from repro.kernels._device import resolve_interpret
 from repro.kernels.fedmom_update import kernel as _k
 from repro.kernels.fedmom_update import ref as _ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def fused_update_tree(w, v, delta, *, eta: float, beta: float,
-                      use_kernel: bool = True):
+                      use_kernel: bool = True,
+                      interpret: Optional[bool] = None):
     """FedMom (Nesterov): one fused launch over the whole parameter tree."""
     if not use_kernel:
         return _ref.fedmom_update(w, v, delta, eta, beta)
-    return _k.fused_update_tree(w, v, delta, eta=eta, beta=beta,
-                                interpret=not _on_tpu())
+    return _k.fused_update_tree(
+        w, v, delta, eta=eta, beta=beta,
+        interpret=resolve_interpret((w, v, delta), interpret))
 
 
 def fused_avgm_tree(w, m, delta, *, eta: float, beta: float,
-                    use_kernel: bool = True):
+                    use_kernel: bool = True,
+                    interpret: Optional[bool] = None):
     """FedAvgM (heavy-ball): same fused stream, different update body."""
     if not use_kernel:
         return _ref.fedavgm_update(w, m, delta, eta, beta)
-    return _k.fused_update_tree(w, m, delta, eta=eta, beta=beta,
-                                kind="fedavgm", interpret=not _on_tpu())
+    return _k.fused_update_tree(
+        w, m, delta, eta=eta, beta=beta, kind="fedavgm",
+        interpret=resolve_interpret((w, m, delta), interpret))

@@ -79,10 +79,20 @@ class CacheSpec:
     clients into every natural power-of-two size tier so small clients
     never pay n_max-row padding; ``1`` recovers the uniform single-tier
     layout; ``m`` caps the tier count, merging the smallest buckets upward.
-    Tiering changes only the cache footprint, never the trajectory."""
+    Tiering changes only the cache footprint, never the trajectory.
+
+    ``bucketed`` extends the tiering from the cache FOOTPRINT to the
+    COMPUTE: the chunk's cohort is staged on host grouped by size tier and
+    each tier runs one launch of its own extent
+    (``core.multiround.scan_rounds_bucketed``) instead of the padded
+    switch-under-vmap gather.  Streaming plane + ``placement="mesh"`` only;
+    trajectory-equivalent to the padded path (bit-equal with one occupied
+    tier, fp32-reduction-order tolerance otherwise — see
+    ``core.round.bucketed_round_step``)."""
     clients: Optional[int] = None
     bytes: Optional[int] = None
     tiers: Optional[int] = None
+    bucketed: bool = False
 
 
 @dataclass(frozen=True)
@@ -113,9 +123,13 @@ class ExecutionPlan:
     the host prefetch-queue depth on the scanned plane and the
     overlap-uploads-with-compute switch (truthiness) on the streaming plane.
     ``local_batch`` overrides the trainer's ``local_batch`` field when set.
+    ``chunk_rounds="auto"`` sizes chunks from the MEASURED per-dispatch
+    overhead at resolve time (amortize it to ~``_AUTO_CHUNK_TARGET_S`` per
+    round, clamped to [8, 256] and to ``n_rounds``); the chosen size is
+    audited on the ``PlanDecision``.
     """
     plane: str = "auto"
-    chunk_rounds: int = 25
+    chunk_rounds: Union[int, str] = 25
     prefetch: int = 2
     cache: CacheSpec = CacheSpec()
     eval: EvalSpec = EvalSpec()
@@ -130,10 +144,12 @@ class ExecutionPlan:
             raise PlanError(
                 f"unknown plane {self.plane!r}: want 'auto' or one of "
                 f"{PLANES}", plane=self.plane)
-        if not isinstance(self.chunk_rounds, int) or self.chunk_rounds < 1:
+        if self.chunk_rounds != "auto" and (
+                not isinstance(self.chunk_rounds, int)
+                or self.chunk_rounds < 1):
             raise PlanError(
-                f"chunk_rounds must be an int >= 1, got "
-                f"{self.chunk_rounds!r}", plane=plane)
+                f"chunk_rounds must be an int >= 1 or the literal 'auto', "
+                f"got {self.chunk_rounds!r}", plane=plane)
         if not isinstance(self.prefetch, int) or self.prefetch < 0:
             raise PlanError(
                 f"prefetch must be an int >= 0, got {self.prefetch!r}",
@@ -146,6 +162,15 @@ class ExecutionPlan:
             if v is not None and (not isinstance(v, int) or v < 1):
                 raise PlanError(f"{name} must be a positive int, got {v!r}",
                                 plane=plane)
+        if not isinstance(self.cache.bucketed, bool):
+            raise PlanError(
+                f"cache.bucketed must be a bool, got "
+                f"{self.cache.bucketed!r}", plane=plane)
+        if self.cache.bucketed and plane not in ("auto", "streaming"):
+            raise PlanError(
+                f"cache.bucketed is a streaming-plane knob (tier-bucketed "
+                f"dispatch over the shard cache) but the plan pins plane="
+                f"{plane!r}", plane=plane, nearest="streaming")
         if not isinstance(self.eval.cadence, int) or self.eval.cadence < 1:
             raise PlanError(
                 f"eval.cadence must be an int >= 1, got "
@@ -192,14 +217,23 @@ class PlanDecision:
     packed_nbytes: Optional[int] = None
     budget_bytes: Optional[int] = None
     working_set_nbytes: Optional[int] = None
+    chunk_rounds: Optional[int] = None        # the CONCRETE size run() uses
+    dispatch_overhead_s: Optional[float] = None   # set when it was measured
+    bucketed: bool = False
 
     def record(self) -> dict:
         rec = {"event": "plan", "plane": self.plane, "auto": self.auto,
                "reason": self.reason}
-        for k in ("packed_nbytes", "budget_bytes", "working_set_nbytes"):
+        for k in ("packed_nbytes", "budget_bytes", "working_set_nbytes",
+                  "chunk_rounds"):
             v = getattr(self, k)
             if v is not None:
                 rec[k] = int(v)
+        if self.dispatch_overhead_s is not None:
+            rec["dispatch_overhead_s"] = round(
+                float(self.dispatch_overhead_s), 9)
+        if self.bucketed:
+            rec["bucketed"] = True
         return rec
 
 
@@ -218,6 +252,47 @@ def device_memory_budget() -> Optional[int]:
         return None
     limit = stats.get("bytes_limit")
     return int(limit) if limit else None
+
+
+# chunk_rounds="auto": amortize the measured per-dispatch overhead (host
+# Python + jit-cache lookup + runtime launch) down to ~25us/round, the point
+# past which it disappears under even the smallest round's device work
+_AUTO_CHUNK_TARGET_S = 25e-6
+_AUTO_CHUNK_MIN = 8         # never chunk so small that compile count grows
+_AUTO_CHUNK_MAX = 256       # bound staging memory + ragged-tail compiles
+
+
+def measure_dispatch_overhead(n: int = 50) -> float:
+    """Seconds of per-dispatch overhead for an already-compiled trivial
+    jitted call — the fixed cost every chunk pays regardless of its size.
+    Compiles outside the timed window, then times ``n`` chained dispatches
+    (async: this measures the host-side dispatch path, the quantity chunking
+    actually amortizes, not device compute)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def probe(x):
+        return x + 1.0
+
+    x = jnp.zeros((8,), jnp.float32)
+    jax.block_until_ready(probe(x))      # compile before the clock starts
+    t0 = time.perf_counter()
+    for _ in range(n):
+        x = probe(x)
+    jax.block_until_ready(x)
+    return (time.perf_counter() - t0) / n
+
+
+def auto_chunk_rounds(overhead_s: float, n_rounds: int) -> int:
+    """Chunk size that amortizes ``overhead_s`` to ``_AUTO_CHUNK_TARGET_S``
+    per round, clamped to [_AUTO_CHUNK_MIN, _AUTO_CHUNK_MAX] and to the run
+    length (a chunk longer than the run just compiles a ragged shape)."""
+    want = -(-float(overhead_s) // _AUTO_CHUNK_TARGET_S)   # ceil
+    chunk = int(max(_AUTO_CHUNK_MIN, min(_AUTO_CHUNK_MAX, want)))
+    return max(1, min(chunk, int(n_rounds)))
 
 
 _CAPS = {"per_round": None, "scanned": None,
@@ -282,11 +357,45 @@ def check_plane(plane: str, sampler, dataset) -> None:
 
 
 def resolve(plan: ExecutionPlan, trainer, n_rounds: int) -> PlanDecision:
-    """Resolve ``plan`` to a concrete plane for ``trainer`` (the ROADMAP
-    decision rule, now executable).  Explicit planes are capability-checked;
-    ``"auto"`` compares the packed corpus and the chunk working set against
-    the memory budget.  Pure resolution — builds at most the host-side
-    streaming metadata, never uploads data."""
+    """Resolve ``plan`` to a concrete plane + chunk size for ``trainer``
+    (the ROADMAP decision rule, now executable).  Explicit planes are
+    capability-checked; ``"auto"`` compares the packed corpus and the chunk
+    working set against the memory budget.  ``chunk_rounds="auto"`` is
+    resolved here too, from the measured per-dispatch overhead (cached on
+    the session — one measurement per workload, not per run).  A
+    ``cache.bucketed`` plan must land on the streaming plane with
+    ``placement="mesh"`` — anything else raises a structured ``PlanError``
+    rather than silently training un-bucketed.  Pure resolution otherwise —
+    builds at most the host-side streaming metadata, never uploads data."""
+    decision = _resolve_plane(plan, trainer)
+    if plan.chunk_rounds == "auto":
+        overhead = trainer.session.dispatch_overhead()
+        decision.chunk_rounds = auto_chunk_rounds(overhead, n_rounds)
+        decision.dispatch_overhead_s = overhead
+        decision.reason += (
+            f"; chunk_rounds auto -> {decision.chunk_rounds} (measured "
+            f"dispatch overhead {overhead * 1e6:.0f}us/chunk amortized to "
+            f"<={_AUTO_CHUNK_TARGET_S * 1e6:.0f}us/round)")
+    else:
+        decision.chunk_rounds = int(plan.chunk_rounds)
+    if plan.cache.bucketed:
+        if decision.plane != "streaming":
+            raise PlanError(
+                f"cache.bucketed needs the streaming plane (the tier "
+                f"bucketing is the shard cache's n_k layout) but the plan "
+                f"resolved to {decision.plane!r} ({decision.reason})",
+                plane=decision.plane, nearest="streaming")
+        if trainer.rcfg.placement != "mesh":
+            raise PlanError(
+                f"cache.bucketed dispatches per-tier vmaps — "
+                f"placement='mesh' only, got rcfg.placement="
+                f"{trainer.rcfg.placement!r}", plane="streaming")
+        decision.bucketed = True
+        decision.reason += "; tier-bucketed dispatch"
+    return decision
+
+
+def _resolve_plane(plan: ExecutionPlan, trainer) -> PlanDecision:
     sampler, dataset = trainer.sampler, trainer.dataset
     if plan.plane != "auto":
         check_plane(plan.plane, sampler, dataset)
@@ -422,6 +531,16 @@ class TrainSession:
     _device_src: Any = None
     _stream_src: Any = None
     _cache_key: Any = None
+    _dispatch_overhead_s: Optional[float] = None
+
+    def dispatch_overhead(self) -> float:
+        """Measured per-dispatch overhead (seconds), measured ONCE per
+        session and reused by every ``chunk_rounds="auto"`` resolution —
+        the probe costs a trivial compile, and the overhead is a property
+        of the host/runtime, not of any one plan."""
+        if self._dispatch_overhead_s is None:
+            self._dispatch_overhead_s = measure_dispatch_overhead()
+        return self._dispatch_overhead_s
 
     def jit_fn(self, key, build):
         fn = self.jit_cache.get(key)

@@ -31,6 +31,10 @@ bit, certified on the shared ``tests/_trajectory.py`` harness:
   with chunk i+1's uploads dispatched right after chunk i's compute
   (double-buffered staging).  Needs the ``KeyedReplayable`` capability (the
   host replay is what names chunk i+1's participants ahead of time).
+  ``CacheSpec(bucketed=True)`` extends the tiering to the COMPUTE: the
+  cohort is staged per size tier and each tier runs one launch of its own
+  extent (optionally through the fused ``kernels/client_step`` Pallas
+  kernel via ``client_step_fn``).
 * ``plan="auto"`` — the system resolves the plane from the memory budget vs
   ``packed_nbytes`` and the chunk working-set rule (``launch/plan.py:
   resolve``); the decision is logged into ``session.plan_log``, the history
@@ -75,12 +79,12 @@ import numpy as np
 from repro.checkpoint import (AsyncCheckpointWriter, append_metrics,
                               latest_round, prune_metrics, restore_state)
 from repro.core import RoundConfig, round_step, scan_rounds
-from repro.core.multiround import scan_rounds_ondevice
+from repro.core.multiround import scan_rounds_bucketed, scan_rounds_ondevice
 from repro.core.sampling import (KeyedReplayable, UniformSampler,
                                  participants_in_span)
 from repro.core.server_opt import ServerOpt, ServerState
 from repro.data.device import DeviceFederatedDataset
-from repro.data.federated import FederatedDataset
+from repro.data.federated import FederatedDataset, minibatch_indices
 from repro.data.stream import ShardCache, StreamingFederatedDataset
 from repro.launch.plan import (CacheSpec, CkptSpec, ExecutionPlan, PlanError,
                                TrainSession, _IdKey, as_plan, resolve)
@@ -104,6 +108,16 @@ def _cache_stats(before, cache: Optional[ShardCache]):
             "cache_hit_rate": round(cache.hit_rate, 6)}
 
 
+# eager host replay of the keyed minibatch draws for a whole chunk at once:
+# one jitted dispatch over the flattened [R*C] (t, cid, n_k) lanes (threefry
+# is counter-based, so the staged values are bit-equal to the in-scan draw
+# the padded planes make) — the bucketed plane ships these as scan xs so its
+# compiled chunk carries no PRNG ops at all
+_staged_indices = jax.jit(
+    jax.vmap(minibatch_indices, in_axes=(None, 0, 0, 0, None)),
+    static_argnums=(4,))
+
+
 def _warn_shim(old: str, plane: str):
     warnings.warn(
         f"FederatedTrainer.{old}(...) is deprecated: use "
@@ -124,6 +138,9 @@ class FederatedTrainer:
     lr_schedule: Optional[Callable] = None   # round t -> gamma_t
                                              # (Corollary 3.3 schedules)
     hetero_steps_fn: Optional[Callable] = None  # round t -> [C] ints H_k
+    client_step_fn: Optional[Callable] = None   # fused gather+local-SGD hook
+                                                # (kernels/client_step) for
+                                                # the bucketed streaming plane
     ckpt_path: Optional[str] = None
     ckpt_every: int = 0
     metrics_path: Optional[str] = None       # durable per-round jsonl log
@@ -374,16 +391,19 @@ class FederatedTrainer:
             if decision.plane == "per_round":
                 return self._run_per_round(n_rounds, cadence, eval_fn,
                                            verbose, resume)
+            # chunked planes take the RESOLVED chunk size — a literal plan
+            # value, or the measured-overhead auto pick (see plan.resolve)
+            chunk_rounds = decision.chunk_rounds
             if decision.plane == "scanned":
-                return self._run_scanned(n_rounds, plan.chunk_rounds,
+                return self._run_scanned(n_rounds, chunk_rounds,
                                          int(plan.prefetch), eval_fn,
                                          verbose, resume)
             if decision.plane == "device":
-                return self._run_device(n_rounds, plan.chunk_rounds,
+                return self._run_device(n_rounds, chunk_rounds,
                                         eval_fn, verbose, resume)
-            return self._run_streaming(n_rounds, plan.chunk_rounds,
+            return self._run_streaming(n_rounds, chunk_rounds,
                                        plan.cache.clients, plan.cache.bytes,
-                                       plan.cache.tiers,
+                                       plan.cache.tiers, decision.bucketed,
                                        bool(plan.prefetch), eval_fn,
                                        verbose, resume)
         finally:
@@ -529,7 +549,8 @@ class FederatedTrainer:
     def _run_streaming(self, n_rounds: int, chunk_rounds: int,
                        cache_clients: Optional[int],
                        cache_bytes: Optional[int],
-                       cache_tiers: Optional[int], prefetch: bool, eval_fn,
+                       cache_tiers: Optional[int], bucketed: bool,
+                       prefetch: bool, eval_fn,
                        verbose: bool, resume: bool):
         t0 = self._resume_round(resume)
         sds = self.streaming_dataset()
@@ -539,6 +560,9 @@ class FederatedTrainer:
                                              cache_tiers)
         spans = [(s, min(s + chunk_rounds, n_rounds))
                  for s in range(t0, n_rounds, chunk_rounds)]
+        if bucketed:
+            return self._run_streaming_bucketed(spans, n_rounds, sds, cache,
+                                                prefetch, eval_fn, verbose)
 
         def prepare(i):
             # raw per-round sequence (dedup=False): ensure() refreshes LRU
@@ -559,11 +583,203 @@ class FederatedTrainer:
             cache_stats0=stats0)
 
     # ------------------------------------------------------------------
+    # plane: streaming + cache.bucketed — n_k-shaped per-tier dispatch
+    # ------------------------------------------------------------------
+    def _bucket_chunk(self, t_lo: int, t_hi: int, tier_of, counts,
+                      data_key):
+        """Host staging for one bucketed chunk: replay each round's cohort
+        (``KeyedReplayable`` host sample — the same draw the device planes
+        make), group the C slots by cache size tier and right-pad every
+        round's per-tier cohort to the chunk-wide tier width with a
+        SAME-TIER chunk participant at weight 0 (the diurnal padded-C
+        convention: zero weight => zero delta, excluded from the loss
+        metric; same tier because ``gather_tier_batch`` row-indexes the
+        tier's own corpus, and chunk participant so the pad row is
+        guaranteed cache-resident).  Padding rows carry all-ones H_k masks
+        so their effective weight stays exactly 0.
+
+        With no ``client_step_fn``, the chunk's minibatch index draws are
+        staged here too (one jitted host replay over the flattened cohort —
+        bit-equal to the in-scan draw), so the dispatched chunk runs in
+        fused-concat form: switch-free per-tier gathers, one concatenated
+        ``round_step`` launch per round, zero in-scan PRNG.  Padding rows
+        get index 0 — any in-range row works, their weight is 0.
+
+        Returns ``(participants, tiers_present, tier_cids, tier_weights,
+        lrs, tier_idx, tier_masks)`` — the raw round-order cid sequence
+        (the ``participants_in_span(dedup=False)`` form
+        ``ShardCache.ensure`` wants, so the span's sampler replay happens
+        exactly once), the static tier tuple, then [R, C_i]-stacked arrays
+        per occupied tier (``tier_idx`` None under the fused hook, which
+        draws its own keyed indices; ``tier_masks`` None when
+        ``hetero_steps_fn`` is)."""
+        R = t_hi - t_lo
+        rounds, lrs, participants = [], [], []
+        for t in range(t_lo, t_hi):
+            idx, weights = self.sampler.sample(t)
+            idx = np.asarray(idx)
+            participants.extend(int(c) for c in idx)
+            lr_t, mask = self._round_knobs(t)
+            lrs.append(lr_t)
+            by_tier: dict = {}
+            for j, cid in enumerate(idx):
+                by_tier.setdefault(int(tier_of[cid]), []).append(j)
+            rounds.append((idx, np.asarray(weights, np.float32), mask,
+                           by_tier))
+        tiers_present = tuple(sorted(
+            {tier for (_, _, _, bt) in rounds for tier in bt}))
+        # chunk-wide tier widths, rounded UP to the next power of two
+        # (capped at C): the jitted chunk fn re-traces on every new width
+        # signature, and raw per-chunk maxima almost never repeat across
+        # chunks — quantized widths collapse the signature space so the
+        # compile amortizes over the whole run.  Extra columns are plain
+        # weight-0 padding, excluded from delta and loss like any other.
+        C = self.rcfg.clients_per_round
+        widths = {tier: min(C, 1 << (max(len(bt.get(tier, ()))
+                                         for (_, _, _, bt) in rounds)
+                                     - 1).bit_length())
+                  for tier in tiers_present}
+        pad_cid: dict = {}          # any chunk participant of the tier
+        for (idx, _, _, bt) in rounds:
+            for tier, js in bt.items():
+                pad_cid.setdefault(tier, int(idx[js[0]]))
+        H = self.rcfg.local_steps
+        masked = self.hetero_steps_fn is not None
+        need = H * self.local_batch
+        idx_all = None
+        if self.client_step_fn is None:
+            # one host replay of every (t, cid) draw in the chunk — the
+            # concat-form chunk consumes these as xs instead of running
+            # fold-in/randint chains per tier per round in-scan
+            cid_flat = np.concatenate([idx for (idx, _, _, _) in rounds])
+            t_flat = np.repeat(np.arange(t_lo, t_hi, dtype=np.int32),
+                               [len(idx) for (idx, _, _, _) in rounds])
+            idx_all = np.asarray(_staged_indices(
+                data_key, t_flat, cid_flat.astype(np.int32),
+                np.asarray(counts)[cid_flat].astype(np.int32), need))
+            splits = np.cumsum([len(idx) for (idx, _, _, _) in rounds])[:-1]
+            idx_all = np.split(idx_all, splits)
+        tier_cids, tier_ws, tier_ms, tier_ix = [], [], [], []
+        for tier in tiers_present:
+            C_i = widths[tier]
+            cids = np.full((R, C_i), pad_cid[tier], np.int32)
+            ws = np.zeros((R, C_i), np.float32)
+            ms = np.ones((R, C_i, H), np.float32)
+            ix = np.zeros((R, C_i, need), np.int32)
+            for r, (idx, weights, mask, bt) in enumerate(rounds):
+                js = np.asarray(bt.get(tier, []), np.intp)
+                k = len(js)
+                if k == 0:
+                    continue           # all-padding round for this tier
+                cids[r, :k] = idx[js]
+                ws[r, :k] = weights[js]
+                if mask is not None:
+                    ms[r, :k] = mask[js]
+                if idx_all is not None:
+                    ix[r, :k] = idx_all[r][js]
+            tier_cids.append(cids)
+            tier_ws.append(ws)
+            tier_ms.append(ms)
+            tier_ix.append(ix)
+        return (participants, tiers_present, tuple(tier_cids),
+                tuple(tier_ws), np.asarray(lrs, np.float32),
+                tuple(tier_ix) if idx_all is not None else None,
+                tuple(tier_ms) if masked else None)
+
+    def _bucketed_chunk_fn(self, n_rounds: int, tiers_present: tuple,
+                           masked: bool):
+        """Jitted bucketed chunk, cached per (R, occupied tiers, masked, b,
+        hook) — per-tier widths need no key of their own (jit retraces on
+        the staged array shapes), but ``tiers_present`` and the fused hook
+        are closure constants, so they key the cache."""
+        rcfg, axes = self.rcfg, self.param_axes
+        loss_fn, opt = self.loss_fn, self.server_opt
+        b = self.local_batch
+        hook = self.client_step_fn
+
+        def build():
+            if masked:
+                @partial(jax.jit, donate_argnums=(0,))
+                def fn(state, view, data_key, t0, lrs, cids, ws, ixs, ms):
+                    return scan_rounds_bucketed(
+                        loss_fn, opt, state, view, tiers_present, cids, ws,
+                        data_key, t0, n_rounds, rcfg, b, param_axes=axes,
+                        lrs=lrs, tier_idx=ixs, tier_masks=ms,
+                        client_step_fn=hook)
+            else:
+                @partial(jax.jit, donate_argnums=(0,))
+                def fn(state, view, data_key, t0, lrs, cids, ws, ixs):
+                    return scan_rounds_bucketed(
+                        loss_fn, opt, state, view, tiers_present, cids, ws,
+                        data_key, t0, n_rounds, rcfg, b, param_axes=axes,
+                        lrs=lrs, tier_idx=ixs, client_step_fn=hook)
+            return fn
+
+        key = (("bucketed_chunk", n_rounds, tiers_present, masked, b,
+                _IdKey(hook)) + self._sig())
+        return self.session.jit_fn(key, build)
+
+    def _run_streaming_bucketed(self, spans, n_rounds: int, sds, cache,
+                                prefetch: bool, eval_fn, verbose: bool):
+        """The streaming chunk loop with n_k-shaped compute: ``prepare(i)``
+        stages span i's tier-bucketed cohorts alongside the usual residency
+        lookahead, and each dispatch runs one sized launch per occupied
+        tier (``scan_rounds_bucketed``) instead of the C-wide padded
+        gather.  Same trajectory as the padded plane (bit-equal with one
+        occupied tier, fp32-reduction-order tolerance across tiers)."""
+        if self.client_step_fn is not None:
+            if (self.rcfg.local_opt != "sgd"
+                    or jnp.dtype(self.rcfg.compute_dtype)
+                    != jnp.dtype(jnp.float32)):
+                raise PlanError(
+                    f"client_step_fn (the fused kernels/client_step hook) "
+                    f"covers plain-SGD fp32 local updates; got local_opt="
+                    f"{self.rcfg.local_opt!r}, compute_dtype="
+                    f"{self.rcfg.compute_dtype!r}", plane="streaming")
+        tier_of = cache.layout.tier_of
+        data_key = sds.base_key()
+        staged: dict = {}
+
+        def prepare(i):
+            # one host replay per span: _bucket_chunk both stages the
+            # per-tier cohorts (+ minibatch index draws) and yields the raw
+            # participant sequence (the dedup=False form ensure() wants for
+            # LRU recency)
+            s, e = spans[i]
+            parts, *rest = self._bucket_chunk(s, e, tier_of, sds.counts,
+                                              data_key)
+            staged[i] = tuple(rest)
+            return parts
+
+        def upload(parts):
+            cache.ensure(parts)
+            return cache.view()
+
+        def dispatch(i, s, e, view):
+            tiers_present, cids, ws, lrs, ixs, ms = staged.pop(i)
+            fn = self._bucketed_chunk_fn(e - s, tiers_present,
+                                         ms is not None)
+            args = (self.state, view, data_key, jnp.int32(s),
+                    jnp.asarray(lrs), jax.tree.map(jnp.asarray, cids),
+                    jax.tree.map(jnp.asarray, ws),
+                    jax.tree.map(jnp.asarray, ixs))
+            if ms is not None:
+                args += (jax.tree.map(jnp.asarray, ms),)
+            return fn(*args)
+
+        stats0 = _cache_counters(cache)
+        view = upload(prepare(0)) if spans else None
+        return self._run_fused_chunks(
+            spans, n_rounds, view, data_key, prepare, upload, prefetch,
+            eval_fn=eval_fn, verbose=verbose, cache=cache,
+            cache_stats0=stats0, dispatch=dispatch)
+
+    # ------------------------------------------------------------------
     # the chunk loop shared by the fused on-device planes
     # ------------------------------------------------------------------
     def _run_fused_chunks(self, spans, n_rounds, view, data_key,
                           prepare, upload, prefetch, eval_fn, verbose,
-                          cache=None, cache_stats0=None):
+                          cache=None, cache_stats0=None, dispatch=None):
         """Per-chunk knobs, one dispatch, shared bookkeeping for the device
         and streaming planes.  ``view`` is the gather-contract pytree for
         the first span; with staging hooks, ``prepare(i)`` does the
@@ -572,6 +788,10 @@ class FederatedTrainer:
         ``upload(prepared)`` makes span i's data resident and returns its
         view — dispatched right after the chunk when ``prefetch``
         (overlapping its compute), after the metrics sync otherwise.
+        ``dispatch(i, s, e, view) -> (state, metrics)`` overrides the
+        default ondevice-chunk launch (the bucketed plane supplies its own
+        staged per-tier launch); it must donate/consume ``self.state``
+        exactly like the default.
 
         The host-blocking metrics d2h sync for chunk i is deferred until
         chunk i+1 is in flight (the last per-chunk host-blocking step, now
@@ -588,8 +808,9 @@ class FederatedTrainer:
         with self._writer() as writer:
             try:
                 for i, (s, e) in enumerate(spans):
-                    lrs, masks = self._chunk_knobs(s, e)
-                    fn = self._device_chunk_fn(e - s, masks is not None)
+                    if dispatch is None:
+                        lrs, masks = self._chunk_knobs(s, e)
+                        fn = self._device_chunk_fn(e - s, masks is not None)
                     nxt = (prepare(i + 1)
                            if prepare and i + 1 < len(spans) else None)
                     if pending is not None:
@@ -598,11 +819,14 @@ class FederatedTrainer:
                         # now, the blocking metrics sync after the dispatch
                         pending = self._seal_chunk(pending, n_rounds,
                                                    eval_fn, writer)
-                    args = (self.state, view, sample_key, data_key,
-                            jnp.int32(s), jnp.asarray(lrs))
-                    if masks is not None:
-                        args += (jnp.asarray(masks),)
-                    self.state, metrics = fn(*args)   # async dispatch
+                    if dispatch is None:
+                        args = (self.state, view, sample_key, data_key,
+                                jnp.int32(s), jnp.asarray(lrs))
+                        if masks is not None:
+                            args += (jnp.asarray(masks),)
+                        self.state, metrics = fn(*args)  # async dispatch
+                    else:
+                        self.state, metrics = dispatch(i, s, e, view)
                     if nxt is not None and prefetch:
                         # double-buffered staging: span i+1's H2D scatters
                         # are dispatched now and overlap chunk i's scanned

@@ -43,13 +43,17 @@ from repro.launch.train import FederatedTrainer
 DRIVERS = ("per-round", "scanned", "device", "streaming")
 # "streaming" uses the default n_k-tiered shard cache; "streaming-uniform"
 # pins CacheSpec(tiers=1) — the single-tier n_max-slot layout.  Same plane,
-# same trajectory, different cache footprint.
-STREAM_VARIANTS = ("streaming", "streaming-uniform")
+# same trajectory, different cache footprint.  "streaming-bucketed" turns
+# the tiering into n_k-shaped COMPUTE (CacheSpec(bucketed=True), one sized
+# launch per tier): same trajectory up to fp32 reduction order across
+# tiers, bit-equal with a single occupied tier.
+STREAM_VARIANTS = ("streaming", "streaming-uniform", "streaming-bucketed")
 AUTO_DRIVERS = DRIVERS + ("auto",)
 LEGACY_SHIMS = os.environ.get("REPRO_LEGACY_DRIVERS", "") == "1"
 _PLANE_OF = {"per-round": "per_round", "scanned": "scanned",
              "device": "device", "streaming": "streaming",
-             "streaming-uniform": "streaming", "auto": "auto"}
+             "streaming-uniform": "streaming",
+             "streaming-bucketed": "streaming", "auto": "auto"}
 
 
 def linreg_loss(params, batch):
@@ -132,7 +136,9 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
                       bytes=kw.pop("cache_bytes", None),
                       tiers=kw.pop("cache_tiers",
                                    1 if driver == "streaming-uniform"
-                                   else None))
+                                   else None),
+                      bucketed=kw.pop("cache_bucketed",
+                                      driver == "streaming-bucketed"))
     budget = kw.pop("memory_budget_bytes", None)
     if LEGACY_SHIMS and driver in DRIVERS:
         # streaming-uniform has no legacy shim (run_streaming predates the
@@ -157,10 +163,13 @@ def run_trajectory(driver, opt, rcfg, clients, n_rounds, *,
     interruption point is always durable).  The stitched history covers all
     ``n_rounds``.
     """
+    trainer_kw = {k: driver_kw.pop(k) for k in ("client_step_fn",)
+                  if k in driver_kw}
+
     def mk(**extra):
         return make_trainer(opt, rcfg, clients, sampler_fn=sampler_fn,
                             hetero_fn=hetero_fn, local_batch=local_batch,
-                            **extra)
+                            **trainer_kw, **extra)
 
     if resume_at is None:
         tr = mk()

@@ -592,3 +592,74 @@ def test_legacy_shims_warn_and_stay_bit_equal(shim, plan):
         hist_old = getattr(tr_old, shim)(9, chunk_rounds=4, verbose=False)
     assert_same_trajectory((hist_old, tr_old.state),
                            (hist_new, tr_new.state))
+
+
+# ---------------------------------------------------------------------------
+# chunk_rounds="auto" + the bucketed knob
+# ---------------------------------------------------------------------------
+
+def test_auto_chunk_rounds_from_measured_overhead(monkeypatch):
+    """chunk_rounds='auto' resolves from the session's measured dispatch
+    overhead: amortized to the 25us/round target, clamped to [8, 256] and
+    to the run length, and audited on the decision record."""
+    from repro.launch import plan as plan_mod
+
+    clients = make_clients(seed=31)
+    tr = make_trainer(fedmom(), default_rcfg(), clients)
+    monkeypatch.setattr(plan_mod, "measure_dispatch_overhead",
+                        lambda n=50: 500e-6)     # 500us -> ceil(20) -> 20
+    plan = ExecutionPlan(plane="streaming", chunk_rounds="auto")
+    dec = resolve(plan, tr, 100)
+    assert dec.chunk_rounds == 20
+    assert dec.dispatch_overhead_s == 500e-6
+    assert "chunk_rounds auto -> 20" in dec.reason
+    rec = dec.record()
+    assert rec["chunk_rounds"] == 20 and rec["dispatch_overhead_s"] > 0
+    # measured once per session, reused across resolutions
+    monkeypatch.setattr(plan_mod, "measure_dispatch_overhead",
+                        lambda n=50: (_ for _ in ()).throw(AssertionError))
+    assert resolve(plan, tr, 100).chunk_rounds == 20
+
+
+def test_auto_chunk_rounds_clamps():
+    from repro.launch.plan import auto_chunk_rounds
+
+    assert auto_chunk_rounds(1e-6, 1000) == 8       # floor
+    assert auto_chunk_rounds(1.0, 100_000) == 256   # ceiling
+    assert auto_chunk_rounds(500e-6, 1000) == 20    # ceil(500/25)
+    assert auto_chunk_rounds(500e-6, 12) == 12      # run-length clamp
+    assert auto_chunk_rounds(1e-6, 3) == 3
+
+
+def test_auto_chunk_rounds_trains_on_trajectory():
+    clients = make_clients(seed=32)
+    opt = fedmom()
+    rcfg = default_rcfg()
+    ref = run_trajectory("streaming", opt, rcfg, clients, 12)
+    got = run_trajectory("streaming", opt, rcfg, clients, 12,
+                         chunk_rounds="auto")
+    assert_same_trajectory(got, ref)
+
+
+def test_bucketed_validation():
+    # non-bool rejected eagerly
+    with pytest.raises(PlanError, match="cache.bucketed"):
+        ExecutionPlan(cache=CacheSpec(bucketed=1))
+    # pinned non-streaming plane rejected at construction
+    with pytest.raises(PlanError, match="streaming"):
+        ExecutionPlan(plane="device", cache=CacheSpec(bucketed=True))
+    # placement='scan' rejected at resolve (bucketed dispatch is a vmap)
+    clients = make_clients(seed=33)
+    tr = make_trainer(fedmom(), default_rcfg(placement="scan"), clients)
+    plan = ExecutionPlan(plane="streaming", cache=CacheSpec(bucketed=True))
+    with pytest.raises(PlanError, match="placement"):
+        resolve(plan, tr, 10)
+
+
+def test_bucketed_decision_audited():
+    clients = make_clients(seed=34)
+    tr = make_trainer(fedmom(), default_rcfg(), clients)
+    plan = ExecutionPlan(plane="streaming", cache=CacheSpec(bucketed=True))
+    dec = resolve(plan, tr, 10)
+    assert dec.bucketed and dec.record()["bucketed"] is True
+    assert "tier-bucketed" in dec.reason

@@ -150,3 +150,51 @@ def test_dynamic_lr_overrides_static():
     s_dyn, _ = round_step(linreg_loss, opt, opt.init(params), batches,
                           weights, rcfg2, lr=jnp.float32(0.1))
     assert tree_allclose(s_static.w, s_dyn.w)
+
+
+@pytest.mark.parametrize("placement", ["mesh", "scan"])
+def test_bf16_delta_is_rounded_fp32_reduction(placement):
+    """delta_dtype='bfloat16' must round the FP32 reduction, not reduce in
+    bf16: casting the n_k/n weights (or per-client diffs) before the einsum
+    leaks weight mass under skewed n_k.  Recover delta through fedavg
+    (w' = w - eta*delta, eta=1) and pin it to the fp32 round's delta cast
+    once at the end."""
+    params, batches, _ = _setup(seed=7)
+    # heavily skewed weights — where premature bf16 rounding actually bites
+    weights = jnp.asarray([0.9, 0.0731, 0.0211, 0.0058], jnp.float32)
+    opt = so.fedavg(eta=1.0)
+    deltas = {}
+    for ddt in ("float32", "bfloat16"):
+        rcfg = RoundConfig(clients_per_round=4, local_steps=3, lr=0.1,
+                           placement=placement, compute_dtype="float32",
+                           delta_dtype=ddt)
+        state, _ = round_step(linreg_loss, opt, opt.init(params), batches,
+                              weights, rcfg)
+        deltas[ddt] = jax.tree.map(lambda w0, w1: w0 - w1, params, state.w)
+    want = jax.tree.map(lambda d: d.astype(jnp.bfloat16), deltas["float32"])
+    for g, r in zip(jax.tree.leaves(deltas["bfloat16"]),
+                    jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g, np.float32),
+                                      np.asarray(r, np.float32))
+
+
+def test_scan_placement_accepts_param_axes():
+    """Regression for the scan-placement sharding fix: param_axes must
+    thread through the scan body (broadcast model + fp32 accumulator
+    constraints) and leave the math identical to the unsharded run."""
+    from repro.sharding import FED_MESH_RULES, axis_rules
+
+    params, batches, weights = _setup(seed=8)
+    axes = {"w": ("embed",), "b": ()}
+    rcfg = RoundConfig(clients_per_round=4, local_steps=3, lr=0.1,
+                       placement="scan", compute_dtype="float32")
+    opt = so.fedmom(eta=1.0, beta=0.9)
+    ref, ref_m = round_step(linreg_loss, opt, opt.init(params), batches,
+                            weights, rcfg)
+    n = jax.device_count()
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    with mesh, axis_rules(mesh, FED_MESH_RULES):
+        got, got_m = round_step(linreg_loss, opt, opt.init(params), batches,
+                                weights, rcfg, param_axes=axes)
+    assert tree_allclose(ref.w, got.w, atol=1e-6)
+    assert np.allclose(ref_m["loss"], got_m["loss"], atol=1e-6)
