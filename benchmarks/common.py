@@ -46,6 +46,36 @@ def shakespeare_task(n_clients=30, seed=0) -> Task:
                 lambda k: small.lstm_init(k))
 
 
+def run_plan(task: Task, opt: ServerOpt, rounds: int, *,
+             local_steps: int = 10, lr: float = 0.05, m: int = 2,
+             seed: int = 0, plan=None, chunk_rounds: int = 20):
+    """Plan-based counterpart of ``run_rounds``: the same experiment under
+    ``FederatedTrainer.run(plan=...)`` — any execution plane, optional
+    ``ScenarioSpec`` lifecycle conditions — instead of the hand-rolled
+    per-round loop.  Deterministic in ``seed`` (keyed sampler + keyed
+    minibatch draws).  Returns ``{"losses", "final_w", "history"}``."""
+    from repro.core import DeviceUniformSampler
+    from repro.launch.plan import ExecutionPlan
+    from repro.launch.train import FederatedTrainer
+
+    pop = task.dataset.population()
+    task.dataset.seed = seed + 7   # draws are keyed by (seed, t, client_id)
+    w0 = task.init_fn(jax.random.PRNGKey(0))
+    rcfg = RoundConfig(clients_per_round=m, local_steps=local_steps, lr=lr,
+                       placement="mesh", compute_dtype="float32")
+    tr = FederatedTrainer(
+        loss_fn=task.loss_fn, server_opt=opt, rcfg=rcfg,
+        dataset=task.dataset,
+        sampler=DeviceUniformSampler(pop, m, seed=seed),
+        state=opt.init(w0), local_batch=task.local_batch)
+    if plan is None:
+        plan = ExecutionPlan(plane="scanned", chunk_rounds=chunk_rounds)
+    hist = [r for r in tr.run(rounds, plan=plan, verbose=False)
+            if "event" not in r]
+    return {"losses": [r["loss"] for r in hist], "final_w": tr.state.w,
+            "history": hist}
+
+
 def run_rounds(task: Task, opt: ServerOpt, rounds: int, *,
                local_steps: int = 10, lr: float = 0.05, m: int = 2,
                seed: int = 0, record_states: bool = False):

@@ -1,10 +1,33 @@
 """Paper Figure 6: FedMom is more robust than FedAvg to the stepsize gamma
-and the number of local iterations H (loss varies less across the grid)."""
+and the number of local iterations H (loss varies less across the grid).
+
+Runs under the plan-based driver (``FederatedTrainer.run(plan=...)``,
+scanned plane) — the same keyed trajectory contract as the tests.
+
+Scenario lane (``--scenario``): the production-conditions extension of the
+same robustness question.  A provider-backed Zipf corpus (hundreds of
+thousands of lazily-synthesized clients — host RAM holds the [K] count
+vector, never the corpus) trains under the streaming plane while a
+``ScenarioSpec`` applies mid-round dropouts at a swept rate plus
+round-deadline stragglers; eq. (3) partial-work aggregation keeps a
+fully-dropped client's weight mass on w_t, so FedMom's final loss should
+move less across the dropout grid than FedAvg's:
+
+    PYTHONPATH=src python -m benchmarks.fig6_robustness --scenario \\
+        [--smoke] [--emit-bench BENCH_7.json]
+
+``--smoke`` shrinks to a CI-sized pass (100k clients, fewer rounds);
+``--emit-bench PATH`` writes the sweep as the committed per-PR snapshot
+(``BENCH_<pr>.json`` — CI regenerates the smoke shape against it).
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 
-from benchmarks.common import femnist_task, run_rounds
+from benchmarks.common import femnist_task, run_plan
 from repro.core import fedavg, fedmom
 
 
@@ -18,13 +41,13 @@ def run(rounds: int = 120, verbose: bool = True) -> dict:
                           ("fedmom", lambda: fedmom(eta=K / 2, beta=0.9))):
         g_losses = []
         for g in gammas:
-            r = run_rounds(task, opt_fn(), rounds, local_steps=10, lr=g,
-                           seed=6)
+            r = run_plan(task, opt_fn(), rounds, local_steps=10, lr=g,
+                         seed=6)
             g_losses.append(float(np.mean(r["losses"][-10:])))
         h_losses = []
         for H in hs:
-            r = run_rounds(task, opt_fn(), rounds, local_steps=H, lr=0.05,
-                           seed=6)
+            r = run_plan(task, opt_fn(), rounds, local_steps=H, lr=0.05,
+                         seed=6)
             h_losses.append(float(np.mean(r["losses"][-10:])))
         out["gamma"][label] = dict(zip(map(str, gammas), g_losses))
         out["H"][label] = dict(zip(map(str, hs), h_losses))
@@ -41,5 +64,136 @@ def run(rounds: int = 120, verbose: bool = True) -> dict:
     return out
 
 
+def _scenario_run(opt, provider, rounds: int, rate: float, *, m: int,
+                  local_steps: int, deadline_s: float, chunk_rounds: int,
+                  seed: int) -> dict:
+    """One dropout-sweep cell: provider-backed streaming run under a
+    dropout + straggler ScenarioSpec; returns final loss + completion."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import DeviceUniformSampler, RoundConfig
+    from repro.data import StreamingFederatedDataset
+    from repro.launch.plan import CacheSpec, ExecutionPlan
+    from repro.launch.train import FederatedTrainer
+    from repro.scenario import (LatencyStragglers, ScenarioSpec,
+                                UniformDropout)
+
+    ds = StreamingFederatedDataset.from_provider(provider, seed=seed + 7)
+    rcfg = RoundConfig(clients_per_round=m, local_steps=local_steps,
+                       lr=0.05, placement="mesh", compute_dtype="float32")
+    d = provider.fields["x"][0][0]
+    tr = FederatedTrainer(
+        loss_fn=_linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
+        sampler=DeviceUniformSampler(ds.population(), m, seed=seed),
+        state=opt.init({"w": jnp.zeros(d), "b": jnp.zeros(())}),
+        local_batch=4)
+    spec = ScenarioSpec(
+        dropout=UniformDropout(rate=rate) if rate > 0 else None,
+        stragglers=LatencyStragglers(deadline_s=deadline_s,
+                                     mean_step_s=1.0),
+        seed=seed + 11)
+    plan = ExecutionPlan(plane="streaming", chunk_rounds=chunk_rounds,
+                         cache=CacheSpec(clients=m * chunk_rounds),
+                         scenario=spec)
+    hist = [r for r in tr.run(rounds, plan=plan, verbose=False)
+            if "event" not in r]
+    jax.tree.leaves(tr.state.w)[0].block_until_ready()
+    cache = tr.stream_cache
+    return {
+        "final_loss": float(np.mean([r["loss"] for r in hist[-10:]])),
+        "completed_mean": float(np.mean([r["completed"] for r in hist])),
+        "cache_nbytes": int(cache.nbytes),
+    }
+
+
+def scenario_lane(rounds: int = 60, n_clients: int = 1_000_000,
+                  smoke: bool = False, verbose: bool = True) -> dict:
+    """Dropout-rate sweep on a provider-backed Zipf corpus: eq. (3) keeps
+    FedMom's final loss stable as the dropout rate climbs (the spread
+    stays at or below FedAvg's), while the lazily-synthesized corpus never
+    materializes on host.  Returns the BENCH_7 snapshot dict."""
+    from repro.scenario import zipf_linreg_provider
+
+    if smoke:
+        rounds, n_clients = min(rounds, 24), min(n_clients, 100_000)
+    m, local_steps, chunk_rounds, deadline_s = 8, 10, 8, 11.0
+    rates = [0.0, 0.3, 0.6] if smoke else [0.0, 0.2, 0.4, 0.6]
+    provider = zipf_linreg_provider(n_clients, dim=16, n_min=4, n_max=64,
+                                    seed=0)
+    # what a materialized corpus would pin on host vs what the provider
+    # declares: the [K] count vector only
+    row_nbytes = (16 + 1) * 4
+    materialized_mb = float(provider.counts.sum() * row_nbytes / 2**20)
+    declared_mb = float(provider.counts.nbytes / 2**20)
+    eta = n_clients / m                 # the paper's eta = K/M unbiasing
+    out = {"bench": "scenario_dropout_sweep",
+           "config": {"model": "linreg", "n_clients": n_clients,
+                      "rounds": rounds, "m": m, "local_steps": local_steps,
+                      "chunk_rounds": chunk_rounds,
+                      "deadline_s": deadline_s, "rates": rates,
+                      "smoke": smoke},
+           "corpus_materialized_mb": round(materialized_mb, 2),
+           "corpus_declared_mb": round(declared_mb, 4),
+           "rates": {}}
+    cache_mb = None
+    for label, opt_fn in (("fedavg", lambda: fedavg(eta=eta)),
+                          ("fedmom", lambda: fedmom(eta=eta, beta=0.9))):
+        finals = []
+        for rate in rates:
+            cell = _scenario_run(opt_fn(), provider, rounds, rate, m=m,
+                                 local_steps=local_steps,
+                                 deadline_s=deadline_s,
+                                 chunk_rounds=chunk_rounds, seed=6)
+            cache_mb = round(cell.pop("cache_nbytes") / 2**20, 3)
+            out["rates"].setdefault(str(rate), {})[label] = cell
+            finals.append(cell["final_loss"])
+            if verbose:
+                print(f"[fig6-scenario] {label} rate={rate}: "
+                      f"loss={cell['final_loss']:.4f} "
+                      f"completed={cell['completed_mean']:.2f}/{m}")
+        out[label + "_spread"] = float(max(finals) - min(finals))
+    out["cache_mb"] = cache_mb
+    if verbose:
+        print(f"[fig6-scenario] final-loss spread across dropout grid: "
+              f"fedavg {out['fedavg_spread']:.4f} vs "
+              f"fedmom {out['fedmom_spread']:.4f} (eq. (3) partial work; "
+              f"paper: fedmom tighter)")
+        print(f"[fig6-scenario] corpus: {n_clients} clients, "
+              f"{materialized_mb:.1f} MB materialized vs "
+              f"{declared_mb:.2f} MB declared + {cache_mb} MB device cache")
+    return out
+
+
+def _linreg_loss(params, b):
+    import jax.numpy as jnp
+
+    pred = b["x"] @ params["w"] + params["b"]
+    return jnp.mean(jnp.square(pred - b["y"])), {}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--scenario", action="store_true",
+                    help="run the dropout-sweep scenario lane instead of "
+                         "the gamma/H grids")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized scenario pass (100k clients, short run)")
+    ap.add_argument("--emit-bench", metavar="PATH", default=None,
+                    help="write the scenario sweep as a JSON snapshot "
+                         "(the committed BENCH_<pr>.json perf record)")
+    args = ap.parse_args(argv)
+    if args.scenario or args.emit_bench:
+        snap = scenario_lane(rounds=args.rounds or 60, smoke=args.smoke)
+        if args.emit_bench:
+            with open(args.emit_bench, "w") as f:
+                json.dump(snap, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"  bench snapshot -> {args.emit_bench}")
+        return snap
+    return run(rounds=args.rounds or 120)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -16,6 +16,13 @@ the decision is printed and logged.  The legacy ``--scanned`` /
 server update (a win on TPU; interpret mode on CPU).  ``--hetero``
 additionally gives each client a random H_k <= H of local work per round
 (the straggler / partial-work scenario).
+
+Production-fleet conditions are declared with the scenario flags
+(``--dropout`` / ``--deadline`` / ``--adaptive-cohort``; see the scenario
+table in ``--help``) and run identically on every plane; ``--provider``
+swaps the materialized FEMNIST corpus for a lazily-synthesized Zipf
+linear-regression fleet of that many clients (streaming plane — host RAM
+holds a count vector, never the corpus).
 """
 import argparse
 
@@ -30,10 +37,13 @@ from repro.core import (
     fedavg,
     fedmom,
 )
-from repro.data import FederatedDataset, synthetic_femnist
+from repro.data import (FederatedDataset, StreamingFederatedDataset,
+                        synthetic_femnist)
 from repro.launch.plan import CacheSpec, ExecutionPlan
 from repro.launch.train import FederatedTrainer
 from repro.models import small
+from repro.scenario import (AdaptiveCohort, LatencyStragglers, ScenarioSpec,
+                            UniformDropout, zipf_linreg_provider)
 
 PLAN_TABLE = """\
 plan selection (--plan):
@@ -67,7 +77,24 @@ fp32-reduction-order tolerance across several).  --chunk-rounds auto
 sizes the scan chunk from the measured per-dispatch overhead instead of
 a fixed guess.  Perf snapshots: benchmarks/perf_compare.py --data-plane
 --emit-bench BENCH_<pr>.json records the bucketed-vs-padded pipeline
-win at Zipf-skewed n_k (committed per PR; CI re-checks a smoke run)."""
+win at Zipf-skewed n_k (committed per PR; CI re-checks a smoke run).
+
+scenario simulation (repro.scenario; composable, plane-agnostic,
+bit-reproducible — every fate is keyed by (seed, tag, round, client)):
+  flag                    fleet condition                aggregation effect
+  ---------------------   ----------------------------   -------------------------------------------
+  --dropout RATE          i.i.d. mid-round dropouts      dropped client keeps its partial H_k steps;
+                                                         a 0-step dropout contributes zero (eq. 3)
+  --deadline SECONDS      round deadline + lognormal     slow device contributes floor(deadline/step)
+                          per-device step latency        of its H steps, never stalls the round
+  --adaptive-cohort GOAL  server over-selection toward   active cohort m_t grows when observed
+                          GOAL completed clients/round   completion drops (EMA; resumable state)
+  --provider K            lazily-synthesized Zipf fleet  identical trajectory to the same corpus
+                          of K clients (ShardProvider)   materialized; host holds [K] counts only
+Scenario runs log a per-round "completed" metric (clients that finished
+any work).  The dropout sweep benchmark: benchmarks/fig6_robustness.py
+--scenario --emit-bench BENCH_7.json (eq. (3) keeps FedMom's final loss
+stable as the dropout rate climbs)."""
 
 
 def main():
@@ -113,36 +140,87 @@ def main():
                          "from the measured dispatch overhead")
     ap.add_argument("--hetero", action="store_true",
                     help="random per-client local work H_k <= H per round")
+    ap.add_argument("--dropout", type=float, default=None, metavar="RATE",
+                    help="scenario: i.i.d. mid-round dropout rate in [0,1]")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="scenario: round deadline in seconds (lognormal "
+                         "per-device step latency around 1s/step)")
+    ap.add_argument("--adaptive-cohort", type=int, default=None,
+                    metavar="GOAL",
+                    help="scenario: grow/shrink the active cohort toward "
+                         "GOAL completed clients per round")
+    ap.add_argument("--scenario-seed", type=int, default=0,
+                    help="seed keying every scenario fate draw")
+    ap.add_argument("--provider", type=int, default=None, metavar="K",
+                    help="train a lazily-synthesized Zipf linreg fleet of "
+                         "K clients via a ShardProvider (streaming plane) "
+                         "instead of materialized FEMNIST")
     args = ap.parse_args()
 
-    plane = args.plan or ("streaming" if args.stream_data
+    plane = args.plan or ("streaming" if args.stream_data or args.provider
                           else "device" if args.device_data
                           else "scanned" if args.scanned else "per-round")
     budget = (int(args.memory_budget_mb * 2**20)
               if args.memory_budget_mb is not None else None)
+    scenario = None
+    if (args.dropout is not None or args.deadline is not None
+            or args.adaptive_cohort is not None):
+        scenario = ScenarioSpec(
+            dropout=(UniformDropout(rate=args.dropout)
+                     if args.dropout is not None else None),
+            stragglers=(LatencyStragglers(deadline_s=args.deadline)
+                        if args.deadline is not None else None),
+            cohort=(AdaptiveCohort(goal=args.adaptive_cohort)
+                    if args.adaptive_cohort is not None else None),
+            seed=args.scenario_seed)
     plan = ExecutionPlan(plane=plane, chunk_rounds=args.chunk_rounds,
                          cache=CacheSpec(clients=args.cache_clients,
                                          tiers=args.cache_tiers,
                                          bucketed=args.bucketed),
-                         memory_budget_bytes=budget)
+                         memory_budget_bytes=budget, scenario=scenario)
 
-    clients, counts = synthetic_femnist(n_clients=args.clients, seed=0)
-    ds = FederatedDataset(clients, seed=1)
-    pop = ds.population()
-    K, M = pop.n_clients, args.m
+    if args.provider:
+        provider = zipf_linreg_provider(args.provider, dim=16, n_min=4,
+                                        n_max=64, seed=0)
+        ds = StreamingFederatedDataset.from_provider(provider, seed=1)
+        pop = ds.population()
+        K, M = pop.n_clients, args.m
+        d = provider.fields["x"][0][0]
 
-    # held-out eval set: a slice of every client's data
-    ex = np.concatenate([c["x"][:5] for c in clients])
-    ey = np.concatenate([c["y"][:5] for c in clients])
+        def loss_fn(params, b):
+            pred = b["x"] @ params["w"] + params["b"]
+            return jnp.mean(jnp.square(pred - b["y"])), {}
 
-    def eval_fn(state):
-        logits = small.lenet_apply(
-            jax.tree.map(lambda x: x.astype(jnp.float32), state.w),
-            jnp.asarray(ex))
-        acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ey)))
-        return {"eval_acc": acc}
+        # held-out eval: a handful of synthesized shards (never cached)
+        ev = [provider.shard(cid) for cid in range(min(K, 8))]
+        ex = jnp.asarray(np.concatenate([s["x"] for s in ev]))
+        ey = jnp.asarray(np.concatenate([s["y"] for s in ev]))
 
-    w0 = small.lenet_init(jax.random.PRNGKey(0))
+        def eval_fn(state):
+            mse = jnp.mean(jnp.square(
+                ex @ state.w["w"] + state.w["b"] - ey))
+            return {"eval_mse": float(mse)}
+
+        w0 = {"w": jnp.zeros(d), "b": jnp.zeros(())}
+    else:
+        clients, counts = synthetic_femnist(n_clients=args.clients, seed=0)
+        ds = FederatedDataset(clients, seed=1)
+        pop = ds.population()
+        K, M = pop.n_clients, args.m
+        loss_fn = small.lenet_loss
+
+        # held-out eval set: a slice of every client's data
+        ex = np.concatenate([c["x"][:5] for c in clients])
+        ey = np.concatenate([c["y"][:5] for c in clients])
+
+        def eval_fn(state):
+            logits = small.lenet_apply(
+                jax.tree.map(lambda x: x.astype(jnp.float32), state.w),
+                jnp.asarray(ex))
+            acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ey)))
+            return {"eval_acc": acc}
+
+        w0 = small.lenet_init(jax.random.PRNGKey(0))
     rcfg = RoundConfig(clients_per_round=M, local_steps=args.local_steps,
                        lr=args.lr, placement="mesh",
                        compute_dtype="float32")
@@ -153,12 +231,21 @@ def main():
             return np.random.default_rng(1000 + t).integers(
                 1, args.local_steps + 1, size=M)
 
+    scen_tag = ""
+    if scenario is not None:
+        parts = [f"dropout={args.dropout}" if args.dropout is not None
+                 else None,
+                 f"deadline={args.deadline}s" if args.deadline is not None
+                 else None,
+                 f"cohort->{args.adaptive_cohort}"
+                 if args.adaptive_cohort is not None else None]
+        scen_tag = f" [scenario: {', '.join(p for p in parts if p)}]"
     for name, opt in [("FedAvg (eta=K/M)", fedavg(eta=K / M)),
                       ("FedMom (eta=K/M, beta=0.9)",
                        fedmom(eta=K / M, beta=0.9,
                               use_fused_kernel=args.fused_server))]:
         print(f"\n=== {name} [plan={plan.plane}]"
-              f"{' [hetero H_k]' if args.hetero else ''} ===")
+              f"{' [hetero H_k]' if args.hetero else ''}{scen_tag} ===")
         # the per-round plane works with the paper's stateful sampler; the
         # compiled/fused planes (and auto, which may resolve to one) need
         # the keyed Device* capabilities
@@ -166,9 +253,9 @@ def main():
                    if plan.plane == "per_round"
                    else DeviceUniformSampler(pop, M, seed=2))
         trainer = FederatedTrainer(
-            loss_fn=small.lenet_loss, server_opt=opt, rcfg=rcfg,
+            loss_fn=loss_fn, server_opt=opt, rcfg=rcfg,
             dataset=ds, sampler=sampler, hetero_steps_fn=hetero_fn,
-            state=opt.init(w0), local_batch=10)
+            state=opt.init(w0), local_batch=4 if args.provider else 10)
         hist = trainer.run(args.rounds, plan=plan, log_every=25,
                            eval_fn=eval_fn)
         cache = trainer.stream_cache
@@ -182,8 +269,12 @@ def main():
                   f"{sds.packed_nbytes / 2**20:.2f} MiB packed), "
                   f"hit-rate {cache.hit_rate:.1%}, "
                   f"{cache.evictions} evictions")
-        print(f"final: loss={hist[-1]['loss']:.4f} "
-              f"acc={hist[-1]['eval_acc']:.3f}")
+        final = hist[-1]
+        quality = (f"mse={final['eval_mse']:.4f}" if "eval_mse" in final
+                   else f"acc={final['eval_acc']:.3f}")
+        done = (f" completed={final['completed']}/{M}"
+                if "completed" in final else "")
+        print(f"final: loss={final['loss']:.4f} {quality}{done}")
 
 
 if __name__ == "__main__":

@@ -142,6 +142,11 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
         "loss": jnp.sum(eff_w * losses) / wsum,
         "losses": losses,
         "delta_norm": _global_norm(delta),
+        # clients that contributed work to eq. (3): positive weight AND >=1
+        # unmasked local step — dropouts/stragglers that finished nothing
+        # and zero-weight padded slots both fall out, so a scenario run's
+        # per-round completion is observable from the metrics stream
+        "completed": jnp.sum(eff_w > 0).astype(jnp.int32),
         "round": state.t,
     }
     return new_state, metrics
@@ -211,6 +216,7 @@ def bucketed_round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
     acc = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), w_c)
     loss_num = jnp.zeros((), jnp.float32)
     loss_den = jnp.zeros((), jnp.float32)
+    completed = jnp.zeros((), jnp.int32)
     for i, (data, weights) in enumerate(zip(tier_data, tier_weights)):
         mask = None if tier_masks is None else tier_masks[i]
         final, losses = update(w_c, i, data, mask)
@@ -224,11 +230,13 @@ def bucketed_round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
             eff_w = weights * (jnp.sum(mask, axis=1) > 0)
         loss_num = loss_num + jnp.sum(eff_w * losses)
         loss_den = loss_den + jnp.sum(eff_w)
+        completed = completed + jnp.sum(eff_w > 0).astype(jnp.int32)
     delta = jax.tree.map(lambda d: d.astype(ddt), acc)
     new_state = server_opt.update(state, delta)
     metrics = {
         "loss": loss_num / jnp.maximum(loss_den, 1e-12),
         "delta_norm": _global_norm(delta),
+        "completed": completed,
         "round": state.t,
     }
     return new_state, metrics

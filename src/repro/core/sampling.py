@@ -60,6 +60,31 @@ class KeyedReplayable(DeviceSampleable, Protocol):
     def base_key(self): ...
 
 
+def diurnal_m_host(t: int, m_min: int, m_max: int, period: int) -> int:
+    """Sinusoidal M(t) between m_min and m_max (host path, float64 math).
+
+    Shared by ``DiurnalSampler.m_at`` and the scenario layer's
+    ``DiurnalAvailability`` so both describe the SAME schedule.
+    """
+    frac = 0.5 * (1 + math.sin(2 * math.pi * t / period))
+    return int(round(m_min + frac * (m_max - m_min)))
+
+
+def diurnal_m_device(t, m_min: int, m_max: int, period: int):
+    """Traceable M(t): the device twin of ``diurnal_m_host``.
+
+    float32 on purpose (matches the in-scan computation the device planes
+    have always used); the host/device pair can disagree by one client at
+    the exact rounding boundary of a pathological period, which is why the
+    engine treats M(t) as a weight mask, never a shape.
+    """
+    import jax.numpy as jnp
+
+    frac = 0.5 * (1.0 + jnp.sin(
+        2.0 * jnp.pi * jnp.asarray(t, jnp.float32) / period))
+    return jnp.round(m_min + frac * (m_max - m_min)).astype(jnp.int32)
+
+
 @dataclass
 class ClientPopulation:
     """K clients with sample counts n_k (unbalanced, non-IID per the data
@@ -156,8 +181,7 @@ class DiurnalSampler:
         return self.m_max
 
     def m_at(self, t: int) -> int:
-        frac = 0.5 * (1 + math.sin(2 * math.pi * t / self.period))
-        return int(round(self.m_min + frac * (self.m_max - self.m_min)))
+        return diurnal_m_host(t, self.m_min, self.m_max, self.period)
 
     def sample(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
         m_t = self.m_at(t)
@@ -178,10 +202,7 @@ class DiurnalSampler:
         kt = jax.random.fold_in(key, t)
         idx = jax.random.permutation(
             kt, self.population.n_clients)[: self.m_max]
-        frac = 0.5 * (1.0 + jnp.sin(
-            2.0 * jnp.pi * jnp.asarray(t, jnp.float32) / self.period))
-        m_t = jnp.round(
-            self.m_min + frac * (self.m_max - self.m_min)).astype(jnp.int32)
+        m_t = diurnal_m_device(t, self.m_min, self.m_max, self.period)
         w = jnp.asarray(self.population.weights, jnp.float32)[idx]
         w = jnp.where(jnp.arange(self.m_max) < m_t, w, 0.0)
         return idx, w

@@ -1,11 +1,13 @@
 from repro.data.device import DeviceFederatedDataset  # noqa: F401
 from repro.data.federated import (  # noqa: F401
+    CorpusSchemaError,
     FederatedDataset,
     minibatch_indices,
 )
 from repro.data.stream import (  # noqa: F401
     CacheView,
     ShardCache,
+    ShardProvider,
     StreamingFederatedDataset,
     TierLayout,
     next_pow2,

@@ -13,12 +13,31 @@ keyed draw runs *traced* inside the device-resident data plane
 what makes the host and device gathers bit-equal."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.sampling import ClientPopulation
+
+
+class CorpusSchemaError(ValueError):
+    """A corpus whose per-client shards cannot feed the data planes.
+
+    Named (instead of a bare ``ValueError`` / downstream ``IndexError``) so
+    callers can tell a malformed corpus from a malformed *plan*: raised for
+    an empty corpus, a client whose field set differs from the declared
+    schema, ragged field lengths inside one client, an empty client
+    (n_k = 0 — the keyed minibatch draw is undefined on an empty span) and
+    a client whose field tail shape or dtype disagrees with the schema.
+    ``client`` carries the offending client id (``None`` for the
+    empty-corpus case) so provider-backed corpora can report which lazy
+    shard came back wrong.
+    """
+
+    def __init__(self, message: str, client=None):
+        super().__init__(message)
+        self.client = client
 
 
 def minibatch_indices(key: jax.Array, t, client_id, n_k, need: int):
@@ -41,29 +60,74 @@ _host_indices = jax.jit(
     static_argnums=(4,))
 
 
+def shard_schema(shard: Dict[str, np.ndarray]) -> Dict[str, tuple]:
+    """Declared-schema form of one client shard:
+    ``{field: (tail_shape, dtype)}`` (sample axis stripped)."""
+    return {name: (np.asarray(a).shape[1:], np.asarray(a).dtype)
+            for name, a in shard.items()}
+
+
+def check_shard(shard: Dict[str, np.ndarray], fields: Dict[str, tuple],
+                client, n_k: Optional[int] = None,
+                source: str = "client") -> int:
+    """Validate one client shard against a declared schema; returns its
+    sample count.  This is the single gate both corpus paths share: a
+    materialized corpus runs every client through it at construction, a
+    lazy ``ShardProvider`` runs each shard through it on first fetch —
+    either way a wrong shard raises a ``CorpusSchemaError`` naming the
+    client instead of a downstream shape/broadcast crash.
+    ``n_k``: when given, the declared count the shard must match."""
+    got = sorted(shard)
+    want = sorted(fields)
+    if got != want:
+        raise CorpusSchemaError(
+            f"{source} {client}: fields {got} != declared schema {want}",
+            client=client)
+    lens = {name: len(np.asarray(a)) for name, a in shard.items()}
+    if len(set(lens.values())) != 1:
+        raise CorpusSchemaError(
+            f"{source} {client}: ragged field lengths {lens}",
+            client=client)
+    count = next(iter(lens.values()))
+    if count == 0:
+        raise CorpusSchemaError(
+            f"{source} {client} has no samples (n_k = 0): the keyed "
+            f"minibatch draw is undefined on an empty span", client=client)
+    if n_k is not None and count != int(n_k):
+        raise CorpusSchemaError(
+            f"{source} {client}: shard has {count} samples but the "
+            f"declared counts say n_k = {int(n_k)}", client=client)
+    for name, a in shard.items():
+        a = np.asarray(a)
+        tail, dtype = fields[name]
+        if a.shape[1:] != tuple(tail) or a.dtype != np.dtype(dtype):
+            raise CorpusSchemaError(
+                f"{source} {client}: field {name!r} is "
+                f"{a.shape[1:]}/{a.dtype} but the declared schema says "
+                f"{tuple(tail)}/{np.dtype(dtype)}", client=client)
+    return count
+
+
 def validate_client_data(data: List[Dict[str, np.ndarray]]) -> np.ndarray:
     """Shared per-client validation for every data plane; returns [K] n_k.
 
-    Every client must carry the same fields, each field the same length
-    within a client, and n_k >= 1 (the keyed minibatch draw is undefined on
-    an empty span).  Host container, packed device plane and streaming
+    Every client must carry the same fields with the same tail shapes and
+    dtypes (client 0 declares the schema, every other client is checked
+    against it — a divergent client used to surface only as a downstream
+    shape/cast error at pack/upload time), each field the same length
+    within a client, and n_k >= 1 (the keyed minibatch draw is undefined
+    on an empty span).  Raises the named ``CorpusSchemaError`` (a
+    ``ValueError``).  Host container, packed device plane and streaming
     shard plane all accept exactly the same corpora because they all call
     this.
     """
     if not data:
-        raise ValueError("empty corpus: need at least one client")
-    counts = np.array([len(next(iter(d.values()))) for d in data], np.int32)
-    names = sorted(data[0])
-    for k, d in enumerate(data):
-        if sorted(d) != names:
-            raise ValueError(f"client {k}: fields {sorted(d)} != {names}")
-        if any(len(a) != counts[k] for a in d.values()):
-            raise ValueError(f"client {k}: ragged field lengths")
-        if counts[k] == 0:
-            raise ValueError(
-                f"client {k} has no samples (n_k = 0): the keyed "
-                f"minibatch draw is undefined on an empty span")
-    return counts
+        raise CorpusSchemaError(
+            "empty corpus: need at least one client (a provider-backed "
+            "corpus instead declares counts/fields up front)")
+    fields = shard_schema(data[0])
+    return np.array([check_shard(d, fields, k) for k, d in enumerate(data)],
+                    np.int32)
 
 
 class FederatedDataset:

@@ -23,7 +23,11 @@ the smallest buckets upward.
 * ``StreamingFederatedDataset`` — host per-client shards (same field dtypes
   and the same ``(seed, t, client_id)``-keyed minibatch draws as the other
   planes), plus the packing metadata the cache needs (``tier_layout``:
-  tier sizes, per-client tier assignment, tiered byte accounting);
+  tier sizes, per-client tier assignment, tiered byte accounting).  Built
+  either from a materialized ``data`` list or from a lazy ``ShardProvider``
+  (declared counts/fields; shards synthesized or loaded on first cache
+  miss, keyed by client id) — the provider path removes the host-RAM cap
+  on K entirely: millions of Zipf clients cost [K] ints of metadata;
 * ``ShardCache`` — per-tier ``[slots_t, n_tier, ...]`` device arrays per
   field with per-tier LRU eviction over client shards.  ``capacity_clients``
   guarantees any request of that many distinct clients fits regardless of
@@ -59,16 +63,46 @@ from __future__ import annotations
 from bisect import bisect_left
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sampling import ClientPopulation
-from repro.data.federated import (FederatedDataset, minibatch_indices,
-                                  validate_client_data)
+from repro.data.federated import (CorpusSchemaError, FederatedDataset,
+                                  check_shard, minibatch_indices,
+                                  shard_schema, validate_client_data)
 from repro.sharding import rules as sharding_rules
+
+
+@runtime_checkable
+class ShardProvider(Protocol):
+    """Capability: a corpus whose client shards are synthesized or loaded
+    ON DEMAND, never all materialized in host RAM.
+
+    ``StreamingFederatedDataset`` caps K at host memory when built from a
+    materialized ``data`` list; a provider instead *declares* the corpus
+    shape up front (``counts``: [K] n_k, ``fields``: {name: (tail_shape,
+    dtype)}) and produces one client's shard only when the ``ShardCache``
+    first misses on it.  ``shard(client_id)`` must be a pure function of
+    ``client_id`` (key any synthesis RNG by ``(provider seed, client_id)``)
+    so a re-fetch after eviction — or after a resume — returns the SAME
+    rows, which is what keeps provider-backed trajectories bit-reproducible.
+    Each fetched shard is validated against the declared schema
+    (``CorpusSchemaError`` naming the client on any mismatch).
+    """
+
+    @property
+    def n_clients(self) -> int: ...
+
+    @property
+    def counts(self) -> np.ndarray: ...        # [K] n_k, int
+
+    @property
+    def fields(self) -> Dict[str, tuple]: ...  # {name: (tail_shape, dtype)}
+
+    def shard(self, client_id: int) -> Dict[str, np.ndarray]: ...
 
 
 def next_pow2(n: int) -> int:
@@ -126,33 +160,82 @@ class TierLayout:
 
 
 class StreamingFederatedDataset:
-    """Host-resident per-client shards + the packing metadata for caching.
+    """Host shards (materialized OR provider-backed) + packing metadata.
 
-    ``data``: list over clients of dicts of arrays (first axis = samples),
-    exactly the ``FederatedDataset`` layout; per-field dtypes preserved.
+    Two construction paths, one declared schema:
+
+    * ``data``: list over clients of dicts of arrays (first axis = samples),
+      exactly the ``FederatedDataset`` layout; per-field dtypes preserved.
+      Every client is validated against client 0's schema up front
+      (``CorpusSchemaError`` naming the divergent client — this used to
+      silently trust client 0 and crash later at upload time).
+    * ``provider``: a lazy ``ShardProvider`` — ``counts``/``fields`` come
+      from the provider's DECLARATION, and a client's rows are synthesized
+      or loaded only on the first ``ShardCache`` miss (validated against
+      the declaration on every fetch).  This is what lets Zipf corpora with
+      millions of clients run under the streaming plane: host RAM holds
+      [K] metadata, never K shards.
+
     ``seed`` keys the minibatch draws like every other plane.
     """
 
-    def __init__(self, data: List[Dict[str, np.ndarray]], seed: int = 0):
-        counts = validate_client_data(data)
+    def __init__(self, data: Optional[List[Dict[str, np.ndarray]]] = None,
+                 seed: int = 0, provider: Optional[ShardProvider] = None):
+        if (data is None) == (provider is None):
+            raise ValueError(
+                "StreamingFederatedDataset takes exactly one of data= (a "
+                "materialized per-client shard list) or provider= (a lazy "
+                "ShardProvider)")
+        if provider is not None:
+            if not isinstance(provider, ShardProvider):
+                raise TypeError(
+                    f"provider must implement the ShardProvider protocol "
+                    f"(n_clients, counts, fields, shard(client_id)); "
+                    f"{type(provider).__name__} does not")
+            counts = np.asarray(provider.counts, np.int64)
+            if counts.ndim != 1 or len(counts) != provider.n_clients \
+                    or len(counts) == 0:
+                raise CorpusSchemaError(
+                    f"provider declares n_clients={provider.n_clients} but "
+                    f"counts has shape {counts.shape}: want a non-empty "
+                    f"[K] vector")
+            if (counts < 1).any():
+                bad = int(np.argmin(counts))
+                raise CorpusSchemaError(
+                    f"provider declares n_k = {int(counts[bad])} for client "
+                    f"{bad}: every client needs n_k >= 1 (the keyed "
+                    f"minibatch draw is undefined on an empty span)",
+                    client=bad)
+            fields = {name: (tuple(tail), np.dtype(dt))
+                      for name, (tail, dt) in sorted(provider.fields.items())}
+            if not fields:
+                raise CorpusSchemaError("provider declares no fields")
+        else:
+            counts = validate_client_data(data)
+            fields = {name: schema for name, schema
+                      in sorted(shard_schema(data[0]).items())}
         self.data = data
-        self.counts = counts
+        self.provider = provider
+        self.counts = np.asarray(counts, np.int32)
         self.seed = seed
-        self.n_max = int(counts.max())
-        self.fields = {
-            name: (np.asarray(data[0][name]).shape[1:],
-                   np.asarray(data[0][name]).dtype)
-            for name in sorted(data[0])
-        }
+        self.n_max = int(self.counts.max())
+        self.fields = fields
 
     @classmethod
     def from_federated(cls, ds: FederatedDataset) -> "StreamingFederatedDataset":
         return cls(ds.data, seed=ds.seed)
 
+    @classmethod
+    def from_provider(cls, provider: ShardProvider,
+                      seed: int = 0) -> "StreamingFederatedDataset":
+        """Lazy corpus over a ``ShardProvider`` declaration (see class
+        docstring); ``seed`` keys the minibatch draws."""
+        return cls(provider=provider, seed=seed)
+
     # -- inspection -----------------------------------------------------
     @property
     def n_clients(self) -> int:
-        return len(self.data)
+        return len(self.counts)
 
     @property
     def row_nbytes(self) -> int:
@@ -205,13 +288,48 @@ class StreamingFederatedDataset:
     def base_key(self):
         return jax.random.PRNGKey(self.seed)
 
+    def shard(self, cid: int) -> Dict[str, np.ndarray]:
+        """Client ``cid``'s raw (unpadded) shard.
+
+        Materialized path: a host-list lookup.  Provider path: ONE
+        ``provider.shard(cid)`` call — potentially expensive synthesis or
+        I/O — validated against the declared schema AND the declared
+        ``counts[cid]`` before any device upload sees it (a provider that
+        drifts from its declaration raises ``CorpusSchemaError`` naming the
+        client, not a downstream scatter-shape crash)."""
+        if self.provider is None:
+            return self.data[cid]
+        shard = self.provider.shard(int(cid))
+        check_shard(shard, self.fields, int(cid),
+                    n_k=int(self.counts[cid]), source="provider shard for")
+        return shard
+
+    def padded_client(self, cid: int,
+                      rows: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """All of client ``cid``'s fields padded to [rows, ...] (host) from
+        ONE ``shard()`` fetch; ``rows`` defaults to the global n_max, a
+        tier passes its own size.  The cache fill path uses this so a
+        provider synthesizes each missing client exactly once per miss,
+        not once per field."""
+        shard = self.shard(cid)
+        n_rows = self.n_max if rows is None else rows
+        out = {}
+        for name, (tail, dtype) in self.fields.items():
+            arr = np.asarray(shard[name])
+            padded = np.zeros((n_rows,) + tail, dtype)
+            padded[: len(arr)] = arr
+            out[name] = padded
+        return out
+
     def padded_shard(self, cid: int, name: str,
                      rows: Optional[int] = None) -> np.ndarray:
         """Client ``cid``'s field ``name`` padded to [rows, ...] (host);
-        ``rows`` defaults to the global n_max, a tier passes its own size."""
+        ``rows`` defaults to the global n_max, a tier passes its own size.
+        Prefer ``padded_client`` when touching several fields of one
+        client — this re-fetches the shard per call."""
         tail, dtype = self.fields[name]
         out = np.zeros((self.n_max if rows is None else rows,) + tail, dtype)
-        arr = np.asarray(self.data[cid][name])
+        arr = np.asarray(self.shard(cid)[name])
         out[: len(arr)] = arr
         return out
 
@@ -499,10 +617,12 @@ class ShardCache:
             idx = jnp.asarray(np.asarray(assigned, np.int32))
             rows = self.layout.sizes[tier]
             arrs = self.tier_arrays[tier]
+            # one shard fetch per fresh client (a lazy provider synthesizes
+            # each missing client exactly once, not once per field)
+            shards = [self.dataset.padded_client(cid, rows=rows)
+                      for cid in fresh]
             for name in arrs:
-                stacked = np.stack(
-                    [self.dataset.padded_shard(cid, name, rows=rows)
-                     for cid in fresh])
+                stacked = np.stack([s[name] for s in shards])
                 arrs[name] = arrs[name].at[idx].set(self._put(stacked))
         for cid in seq:             # refresh recency in LAST-use order
             lru = self._lru[int(self._tier_of[cid])]

@@ -45,6 +45,7 @@ from typing import Any, Optional, Union
 from repro.core.sampling import DeviceSampleable, KeyedReplayable
 from repro.data.device import DeviceFederatedDataset
 from repro.data.stream import ShardCache, StreamingFederatedDataset
+from repro.scenario.spec import ScenarioSpec
 
 PLANES = ("per_round", "scanned", "device", "streaming")
 _PLANE_ALIASES = {"per-round": "per_round", "python-loop": "per_round"}
@@ -127,6 +128,13 @@ class ExecutionPlan:
     overhead at resolve time (amortize it to ~``_AUTO_CHUNK_TARGET_S`` per
     round, clamped to [8, 256] and to ``n_rounds``); the chosen size is
     audited on the ``PlanDecision``.
+
+    ``scenario`` declares simulated production-FL conditions
+    (``repro.scenario.ScenarioSpec``: mid-round dropouts, round-deadline
+    stragglers, availability schedules, adaptive cohort sizing) — compiled
+    by the driver into eq. (3) partial-work step masks, identically on
+    every plane.  ``None`` (and a spec with no models) is bit-equal to no
+    scenario at all.
     """
     plane: str = "auto"
     chunk_rounds: Union[int, str] = 25
@@ -136,6 +144,7 @@ class ExecutionPlan:
     ckpt: Optional[CkptSpec] = None
     memory_budget_bytes: Optional[int] = None
     local_batch: Optional[int] = None
+    scenario: Optional[ScenarioSpec] = None
 
     def __post_init__(self):
         plane = _PLANE_ALIASES.get(self.plane, self.plane)
@@ -180,6 +189,11 @@ class ExecutionPlan:
             raise PlanError(
                 f"ckpt.every must be >= 0, got {self.ckpt.every}",
                 plane=plane)
+        if self.scenario is not None \
+                and not isinstance(self.scenario, ScenarioSpec):
+            raise PlanError(
+                f"scenario must be a repro.scenario.ScenarioSpec, got "
+                f"{type(self.scenario).__name__}", plane=plane)
 
 
 def as_plan(plan: Union[None, str, ExecutionPlan]) -> ExecutionPlan:
@@ -220,6 +234,7 @@ class PlanDecision:
     chunk_rounds: Optional[int] = None        # the CONCRETE size run() uses
     dispatch_overhead_s: Optional[float] = None   # set when it was measured
     bucketed: bool = False
+    scenario: bool = False
 
     def record(self) -> dict:
         rec = {"event": "plan", "plane": self.plane, "auto": self.auto,
@@ -234,6 +249,8 @@ class PlanDecision:
                 float(self.dispatch_overhead_s), 9)
         if self.bucketed:
             rec["bucketed"] = True
+        if self.scenario:
+            rec["scenario"] = True
         return rec
 
 
@@ -392,6 +409,29 @@ def resolve(plan: ExecutionPlan, trainer, n_rounds: int) -> PlanDecision:
                 f"{trainer.rcfg.placement!r}", plane="streaming")
         decision.bucketed = True
         decision.reason += "; tier-bucketed dispatch"
+    if plan.scenario is not None and not plan.scenario.null:
+        # scenario masks are staged on host per round's COHORT, so the
+        # fused planes (which draw cohorts inside the compiled scan) need
+        # the host replay of the keyed draw to know who round t sampled.
+        # The streaming plane already demands KeyedReplayable; the device
+        # plane only demands DeviceSampleable, so gate it here.
+        if decision.plane == "device" \
+                and not isinstance(trainer.sampler, KeyedReplayable):
+            raise PlanError(
+                f"a scenario on the device plane needs the sampler "
+                f"capability KeyedReplayable (the host replay of the keyed "
+                f"cohort draw is what the scenario masks are staged "
+                f"against) but {type(trainer.sampler).__name__} does not "
+                f"provide it; nearest viable plane: 'scanned'",
+                plane="device", missing="KeyedReplayable",
+                nearest="scanned")
+        decision.scenario = True
+        parts = [type(m).__name__ for m in plan.scenario.models]
+        if plan.scenario.availability is not None:
+            parts.append(type(plan.scenario.availability).__name__)
+        if plan.scenario.cohort is not None:
+            parts.append("AdaptiveCohort")
+        decision.reason += f"; scenario active ({', '.join(parts)})"
     return decision
 
 

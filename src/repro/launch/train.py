@@ -88,6 +88,7 @@ from repro.data.federated import FederatedDataset, minibatch_indices
 from repro.data.stream import ShardCache, StreamingFederatedDataset
 from repro.launch.plan import (CacheSpec, CkptSpec, ExecutionPlan, PlanError,
                                TrainSession, _IdKey, as_plan, resolve)
+from repro.scenario.spec import ScenarioRuntime
 
 
 def _cache_counters(cache: Optional[ShardCache]):
@@ -106,6 +107,31 @@ def _cache_stats(before, cache: Optional[ShardCache]):
             "cache_misses": cache.misses - before[1],
             "cache_evictions": cache.evictions - before[2],
             "cache_hit_rate": round(cache.hit_rate, 6)}
+
+
+def _eval_spans(t0: int, n_rounds: int, chunk_rounds: int,
+                eval_every: Optional[int] = None) -> list:
+    """Chunk spans ``[s, e)`` of at most ``chunk_rounds`` rounds, shared by
+    every chunked plane.  Chunked planes eval at chunk ends (the
+    ``_seal_chunk`` hook sees the state right after round ``e - 1``), so an
+    ``EvalSpec`` cadence FINER than the chunk size is honored by adding a
+    boundary at every eval round: a span ends early at ``e`` whenever round
+    ``e - 1`` is an eval round (``(e - 1) % eval_every == 0`` — the same
+    rounds the per-round plane evals).  ``eval_every=None`` (no eval_fn)
+    keeps the uniform chunking: sub-chunking costs one compiled chunk shape
+    per distinct length, pointless without an eval to run."""
+    spans = []
+    s = t0
+    while s < n_rounds:
+        e = min(s + chunk_rounds, n_rounds)
+        if eval_every:
+            # earliest eval round at or after s → desired end t_ev + 1
+            t_ev = -(-s // eval_every) * eval_every
+            if t_ev + 1 < e:
+                e = t_ev + 1
+        spans.append((s, e))
+        s = e
+    return spans
 
 
 # eager host replay of the keyed minibatch draws for a whole chunk at once:
@@ -156,6 +182,9 @@ class FederatedTrainer:
         self.local_batch = int(self.local_batch)
         if self.session is None:
             self.session = TrainSession()
+        # the active ScenarioRuntime, scoped to one run() call (set when the
+        # resolved plan carries a non-null ScenarioSpec, cleared after)
+        self._scenario: Optional[ScenarioRuntime] = None
 
     # ------------------------------------------------------------------
     # jitted engines (lazily built, cached on the session so a fresh
@@ -265,12 +294,25 @@ class FederatedTrainer:
                     < h_k[:, None]).astype(np.float32)
         return lr_t, mask
 
+    def _scenario_mask(self, t: int, client_ids, mask):
+        """Fold the active scenario's completed-step caps for round ``t``'s
+        cohort into the (possibly None) hetero mask — both are prefix
+        masks, so elementwise min composes them.  The engine sees one
+        ``step_mask`` either way: eq. (3) partial-work weighting does not
+        care whether a client stopped early by configuration (H_k) or by
+        simulated fate (dropout/straggler/availability)."""
+        if self._scenario is None:
+            return mask
+        sm = self._scenario.masks_for(t, np.asarray(client_ids))
+        return sm if mask is None else np.minimum(mask, sm)
+
     def _round_inputs(self, t: int):
         """Sample S_t and assemble its [C, H, b, ...] batches + knobs."""
         idx, weights = self.sampler.sample(t)
         batches = self.dataset.round_batches(
             idx, self.rcfg.local_steps, self.local_batch, t=t)
         lr_t, mask = self._round_knobs(t)
+        mask = self._scenario_mask(t, idx, mask)
         return batches, np.asarray(weights, np.float32), lr_t, mask
 
     def _assemble_chunk(self, t_lo: int, t_hi: int):
@@ -287,10 +329,18 @@ class FederatedTrainer:
         return (batches, np.stack(ws), np.asarray(lrs, np.float32), masks)
 
     def _chunk_knobs(self, t_lo: int, t_hi: int):
-        """[R] lrs + optional [R, C, H] masks for the device data plane."""
+        """[R] lrs + optional [R, C, H] masks for the device data plane.
+
+        With an active scenario the cohort ids matter (scenario fates are
+        keyed per client), so each round's in-scan draw is replayed on host
+        (``KeyedReplayable``, gated at plan resolution) — the same replay
+        the streaming prefetch already relies on."""
         lrs, ms = [], []
         for t in range(t_lo, t_hi):
             lr_t, m = self._round_knobs(t)
+            if self._scenario is not None:
+                idx, _ = self.sampler.sample(t)
+                m = self._scenario_mask(t, idx, m)
             lrs.append(lr_t)
             ms.append(m)
         masks = None if ms[0] is None else np.stack(ms)
@@ -308,7 +358,7 @@ class FederatedTrainer:
         share one code path.  The metrics jsonl is rewound to the restored
         round so the re-run rounds are never double-logged."""
         if not resume:
-            return 0
+            return self._scenario_start(0)
         if not self.ckpt_path:
             raise ValueError("resume=True needs ckpt_path")
         if not isinstance(self.sampler, KeyedReplayable):
@@ -320,11 +370,22 @@ class FederatedTrainer:
                 "client sets", missing="KeyedReplayable")
         t_ck = latest_round(self.ckpt_path)
         if t_ck < 0:
-            return 0
+            return self._scenario_start(0)
         self.state, _ = restore_state(self.ckpt_path, self.state)
         if self.metrics_path:
             prune_metrics(self.metrics_path, t_ck)
-        return t_ck + 1
+        return self._scenario_start(t_ck + 1)
+
+    def _scenario_start(self, t0: int) -> int:
+        """Prime the scenario runtime for a run starting at ``t0``: an
+        adaptive-cohort scenario replays rounds [0, t0) on host to rebuild
+        its completion-rate EMA (pure keyed hashing — resume stays bit-equal
+        to uninterrupted; t0 > 0 implies resume, whose gate already
+        guarantees the KeyedReplayable replay this needs).  Stateless
+        scenarios need no history."""
+        if self._scenario is not None:
+            self._scenario.warmup(t0, self.sampler)
+        return t0
 
     @contextlib.contextmanager
     def _writer(self):
@@ -359,8 +420,10 @@ class FederatedTrainer:
         to) trains the same model bit for bit.  A plan's ``local_batch`` /
         ``ckpt`` overrides are scoped to THIS call: the trainer's own
         fields are restored afterwards, so a one-off plan never leaks into
-        later runs.  ``log_every`` overrides ``plan.eval.cadence`` for the
-        per-round plane (chunked planes eval and log at chunk boundaries).
+        later runs.  ``log_every`` overrides ``plan.eval.cadence``; with an
+        ``eval_fn``, chunked planes split their scan chunks at eval rounds
+        (see ``_eval_spans``) so a cadence finer than ``chunk_rounds`` is
+        honored exactly, same rounds as the per-round plane.
         ``resume=True`` continues from the latest durable checkpoint.  Auto
         resolutions are appended to the history and metrics jsonl as
         ``{"event": "plan", ...}`` records.
@@ -377,6 +440,9 @@ class FederatedTrainer:
         try:
             self._check_client_extent()
             decision = resolve(plan, self, n_rounds)
+            self._scenario = (
+                ScenarioRuntime(plan.scenario, self.rcfg.local_steps)
+                if decision.scenario else None)
             self.session.plan_log.append(decision.record())
             if decision.auto:
                 rec = decision.record()
@@ -394,20 +460,22 @@ class FederatedTrainer:
             # chunked planes take the RESOLVED chunk size — a literal plan
             # value, or the measured-overhead auto pick (see plan.resolve)
             chunk_rounds = decision.chunk_rounds
+            eval_every = cadence if eval_fn is not None else None
             if decision.plane == "scanned":
                 return self._run_scanned(n_rounds, chunk_rounds,
                                          int(plan.prefetch), eval_fn,
-                                         verbose, resume)
+                                         eval_every, verbose, resume)
             if decision.plane == "device":
                 return self._run_device(n_rounds, chunk_rounds,
-                                        eval_fn, verbose, resume)
+                                        eval_fn, eval_every, verbose, resume)
             return self._run_streaming(n_rounds, chunk_rounds,
                                        plan.cache.clients, plan.cache.bytes,
                                        plan.cache.tiers, decision.bucketed,
                                        bool(plan.prefetch), eval_fn,
-                                       verbose, resume)
+                                       eval_every, verbose, resume)
         finally:
             self.local_batch, self.ckpt_path, self.ckpt_every = saved
+            self._scenario = None
 
     # ------------------------------------------------------------------
     # plane: per_round — one dispatch per round
@@ -430,6 +498,8 @@ class FederatedTrainer:
                         jnp.float32(lr_t), jnp.asarray(mask))
                 rec = {"round": t, "loss": float(metrics["loss"]),
                        "delta_norm": float(metrics["delta_norm"])}
+                if self._scenario is not None:
+                    rec["completed"] = int(metrics["completed"])
                 if eval_fn is not None and (t % log_every == 0
                                             or t == n_rounds - 1):
                     rec.update(eval_fn(self.state))
@@ -450,10 +520,10 @@ class FederatedTrainer:
     # plane: scanned — chunked lax.scan with host prefetch
     # ------------------------------------------------------------------
     def _run_scanned(self, n_rounds: int, chunk_rounds: int, prefetch: int,
-                     eval_fn, verbose: bool, resume: bool):
+                     eval_fn, eval_every: Optional[int], verbose: bool,
+                     resume: bool):
         t0 = self._resume_round(resume)
-        spans = [(s, min(s + chunk_rounds, n_rounds))
-                 for s in range(t0, n_rounds, chunk_rounds)]
+        spans = _eval_spans(t0, n_rounds, chunk_rounds, eval_every)
         q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
         failure: list = []
         stop = threading.Event()
@@ -521,11 +591,10 @@ class FederatedTrainer:
                 else jax.random.PRNGKey(self.sampler.seed))
 
     def _run_device(self, n_rounds: int, chunk_rounds: int, eval_fn,
-                    verbose: bool, resume: bool):
+                    eval_every: Optional[int], verbose: bool, resume: bool):
         t0 = self._resume_round(resume)
         dds = self.device_dataset()
-        spans = [(s, min(s + chunk_rounds, n_rounds))
-                 for s in range(t0, n_rounds, chunk_rounds)]
+        spans = _eval_spans(t0, n_rounds, chunk_rounds, eval_every)
         return self._run_fused_chunks(
             spans, n_rounds, dds, dds.base_key(), prepare=None, upload=None,
             prefetch=True, eval_fn=eval_fn, verbose=verbose)
@@ -550,7 +619,7 @@ class FederatedTrainer:
                        cache_clients: Optional[int],
                        cache_bytes: Optional[int],
                        cache_tiers: Optional[int], bucketed: bool,
-                       prefetch: bool, eval_fn,
+                       prefetch: bool, eval_fn, eval_every: Optional[int],
                        verbose: bool, resume: bool):
         t0 = self._resume_round(resume)
         sds = self.streaming_dataset()
@@ -558,8 +627,7 @@ class FederatedTrainer:
             cache_clients = self.rcfg.clients_per_round * chunk_rounds
         cache = self.session.shard_cache_for(sds, cache_clients, cache_bytes,
                                              cache_tiers)
-        spans = [(s, min(s + chunk_rounds, n_rounds))
-                 for s in range(t0, n_rounds, chunk_rounds)]
+        spans = _eval_spans(t0, n_rounds, chunk_rounds, eval_every)
         if bucketed:
             return self._run_streaming_bucketed(spans, n_rounds, sds, cache,
                                                 prefetch, eval_fn, verbose)
@@ -620,6 +688,7 @@ class FederatedTrainer:
             idx = np.asarray(idx)
             participants.extend(int(c) for c in idx)
             lr_t, mask = self._round_knobs(t)
+            mask = self._scenario_mask(t, idx, mask)
             lrs.append(lr_t)
             by_tier: dict = {}
             for j, cid in enumerate(idx):
@@ -644,7 +713,8 @@ class FederatedTrainer:
             for tier, js in bt.items():
                 pad_cid.setdefault(tier, int(idx[js[0]]))
         H = self.rcfg.local_steps
-        masked = self.hetero_steps_fn is not None
+        masked = (self.hetero_steps_fn is not None
+                  or self._scenario is not None)
         need = H * self.local_batch
         idx_all = None
         if self.client_step_fn is None:
@@ -915,6 +985,10 @@ class FederatedTrainer:
         recs = [{"round": t, "loss": float(losses[i]),
                  "delta_norm": float(dnorms[i])}
                 for i, t in enumerate(range(s, e))]
+        if self._scenario is not None and "completed" in metrics:
+            done = np.asarray(metrics["completed"])
+            for i, rec in enumerate(recs):
+                rec["completed"] = int(done[i])
         if ev is not None:
             recs[-1].update(ev)
         if cstats is not None:

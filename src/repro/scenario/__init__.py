@@ -1,0 +1,31 @@
+"""Client-lifecycle scenario engine: simulate production FL conditions —
+mid-round dropouts, round-deadline stragglers, availability schedules,
+adaptive cohort sizing — on top of the paper's eq. (3) partial-work
+aggregation, uniformly across every execution plane.  Declared as
+``ScenarioSpec`` on an ``ExecutionPlan``; see ``repro.scenario.spec``.
+"""
+from repro.scenario.availability import (  # noqa: F401
+    AvailabilityModel,
+    ConstantAvailability,
+    DiurnalAvailability,
+    MinAvailability,
+    ScenarioSampler,
+)
+from repro.scenario.lifecycle import (  # noqa: F401
+    LatencyStragglers,
+    LifecycleModel,
+    PerClientDropout,
+    UniformDropout,
+    keyed_normals,
+    keyed_uniforms,
+)
+from repro.scenario.providers import (  # noqa: F401
+    ZipfLinregProvider,
+    zipf_counts,
+    zipf_linreg_provider,
+)
+from repro.scenario.spec import (  # noqa: F401
+    AdaptiveCohort,
+    ScenarioRuntime,
+    ScenarioSpec,
+)

@@ -1,0 +1,169 @@
+"""Client availability schedules: how many devices CAN participate at t.
+
+``DiurnalSampler`` hard-codes one schedule (a sinusoidal M(t)); production
+fleets compose several — daily cycles per timezone, weekly cycles, charging
+windows, a flat floor of always-on devices (Bonawitz et al. 2019 §4).
+``AvailabilityModel`` is the composable generalization: a host ``m_at(t)``
+(the scenario runtime masks cohort slots past it) plus a traceable
+``m_device(t)`` twin and a ``peak`` bound the engine lowers its client
+extent for.  Availability is always applied as a WEIGHT/STEP mask over a
+``peak``-sized cohort, never a shape: XLA plane signatures stay static
+while M(t) swings.
+
+``ScenarioSampler`` packages any model as a ``KeyedReplayable`` sampler
+(the capability the fused planes and the streaming prefetch demand), which
+is exactly ``DeviceDiurnalSampler`` generalized to arbitrary schedules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.sampling import (ClientPopulation, _DeviceReplayMixin,
+                                 diurnal_m_device, diurnal_m_host)
+
+
+@runtime_checkable
+class AvailabilityModel(Protocol):
+    """Capability: a time-varying available-device count M(t).
+
+    ``m_at(t)`` is the host truth (the scenario runtime uses it to mask
+    cohort slots); ``m_device(t)`` must be traceable with ``t`` a tracer
+    and agree with ``m_at`` (up to the documented float32 rounding caveat
+    of the diurnal schedule); ``peak`` bounds ``m_at`` over all t — it is
+    the client extent the engine lowers for.
+    """
+
+    @property
+    def peak(self) -> int: ...
+
+    def m_at(self, t: int) -> int: ...
+
+    def m_device(self, t): ...
+
+
+@dataclass(frozen=True)
+class ConstantAvailability:
+    """A flat fleet: M(t) = m."""
+    m: int
+
+    def __post_init__(self):
+        if self.m < 1:
+            raise ValueError(f"m must be >= 1, got {self.m!r}")
+
+    @property
+    def peak(self) -> int:
+        return self.m
+
+    def m_at(self, t: int) -> int:
+        return self.m
+
+    def m_device(self, t):
+        import jax.numpy as jnp
+
+        return jnp.int32(self.m)
+
+
+@dataclass(frozen=True)
+class DiurnalAvailability:
+    """The sinusoidal daily cycle ``DiurnalSampler`` hard-coded, as a
+    composable model — identical numerics (shared ``diurnal_m_*`` helpers
+    in ``core.sampling``), so a scenario built from this schedule matches a
+    ``DeviceDiurnalSampler`` run round for round."""
+    m_min: int
+    m_max: int
+    period: int = 1000
+
+    def __post_init__(self):
+        if not 1 <= self.m_min <= self.m_max:
+            raise ValueError(
+                f"need 1 <= m_min <= m_max, got ({self.m_min}, {self.m_max})")
+        if self.period < 1:
+            raise ValueError(f"period must be >= 1, got {self.period!r}")
+
+    @property
+    def peak(self) -> int:
+        return self.m_max
+
+    def m_at(self, t: int) -> int:
+        return diurnal_m_host(t, self.m_min, self.m_max, self.period)
+
+    def m_device(self, t):
+        return diurnal_m_device(t, self.m_min, self.m_max, self.period)
+
+
+@dataclass(frozen=True)
+class MinAvailability:
+    """Composition by elementwise min: available devices must satisfy EVERY
+    constituent constraint (e.g. the diurnal cycle AND a weekly dip AND a
+    hard fleet cap).  ``peak`` is the min of the parts' peaks — a bound,
+    tight whenever the parts peak at a common t."""
+    models: Tuple[AvailabilityModel, ...]
+
+    def __post_init__(self):
+        if not self.models:
+            raise ValueError("MinAvailability needs at least one model")
+
+    @property
+    def peak(self) -> int:
+        return min(m.peak for m in self.models)
+
+    def m_at(self, t: int) -> int:
+        return min(m.m_at(t) for m in self.models)
+
+    def m_device(self, t):
+        import jax.numpy as jnp
+
+        out = self.models[0].m_device(t)
+        for m in self.models[1:]:
+            out = jnp.minimum(out, m.m_device(t))
+        return out
+
+
+@dataclass
+class ScenarioSampler(_DeviceReplayMixin):
+    """Any ``AvailabilityModel`` as a ``KeyedReplayable`` cohort sampler.
+
+    The engine is lowered for ``peak`` client slots; round t draws a keyed
+    device-side permutation (exactly ``DeviceUniformSampler``'s draw) and
+    zero-weights the slots past ``M(t)`` — ``DeviceDiurnalSampler``
+    generalized to arbitrary schedules.  Host ``sample`` replays the device
+    draw bit-for-bit (the ``_DeviceReplayMixin`` contract), so the fused
+    planes, the streaming prefetch (``participants_in_span``), and
+    ``resume=True`` all work unchanged.
+    """
+    population: ClientPopulation
+    availability: AvailabilityModel
+    seed: int = 0
+
+    def __post_init__(self):
+        if not isinstance(self.availability, AvailabilityModel):
+            raise TypeError(
+                f"availability must implement AvailabilityModel (peak, "
+                f"m_at, m_device); {type(self.availability).__name__} "
+                f"does not")
+        if self.availability.peak > self.population.n_clients:
+            raise ValueError(
+                f"availability peaks at {self.availability.peak} devices "
+                f"but the population has {self.population.n_clients} "
+                f"clients")
+
+    @property
+    def lowered_clients(self) -> int:
+        """Padded client extent C (= the schedule's peak; inactive slots
+        carry zero weight)."""
+        return self.availability.peak
+
+    def sample_device(self, key, t):
+        import jax
+        import jax.numpy as jnp
+
+        kt = jax.random.fold_in(key, t)
+        idx = jax.random.permutation(
+            kt, self.population.n_clients)[: self.availability.peak]
+        m_t = self.availability.m_device(t)
+        w = jnp.asarray(self.population.weights, jnp.float32)[idx]
+        w = jnp.where(jnp.arange(self.availability.peak) < m_t, w, 0.0)
+        return idx, w

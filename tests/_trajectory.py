@@ -124,9 +124,9 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
 
     ``driver`` is a DRIVERS/AUTO_DRIVERS name or ``"streaming-uniform"``
     (the tiers=1 cache layout); extra ``cache_clients`` / ``cache_bytes`` /
-    ``cache_tiers`` / ``memory_budget_bytes`` kwargs land on the
-    ``ExecutionPlan``, the rest (``resume``, ``eval_fn``) pass through to
-    ``run``.  Returns the trajectory records (audit events stripped).
+    ``cache_tiers`` / ``memory_budget_bytes`` / ``scenario`` kwargs land on
+    the ``ExecutionPlan``, the rest (``resume``, ``eval_fn``) pass through
+    to ``run``.  Returns the trajectory records (audit events stripped).
     """
     if driver not in _PLANE_OF:
         raise ValueError(
@@ -140,7 +140,8 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
                       bucketed=kw.pop("cache_bucketed",
                                       driver == "streaming-bucketed"))
     budget = kw.pop("memory_budget_bytes", None)
-    if LEGACY_SHIMS and driver in DRIVERS:
+    scenario = kw.pop("scenario", None)
+    if LEGACY_SHIMS and driver in DRIVERS and scenario is None:
         # streaming-uniform has no legacy shim (run_streaming predates the
         # tiers knob) — it always routes through the plan API below
         hist = _run_legacy_shim(tr, driver, n_rounds, chunk_rounds,
@@ -149,7 +150,8 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
                                    if driver == "streaming" else {}), **kw)
         return strip_events(hist)
     plan = ExecutionPlan(plane=_PLANE_OF[driver], chunk_rounds=chunk_rounds,
-                         cache=cache, memory_budget_bytes=budget)
+                         cache=cache, memory_budget_bytes=budget,
+                         scenario=scenario)
     return strip_events(tr.run(n_rounds, plan=plan, verbose=False, **kw))
 
 
