@@ -38,6 +38,15 @@ cache smaller than the corpus, so the streaming lane actually streams).
 snapshot — the per-PR perf record (``BENCH_<pr>.json``, committed; CI
 regenerates and fails the lane when the snapshot is missing or the
 bucketed lane regresses to slower-than-padded).
+
+Secure-aggregation lane: plain fp32 reduction vs open uint32 ring vs
+masked pairwise transport (``ExecutionPlan(secure=SecureAggSpec(...))``)
+on the scanned plane — the masked-vs-open ms/round overhead at equal
+trajectory (equal meaning BIT-equal: the lane asserts zero drift between
+masked and open final params, the ring-cancellation guarantee):
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --secure \
+        [--rounds 60] [--m 8] [--smoke] [--emit-bench BENCH_8.json]
 """
 from __future__ import annotations
 
@@ -467,10 +476,89 @@ def bench_tiered_cache(args):
           f"{drift:.2e}")
 
 
+def bench_secure(argv):
+    """Plain fp32 vs open-ring vs masked secure aggregation, ms/round at
+    equal trajectory on the scanned plane.
+
+    The three lanes train the same keyed trajectory; only step 4's
+    reduction differs.  ``open`` is the fixed-point ring with no masks
+    (the certification reference), ``masked`` adds the [C, C, ...]
+    pairwise PRG grid — the full transport simulation.  The lane asserts
+    masked == open BIT-equal (drift exactly 0.0 bits — the ring
+    cancellation guarantee, not a tolerance) and plain-vs-ring within
+    quantization tolerance; returns/emits the snapshot with the
+    masked-over-open overhead, the per-PR BENCH_8.json record."""
+    import numpy as np
+
+    import jax
+
+    from repro.core.secure_agg import SecureAggSpec
+    from repro.launch.plan import ExecutionPlan
+
+    args = _lane_args(argv, "--secure", smoke=True)
+    if args.smoke:
+        args.model, args.rounds, args.chunk_rounds = "linreg", 12, 4
+    specs = {"plain": None,
+             "open": SecureAggSpec(masked=False, seed=0),
+             "masked": SecureAggSpec(masked=True, seed=0)}
+
+    def lane(spec):
+        plan = ExecutionPlan(plane="scanned",
+                             chunk_rounds=args.chunk_rounds, secure=spec)
+        return lambda tr, n: tr.run(n, plan=plan, verbose=False)
+
+    ms, final, trainers = _time_lanes(
+        args, {name: lane(spec) for name, spec in specs.items()})
+
+    def wflat(tr):
+        return np.concatenate([np.ravel(np.asarray(x))
+                               for x in jax.tree.leaves(tr.state.w)])
+
+    # masked == open is the guarantee this whole PR certifies: exact ring
+    # cancellation, zero drift in BITS, not "close"
+    drift_bits = int((wflat(trainers["masked"])
+                      != wflat(trainers["open"])).sum())
+    assert drift_bits == 0, \
+        f"masked diverged from open ring in {drift_bits} params"
+    quant_drift = float(abs(final["plain"] - final["open"]))
+    assert quant_drift < 1e-3, \
+        f"ring quantization drift too large: {quant_drift}"
+    overhead = ms["masked"] / ms["open"]
+    ring_overhead = ms["open"] / ms["plain"]
+    print(f"  masked transport costs {overhead:.2f}x the open ring "
+          f"({(ms['masked'] - ms['open']) * 1e3:.3f} ms/round for the "
+          f"[C, C, ...] pair grid at M={args.m}); ring-vs-plain "
+          f"{ring_overhead:.2f}x, quantization drift {quant_drift:.2e}, "
+          f"masked-vs-open drift {drift_bits} bits")
+    snap = {
+        "bench": "secure_masked_vs_open",
+        "config": {"model": args.model, "rounds": args.rounds,
+                   "chunk_rounds": args.chunk_rounds, "m": args.m,
+                   "local_steps": args.local_steps,
+                   "frac_bits": specs["masked"].frac_bits,
+                   "smoke": bool(getattr(args, "smoke", False))},
+        "plain_ms_per_round": round(ms["plain"] * 1e3, 4),
+        "open_ms_per_round": round(ms["open"] * 1e3, 4),
+        "masked_ms_per_round": round(ms["masked"] * 1e3, 4),
+        "masked_overhead_x": round(overhead, 4),
+        "ring_overhead_x": round(ring_overhead, 4),
+        "masked_open_drift_bits": drift_bits,
+        "quantization_drift": quant_drift,
+    }
+    if getattr(args, "emit_bench", None):
+        with open(args.emit_bench, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"  bench snapshot -> {args.emit_bench}")
+    return snap
+
+
 if __name__ == "__main__":
     if "--drivers" in sys.argv[1:]:
         bench_drivers(sys.argv[1:])
     elif "--data-plane" in sys.argv[1:]:
         bench_data_plane(sys.argv[1:])
+    elif "--secure" in sys.argv[1:]:
+        bench_secure(sys.argv[1:])
     else:
         main(sys.argv[1:] or ["results/hillclimb.jsonl"])

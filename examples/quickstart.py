@@ -33,7 +33,9 @@ import numpy as np
 from repro.core import (
     DeviceUniformSampler,
     RoundConfig,
+    SecureAggSpec,
     UniformSampler,
+    dp,
     fedavg,
     fedmom,
 )
@@ -94,7 +96,22 @@ bit-reproducible — every fate is keyed by (seed, tag, round, client)):
 Scenario runs log a per-round "completed" metric (clients that finished
 any work).  The dropout sweep benchmark: benchmarks/fig6_robustness.py
 --scenario --emit-bench BENCH_7.json (eq. (3) keeps FedMom's final loss
-stable as the dropout rate climbs)."""
+stable as the dropout rate climbs).
+
+privacy (--secure-agg / --dp-clip / --dp-noise): --secure-agg runs the
+round's aggregation through the compiled uint32-ring pairwise-masking
+layer (repro.core.SecureAggSpec) — the server only materializes masked
+per-client messages and their dropout-recovered sum, and the masked
+trajectory is BIT-equal to the open one (masks cancel exactly in the
+ring; --secure-frac-bits sets the fixed-point precision).  Composes
+with every plane and with the scenario dropouts above.  --dp-clip C
+[--dp-noise Z] additionally wraps the server optimizer in central DP:
+the aggregate is clipped to L2 norm C and seeded Gaussian noise of
+stddev C*Z is added before the update (DP-FedAvg / DP-FedMom; noise is
+a pure function of (seed, round), so DP runs stay plane-independent
+and resumable).  Overhead record: benchmarks/perf_compare.py --secure
+--emit-bench BENCH_8.json (masked-vs-open ms/round at equal — bit-equal
+— trajectory; CI re-checks a smoke run)."""
 
 
 def main():
@@ -155,6 +172,20 @@ def main():
                     help="train a lazily-synthesized Zipf linreg fleet of "
                          "K clients via a ShardProvider (streaming plane) "
                          "instead of materialized FEMNIST")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="aggregate under compiled secure aggregation "
+                         "(uint32-ring pairwise masks; bit-equal to the "
+                         "open plane)")
+    ap.add_argument("--secure-frac-bits", type=int, default=20,
+                    help="fixed-point fractional bits for the masking "
+                         "ring (values exact on a 2^-frac_bits grid)")
+    ap.add_argument("--dp-clip", type=float, default=None, metavar="C",
+                    help="central DP: clip the aggregate to L2 norm C "
+                         "before the server update (DP-FedAvg/DP-FedMom)")
+    ap.add_argument("--dp-noise", type=float, default=0.0, metavar="Z",
+                    help="central DP noise multiplier: Gaussian stddev "
+                         "C*Z added to the clipped aggregate (needs "
+                         "--dp-clip; seeded per round)")
     args = ap.parse_args()
 
     plane = args.plan or ("streaming" if args.stream_data or args.provider
@@ -173,11 +204,15 @@ def main():
             cohort=(AdaptiveCohort(goal=args.adaptive_cohort)
                     if args.adaptive_cohort is not None else None),
             seed=args.scenario_seed)
+    secure = (SecureAggSpec(masked=True, seed=0,
+                            frac_bits=args.secure_frac_bits)
+              if args.secure_agg else None)
     plan = ExecutionPlan(plane=plane, chunk_rounds=args.chunk_rounds,
                          cache=CacheSpec(clients=args.cache_clients,
                                          tiers=args.cache_tiers,
                                          bucketed=args.bucketed),
-                         memory_budget_bytes=budget, scenario=scenario)
+                         memory_budget_bytes=budget, scenario=scenario,
+                         secure=secure)
 
     if args.provider:
         provider = zipf_linreg_provider(args.provider, dim=16, n_min=4,
@@ -240,10 +275,25 @@ def main():
                  f"cohort->{args.adaptive_cohort}"
                  if args.adaptive_cohort is not None else None]
         scen_tag = f" [scenario: {', '.join(p for p in parts if p)}]"
-    for name, opt in [("FedAvg (eta=K/M)", fedavg(eta=K / M)),
+    priv = []
+    if args.secure_agg:
+        priv.append(f"secure-agg frac_bits={args.secure_frac_bits}")
+    if args.dp_clip is not None:
+        priv.append(f"dp clip={args.dp_clip} noise={args.dp_noise}")
+    if priv:
+        scen_tag += f" [{', '.join(priv)}]"
+
+    def privatize(opt):
+        if args.dp_clip is None:
+            return opt
+        return dp(opt, clip=args.dp_clip,
+                  noise_multiplier=args.dp_noise, seed=0)
+
+    for name, opt in [("FedAvg (eta=K/M)", privatize(fedavg(eta=K / M))),
                       ("FedMom (eta=K/M, beta=0.9)",
-                       fedmom(eta=K / M, beta=0.9,
-                              use_fused_kernel=args.fused_server))]:
+                       privatize(fedmom(eta=K / M, beta=0.9,
+                                        use_fused_kernel=args.fused_server))
+                       )]:
         print(f"\n=== {name} [plan={plan.plane}]"
               f"{' [hetero H_k]' if args.hetero else ''}{scen_tag} ===")
         # the per-round plane works with the paper's stateful sampler; the

@@ -21,9 +21,18 @@ from repro.core.sampling import (  # noqa: F401
     UniformSampler,
     participants_in_span,
 )
+from repro.core.secure_agg import (  # noqa: F401
+    EmptyCohortError,
+    SecureAggSpec,
+    aggregate_masked,
+    mask_client_updates,
+)
 from repro.core.server_opt import (  # noqa: F401
     ServerOpt,
     ServerState,
+    dp,
+    dp_fedavg,
+    dp_fedmom,
     fedadam,
     fedavg,
     fedavgm,

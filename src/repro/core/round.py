@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import client as client_lib
+from repro.core import secure_agg
+from repro.core.secure_agg import SecureAggSpec
 from repro.core.server_opt import ServerOpt, ServerState
 from repro.optim import local as local_opt_lib
 from repro.sharding import shard_tree, spmd_client_axes
@@ -42,6 +44,42 @@ class RoundConfig:
     local_opt_kwargs: tuple = ()
     delta_dtype: str = "float32"    # bfloat16 variant = memory hillclimb
     compute_dtype: str = "bfloat16"
+    # secure aggregation: when set, step 4's reduction runs through the
+    # uint32-ring masking layer (core/secure_agg.py) — the server only ever
+    # materializes the masked per-client messages and their (recovered)
+    # sum.  Frozen + hashable, so it keys the jit caches like every other
+    # RoundConfig field.  mesh placement only: the pairwise-mask grid is
+    # [C, C, ...] per leaf, which the scan placement exists to avoid
+    # (FSDP replicas too big for even a [C, ...] stack).
+    secure: Optional[SecureAggSpec] = None
+
+
+def _weighted_delta_stack(w_c, final, weights):
+    """[C, ...] per-client weighted deltas ``(n_k/n)(w_t - w^k)`` in fp32
+    — what a client would transmit (under masking) instead of the server
+    reducing them itself."""
+    C = weights.shape[0]
+    return jax.tree.map(
+        lambda w0, wk: weights.reshape((C,) + (1,) * w0.ndim)
+        * (w0[None] - wk).astype(jnp.float32),
+        w_c, final)
+
+
+def _survivors(step_mask):
+    """A client with zero unmasked local steps never reported its update
+    (dropout) — its masked message is absent and its pairwise terms need
+    recovery."""
+    return None if step_mask is None else jnp.sum(step_mask, axis=1) > 0
+
+
+def _secure_delta(spec, w_c, final, weights, step_mask, t, ddt):
+    """Step 4 under secure aggregation: per-client weighted deltas in fp32
+    (matching the open path's product precision), then the masked ring
+    transport + dropout recovery, decoded and cast to the delta dtype."""
+    y = _weighted_delta_stack(w_c, final, weights)
+    return jax.tree.map(
+        lambda d: d.astype(ddt),
+        secure_agg.secure_weighted_sum(y, _survivors(step_mask), spec, t))
 
 
 def _cast_tree(tree, dtype):
@@ -69,6 +107,12 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
     Returns (new_state, metrics).
     """
     C = weights.shape[0]
+    if rcfg.secure is not None and rcfg.placement != "mesh":
+        raise ValueError(
+            "secure aggregation needs placement='mesh' (got "
+            f"{rcfg.placement!r}): the pairwise-mask grid is [C, C, ...] "
+            "per leaf, and scan placement exists for FSDP replicas that "
+            "cannot even hold the [C, ...] cohort stack")
     opt = local_opt_lib.get(rcfg.local_opt, **dict(rcfg.local_opt_kwargs))
     lr = jnp.asarray(rcfg.lr if lr is None else lr, jnp.float32)
     w_c = _cast_tree(state.w, jnp.dtype(rcfg.compute_dtype))
@@ -96,11 +140,15 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
         # reduction leaks weight mass under skewed n_k; only the final result
         # is rounded to ddt, so the bf16 delta is the correctly-rounded fp32
         # reduction
-        delta = jax.tree.map(
-            lambda w0, wk: jnp.einsum(
-                "c,c...->...", weights, w0[None] - wk,
-                preferred_element_type=jnp.float32).astype(ddt),
-            w_c, final)
+        if rcfg.secure is not None:
+            delta = _secure_delta(rcfg.secure, w_c, final, weights,
+                                  step_mask, state.t, ddt)
+        else:
+            delta = jax.tree.map(
+                lambda w0, wk: jnp.einsum(
+                    "c,c...->...", weights, w0[None] - wk,
+                    preferred_element_type=jnp.float32).astype(ddt),
+                w_c, final)
     elif rcfg.placement == "scan":
         if param_axes is not None:
             # scan placement promises FSDP-sharded params: constrain the
@@ -181,9 +229,13 @@ def bucketed_round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
     Reduction-order caveat: the delta is accumulated tier-by-tier (each tier
     one fp32 einsum) instead of a single cohort-order einsum, so multi-tier
     results are tolerance-equal to the padded path (fp32 reassociation),
-    while a single occupied tier is bit-equal.  Returns (new_state, metrics)
-    with the same keys as ``round_step`` minus the per-client ``losses``
-    stream (its width varies per tier).
+    while a single occupied tier is bit-equal.  Under ``rcfg.secure`` the
+    caveat DISAPPEARS: each tier is masked as its own sub-cohort (round key
+    folded with the tier index) and the per-tier ring totals accumulate
+    with exact, order-independent uint32 ring addition, decoded once — so
+    multi-tier secure dispatch is bit-equal to the padded secure path.
+    Returns (new_state, metrics) with the same keys as ``round_step`` minus
+    the per-client ``losses`` stream (its width varies per tier).
     """
     if rcfg.placement != "mesh":
         raise ValueError(
@@ -213,25 +265,44 @@ def bucketed_round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
         return final, losses
 
     update = tier_update_fn or run_tier
-    acc = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), w_c)
+    secure = rcfg.secure
+    if secure is not None:
+        acc = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.uint32), w_c)
+        round_key = (secure_agg.round_mask_key(secure, state.t)
+                     if secure.masked else None)
+    else:
+        acc = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), w_c)
     loss_num = jnp.zeros((), jnp.float32)
     loss_den = jnp.zeros((), jnp.float32)
     completed = jnp.zeros((), jnp.int32)
     for i, (data, weights) in enumerate(zip(tier_data, tier_weights)):
         mask = None if tier_masks is None else tier_masks[i]
         final, losses = update(w_c, i, data, mask)
-        acc = jax.tree.map(
-            lambda d, w0, wk: d + jnp.einsum(
-                "c,c...->...", weights, w0[None] - wk,
-                preferred_element_type=jnp.float32),
-            acc, w_c, final)
+        if secure is not None:
+            tier_key = (jax.random.fold_in(round_key, i)
+                        if secure.masked else None)
+            y = _weighted_delta_stack(w_c, final, weights)
+            ring = secure_agg.masked_ring_sum(
+                y, _survivors(mask), secure, tier_key)
+            acc = jax.tree.map(lambda a, r: a + r, acc, ring)
+        else:
+            acc = jax.tree.map(
+                lambda d, w0, wk: d + jnp.einsum(
+                    "c,c...->...", weights, w0[None] - wk,
+                    preferred_element_type=jnp.float32),
+                acc, w_c, final)
         eff_w = weights
         if mask is not None:
             eff_w = weights * (jnp.sum(mask, axis=1) > 0)
         loss_num = loss_num + jnp.sum(eff_w * losses)
         loss_den = loss_den + jnp.sum(eff_w)
         completed = completed + jnp.sum(eff_w > 0).astype(jnp.int32)
-    delta = jax.tree.map(lambda d: d.astype(ddt), acc)
+    if secure is not None:
+        delta = jax.tree.map(
+            lambda d: d.astype(ddt), secure_agg.decode(acc, secure))
+    else:
+        delta = jax.tree.map(lambda d: d.astype(ddt), acc)
     new_state = server_opt.update(state, delta)
     metrics = {
         "loss": loss_num / jnp.maximum(loss_den, 1e-12),

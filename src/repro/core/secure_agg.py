@@ -1,52 +1,322 @@
-"""Secure-aggregation-shaped masking (Bonawitz et al. 2017, simulation).
+"""Compiled secure aggregation: fixed-point pairwise masking that cancels
+bit-exactly (Bonawitz et al. 2017, simulation).
 
 In production federated learning the server may only see the *sum* of
-client updates, achieved by pairwise additive masks that cancel in the
-aggregate.  The optimizer-facing property — aggregation receives
-sum_k a_k (w_t - w^k) and nothing per-client — is exactly what the round
-engine's delta computation consumes, so secure aggregation slots in as a
-transformation of the per-client deltas *before* the weighted sum.
+client updates.  The classic construction blinds every client's update
+with pairwise additive masks that cancel in the aggregate: clients i < j
+agree (via a key exchange this simulation replaces with a shared PRG root
+key) on a mask m_ij, client i sends y_i + m_ij, client j sends y_j - m_ij,
+and the server's sum is unchanged while every individual message is
+uniformly random.  The optimizer-facing property — aggregation receives
+``sum_k a_k (w_t - w^k)`` and nothing per-client — is exactly what the
+round engine's delta computation consumes, so secure aggregation slots in
+as a transformation of the per-client weighted deltas *before* the sum
+(``core/round.py`` threads it via ``RoundConfig.secure``; the user-facing
+knob is ``ExecutionPlan(secure=SecureAggSpec(...))``).
 
-This module implements the masking algebra (deterministic pairwise PRG
-masks that cancel) to demonstrate and test the API shape; real crypto
-(key agreement, dropout recovery) is out of scope and noted in DESIGN.md.
+Modular-masking algebra
+-----------------------
+Floating-point masks do NOT cancel exactly (fp addition is not associative
+and huge masks absorb small updates), which is why the pre-rewrite module
+needed ``atol=1e-4`` tests.  This implementation masks in the **uint32
+ring Z_{2^32}** instead:
+
+1. *Encode*: each weighted per-client delta leaf is quantized to fixed
+   point, ``q = round(y * 2^frac_bits) mod 2^32`` (two's-complement wrap
+   for negatives).  Exact as long as the *aggregate* magnitude stays below
+   ``2^(31 - frac_bits)`` — the ``SecureAggSpec.frac_bits`` budget.
+2. *Mask*: for the canonical pair key ``k_ij = fold_in(fold_in(fold_in(
+   PRNGKey(seed), t), min(i,j)), max(i,j))`` the PRG mask is
+   ``m_ij = random_bits(k_ij)`` (uint32).  Client i adds ``+m_ij`` for
+   every j > i and ``-m_ij`` (ring negation) for every j < i.  The whole
+   pair grid is one batched ``jax.random.fold_in`` key matrix + a signed
+   segment-sum over the partner axis — a single jitted transformation of
+   the ``[C, ...]`` cohort stack, no Python loops.
+3. *Aggregate*: the server ring-sums the masked vectors.  Ring addition is
+   associative, commutative and exact, so each ``+m_ij / -m_ij`` pair
+   cancels **bit-exactly** and the decoded sum equals the decoded sum of
+   the unmasked encodings, bit for bit — the masked plane is certifiably
+   bit-equal to the open plane (``tests/test_secure_agg.py`` asserts
+   ``==``, not ``allclose``).
+
+Dropout-recovery protocol
+-------------------------
+A client that drops mid-round never reports, but the survivors' messages
+still carry their shared masks with it.  Real deployments reconstruct the
+dropped clients' pair masks from secret shares; here the server (which
+owns the PRG root in this simulation) recomputes them: with survivor set
+``S``, the masked sum over ``S`` equals ``sum_{i in S} q_i  +
+sum_{i in S, j not in S} sign(i,j) m_ij``, and ``unmask_sum`` subtracts
+exactly that second term — "unmask the survivors' pairwise terms".  The
+recovered sum is bit-equal to the open sum over survivors, which the
+round engine composes with ``repro.scenario`` dropout models: a client
+whose scenario ``step_mask`` is all-zero is treated as never having
+reported.
+
+The blinding is information-theoretic per message given fresh masks; what
+stays simulation-grade is the key story (one shared root key in place of
+per-pair Diffie–Hellman + Shamir shares for recovery).  See the secure
+aggregation section of ``ROADMAP.md`` (open item 3, shipped in PR 8) for
+where this sits in the system; the old docstring's ``DESIGN.md`` never
+existed in this repo.
+
+Memory note: the pair-mask grid is ``[C, C, ...]`` per leaf — O(C^2) like
+the protocol itself.  C here is the *cohort* (clients_per_round), not the
+population, so this stays small; the batched form exists so the whole
+transformation lives inside the compiled round (`round_step`) on every
+execution plane.
 """
 from __future__ import annotations
 
-from typing import Any, List
+from dataclasses import dataclass
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 
-
-def _pair_mask(key_ij: jax.Array, like: Any) -> Any:
-    leaves, treedef = jax.tree.flatten(like)
-    keys = jax.random.split(key_ij, len(leaves))
-    masked = [jax.random.normal(k, x.shape, jnp.float32)
-              for k, x in zip(keys, leaves)]
-    return treedef.unflatten(masked)
+_RING_DTYPE = jnp.uint32
 
 
+class EmptyCohortError(ValueError):
+    """Aggregation over zero reporting clients.
+
+    Raised (naming the round when known) instead of the pre-rewrite
+    ``masked[0]`` IndexError: a fully-dropped round under scenario
+    dropout models is a legitimate runtime state the caller must be able
+    to catch — or avoid entirely by passing ``like=`` for a zeros-like
+    delta (the eq. (3) semantics of "nobody moved").
+    """
+
+    def __init__(self, round: Optional[int] = None):
+        self.round = round
+        where = f" in round {round}" if round is not None else ""
+        super().__init__(
+            f"secure aggregation received an empty cohort{where}: no "
+            f"client reported an update (e.g. every sampled client "
+            f"dropped).  Pass like=<param tree> to aggregate_masked for "
+            f"a zeros-like delta instead of this error.")
+
+
+@dataclass(frozen=True)
+class SecureAggSpec:
+    """Declarative secure-aggregation config (hashable — rides on
+    ``RoundConfig``/``ExecutionPlan`` and keys the jit caches).
+
+    ``masked=True`` is the real protocol (pairwise PRG masks + dropout
+    recovery); ``masked=False`` is the *open ring* reference: identical
+    fixed-point encode/aggregate/decode with no masks, the plane the
+    masked one is certified bit-equal against.  ``seed`` roots the mask
+    PRG (folded with the round index, so every round's masks are fresh);
+    ``frac_bits`` sets the fixed-point precision — values are exact
+    multiples of ``2^-frac_bits`` and the aggregate must stay below
+    ``2^(31 - frac_bits)`` in magnitude or the ring wraps (a loud
+    trajectory divergence, not silent corruption, since every plane wraps
+    identically)."""
+    masked: bool = True
+    seed: int = 0
+    frac_bits: int = 20
+
+    def __post_init__(self):
+        if not isinstance(self.masked, bool):
+            raise ValueError(f"masked must be a bool, got {self.masked!r}")
+        if not isinstance(self.frac_bits, int) \
+                or not 1 <= self.frac_bits <= 30:
+            raise ValueError(
+                f"frac_bits must be an int in [1, 30] (uint32 ring), got "
+                f"{self.frac_bits!r}")
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+
+_DEFAULT_SPEC = SecureAggSpec()
+
+
+# ---------------------------------------------------------------------------
+# fixed-point ring codec
+# ---------------------------------------------------------------------------
+def encode(tree: Any, spec: SecureAggSpec = _DEFAULT_SPEC) -> Any:
+    """fp tree -> uint32-ring tree: round-to-nearest fixed point,
+    two's-complement wrap for negatives (int32 cast then reinterpret)."""
+    def enc(x):
+        r = jnp.round(x.astype(jnp.float32) * spec.scale)
+        return r.astype(jnp.int32).astype(_RING_DTYPE)
+    return jax.tree.map(enc, tree)
+
+
+def decode(tree: Any, spec: SecureAggSpec = _DEFAULT_SPEC) -> Any:
+    """uint32-ring tree -> fp32 tree (inverse of ``encode`` up to the
+    fixed-point grid)."""
+    def dec(q):
+        return q.astype(jnp.int32).astype(jnp.float32) / spec.scale
+    return jax.tree.map(dec, tree)
+
+
+# ---------------------------------------------------------------------------
+# the batched pairwise mask grid
+# ---------------------------------------------------------------------------
+def _round_key(spec: SecureAggSpec, t) -> jax.Array:
+    """Per-round mask root: fresh masks every round, identical on every
+    execution plane (``t`` is the carried ``ServerState.t``)."""
+    return jax.random.fold_in(jax.random.PRNGKey(spec.seed), t)
+
+
+def _signed_masks(key: jax.Array, C: int, leaf: jax.Array) -> jax.Array:
+    """[C, C, *leaf.shape] uint32: entry [i, j] is ``sign(i,j) * m_ij``
+    with the canonical pair key (min, max) — the term client i adds for
+    partner j.  Antisymmetric in the ring (row i and row j carry exact
+    negations), zero on the diagonal.  One batched fold_in key matrix +
+    bits draw; no Python pair loops."""
+    idx = jnp.arange(C, dtype=jnp.uint32)
+    lo = jnp.minimum(idx[:, None], idx[None, :])
+    hi = jnp.maximum(idx[:, None], idx[None, :])
+
+    def pair_bits(lo_ij, hi_ij):
+        kij = jax.random.fold_in(jax.random.fold_in(key, lo_ij), hi_ij)
+        return jax.random.bits(kij, leaf.shape, _RING_DTYPE)
+
+    m = jax.vmap(jax.vmap(pair_bits))(lo, hi)         # [C, C, ...]
+    shape = (C, C) + (1,) * leaf.ndim
+    i_lt_j = (idx[:, None] < idx[None, :]).reshape(shape)
+    i_eq_j = (idx[:, None] == idx[None, :]).reshape(shape)
+    signed = jnp.where(i_lt_j, m, jnp.zeros_like(m) - m)   # ring negation
+    return jnp.where(i_eq_j, jnp.zeros_like(m), signed)
+
+
+def mask_cohort(key: jax.Array, y: Any,
+                spec: SecureAggSpec = _DEFAULT_SPEC) -> Any:
+    """Encode the ``[C, ...]`` cohort stack of weighted updates into the
+    ring and (when ``spec.masked``) blind each row with its pairwise mask
+    sum ``sum_j sign(i,j) m_ij`` — what each client would transmit."""
+    q = encode(y, spec)
+    if not spec.masked:
+        return q
+    C = jax.tree.leaves(q)[0].shape[0]
+    return jax.tree.map(
+        lambda ql: ql + jnp.sum(_signed_masks(key, C, ql[0]), axis=1), q)
+
+
+def ring_survivor_sum(key: Optional[jax.Array], masked: Any,
+                      survivors: Optional[jax.Array] = None,
+                      spec: SecureAggSpec = _DEFAULT_SPEC) -> Any:
+    """Server-side ring reduction WITHOUT the final decode: sum the
+    reporting rows of the masked ``[C, ...]`` stack and run dropout
+    recovery for absent partners, returning the uint32-ring total.
+
+    The bucketed round engine accumulates per-tier ring totals with plain
+    ring addition and decodes once at the end — decoding per tier and
+    adding in fp32 would re-round each partial (int32 magnitudes exceed
+    the fp32 mantissa) and break bit-equality with the padded path.
+
+    ``survivors``: optional [C] bool/0-1 — rows that actually reported
+    (``None`` = everyone).  With masks and any dropouts, ``key`` (the same
+    per-round root the cohort was masked with) is required to reconstruct
+    the survivors' pairwise terms with the dropped: the recovery subtracts
+    ``sum_{i in S, j not in S} sign(i,j) m_ij`` so the result is bit-equal
+    to the open ring sum over survivors."""
+    if survivors is None:
+        return jax.tree.map(lambda ql: jnp.sum(ql, axis=0), masked)
+    s = survivors.astype(_RING_DTYPE)
+    C = jax.tree.leaves(masked)[0].shape[0]
+
+    def leaf_sum(ql):
+        sb = s.reshape((C,) + (1,) * (ql.ndim - 1))
+        total = jnp.sum(sb * ql, axis=0)
+        if spec.masked:
+            if key is None:
+                raise ValueError(
+                    "ring_survivor_sum with dropouts needs the per-round "
+                    "mask key to recover the survivors' pairwise terms")
+            grid = _signed_masks(key, C, ql[0])
+            pair = (s[:, None] * (jnp.uint32(1) - s[None, :])).reshape(
+                (C, C) + (1,) * (ql.ndim - 1))
+            total = total - jnp.sum(pair * grid, axis=(0, 1))
+        return total
+
+    return jax.tree.map(leaf_sum, masked)
+
+
+def unmask_sum(key: Optional[jax.Array], masked: Any,
+               survivors: Optional[jax.Array] = None,
+               spec: SecureAggSpec = _DEFAULT_SPEC) -> Any:
+    """``ring_survivor_sum`` + decode: the fp32 aggregate the server opt
+    consumes (see ``ring_survivor_sum`` for the recovery semantics)."""
+    return decode(ring_survivor_sum(key, masked, survivors, spec), spec)
+
+
+def masked_ring_sum(y: Any, survivors: Optional[jax.Array],
+                    spec: SecureAggSpec,
+                    key: Optional[jax.Array]) -> Any:
+    """fp ``[C, ...]`` stack -> encode -> (mask) -> ring survivor sum,
+    still in the ring.  The bucketed engine calls this per tier (each tier
+    a sub-cohort under its own fold of the round key) and ring-adds the
+    totals — exact, order-independent, so multi-tier dispatch is bit-equal
+    to the padded cohort."""
+    masked = mask_cohort(key, y, spec) if spec.masked else encode(y, spec)
+    return ring_survivor_sum(key, masked, survivors, spec)
+
+
+def round_mask_key(spec: SecureAggSpec, t) -> jax.Array:
+    """Public alias of the per-round mask root (``fold_in(PRNGKey(seed),
+    t)``) — the round engine derives per-tier sub-cohort keys from it."""
+    return _round_key(spec, t)
+
+
+def secure_weighted_sum(y: Any, survivors: Optional[jax.Array],
+                        spec: SecureAggSpec, t) -> Any:
+    """One jitted round-engine transformation: weighted per-client deltas
+    ``y`` ([C, ...] fp stack) -> masked ring transport -> survivor sum +
+    dropout recovery -> decoded fp32 aggregate.  This is what
+    ``round_step`` calls in place of its fp32 einsum reduction when
+    ``rcfg.secure`` is set; the mask root is keyed by ``(spec.seed, t)``
+    so every plane derives identical masks for round ``t``."""
+    key = _round_key(spec, t) if spec.masked else None
+    return decode(masked_ring_sum(y, survivors, spec, key), spec)
+
+
+# ---------------------------------------------------------------------------
+# list-shaped protocol API (what a per-client transport would carry)
+# ---------------------------------------------------------------------------
 def mask_client_updates(root_key: jax.Array, updates: List[Any],
-                        weights: jax.Array) -> List[Any]:
-    """Adds pairwise-cancelling masks to the *weighted* per-client updates:
-    client i adds +m_ij for j>i and -m_ij for j<i, so the sum over the
-    cohort is unchanged while each individual update is blinded."""
-    n = len(updates)
-    masked = [jax.tree.map(lambda x: weights[i] * x.astype(jnp.float32),
-                           updates[i]) for i in range(n)]
-    for i in range(n):
-        for j in range(i + 1, n):
-            kij = jax.random.fold_in(jax.random.fold_in(root_key, i), j)
-            m = _pair_mask(kij, updates[i])
-            masked[i] = jax.tree.map(lambda a, b: a + b, masked[i], m)
-            masked[j] = jax.tree.map(lambda a, b: a - b, masked[j], m)
-    return masked
+                        weights: jax.Array,
+                        spec: SecureAggSpec = _DEFAULT_SPEC) -> List[Any]:
+    """Weight + encode + blind the per-client updates: returns the list of
+    uint32-ring trees the clients would transmit (uniformly random per
+    message when ``spec.masked``; the *weighted, quantized* update when
+    not).  The pairwise masks cancel bit-exactly in ``aggregate_masked``.
+    """
+    if not updates:
+        return []
+    y = jax.tree.map(
+        lambda *xs: jnp.stack(
+            [weights[i] * x.astype(jnp.float32) for i, x in enumerate(xs)]),
+        *updates)
+    masked = mask_cohort(root_key, y, spec) if spec.masked \
+        else encode(y, spec)
+    C = len(updates)
+    return [jax.tree.map(lambda ql: ql[i], masked) for i in range(C)]
 
 
-def aggregate_masked(masked: List[Any]) -> Any:
-    """The only thing the server may compute: the sum."""
-    out = masked[0]
-    for m in masked[1:]:
-        out = jax.tree.map(lambda a, b: a + b, out, m)
-    return out
+def aggregate_masked(masked: List[Any], *,
+                     spec: SecureAggSpec = _DEFAULT_SPEC,
+                     key: Optional[jax.Array] = None,
+                     survivors: Optional[jax.Array] = None,
+                     like: Optional[Any] = None,
+                     round: Optional[int] = None) -> Any:
+    """The only thing the server may compute: the (ring) sum, decoded.
+
+    An empty cohort — every sampled client dropped, which scenario
+    dropout models can legitimately produce — returns a zeros-like fp32
+    delta when ``like`` (any tree with the update structure) is given,
+    and raises a structured ``EmptyCohortError`` naming ``round``
+    otherwise; it never IndexErrors.  A single-client cohort has no pairs
+    and aggregates to that client's own weighted update exactly.
+    ``survivors``/``key``: see ``unmask_sum`` (dropout recovery)."""
+    if not masked:
+        if like is not None:
+            return jax.tree.map(
+                lambda x: jnp.zeros(jnp.shape(x), jnp.float32), like)
+        raise EmptyCohortError(round)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *masked)
+    return unmask_sum(key, stacked, survivors, spec)

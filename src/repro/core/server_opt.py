@@ -187,6 +187,66 @@ def fedlamom(eta: float = 1.0, beta: float = 0.9) -> ServerOpt:
     return ServerOpt("fedlamom", init_extra, apply)
 
 
+# ---------------------------------------------------------------------------
+# central differential privacy: clip + seeded Gaussian noise on delta_t
+# ---------------------------------------------------------------------------
+def dp(inner: ServerOpt, clip: float = 1.0,
+       noise_multiplier: float = 0.0, seed: int = 0) -> ServerOpt:
+    """Central-DP wrapper: before ``inner`` consumes the aggregate, clip
+    delta_t to global L2 norm ``clip`` and add per-coordinate Gaussian
+    noise N(0, (clip * noise_multiplier)^2).
+
+    The noise is a pure function of ``(seed, t)`` — key
+    ``fold_in(PRNGKey(seed), t)``, folded once more per tree leaf — so a
+    DP trajectory is plane-independent and resumable exactly like the
+    noiseless ones (the trajectory tests assert seeded-noise equivalence
+    across all execution planes, not approximate statistics).
+
+    Trust-model note: this is *central* DP (the Gaussian mechanism applied
+    to the aggregate), the composition that makes sense with secure
+    aggregation — the server never sees individual updates, so per-client
+    clipping (local-DP FedAvg à la McMahan et al. 2018) is not available
+    to it; the clip here bounds the whole round's sensitivity instead.
+    """
+    if clip <= 0:
+        raise ValueError(f"dp clip must be > 0, got {clip!r}")
+    if noise_multiplier < 0:
+        raise ValueError(
+            f"dp noise_multiplier must be >= 0, got {noise_multiplier!r}")
+
+    def apply(w, extra, delta, t):
+        norm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(d.astype(jnp.float32)))
+            for d in jax.tree.leaves(delta)))
+        factor = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+        clipped = _tmap(lambda d: factor * d.astype(jnp.float32), delta)
+        if noise_multiplier > 0:
+            key_t = jax.random.fold_in(jax.random.PRNGKey(seed), t)
+            sigma = clip * noise_multiplier
+            leaves, treedef = jax.tree.flatten(clipped)
+            noisy = [
+                l + sigma * jax.random.normal(
+                    jax.random.fold_in(key_t, i), l.shape, jnp.float32)
+                for i, l in enumerate(leaves)]
+            clipped = jax.tree.unflatten(treedef, noisy)
+        return inner.apply(w, extra, clipped, t)
+
+    return ServerOpt(f"dp_{inner.name}", inner.init_extra, apply)
+
+
+def dp_fedavg(clip: float = 1.0, noise_multiplier: float = 0.0,
+              dp_seed: int = 0, **inner_kw) -> ServerOpt:
+    """DP-FedAvg: central clip + seeded Gaussian noise around ``fedavg``."""
+    return dp(fedavg(**inner_kw), clip, noise_multiplier, dp_seed)
+
+
+def dp_fedmom(clip: float = 1.0, noise_multiplier: float = 0.0,
+              dp_seed: int = 0, **inner_kw) -> ServerOpt:
+    """DP-FedMom: central clip + seeded Gaussian noise around ``fedmom``
+    (the paper's Nesterov server momentum on a privatized delta_t)."""
+    return dp(fedmom(**inner_kw), clip, noise_multiplier, dp_seed)
+
+
 REGISTRY: Dict[str, Callable[..., ServerOpt]] = {
     "fedavg": fedavg,
     "fedmom": fedmom,
@@ -194,6 +254,8 @@ REGISTRY: Dict[str, Callable[..., ServerOpt]] = {
     "fedadam": fedadam,
     "fedyogi": fedyogi,
     "fedlamom": fedlamom,
+    "dp_fedavg": dp_fedavg,
+    "dp_fedmom": dp_fedmom,
 }
 
 

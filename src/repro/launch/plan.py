@@ -43,6 +43,7 @@ from dataclasses import dataclass, field
 from typing import Any, Optional, Union
 
 from repro.core.sampling import DeviceSampleable, KeyedReplayable
+from repro.core.secure_agg import SecureAggSpec
 from repro.data.device import DeviceFederatedDataset
 from repro.data.stream import ShardCache, StreamingFederatedDataset
 from repro.scenario.spec import ScenarioSpec
@@ -135,6 +136,15 @@ class ExecutionPlan:
     by the driver into eq. (3) partial-work step masks, identically on
     every plane.  ``None`` (and a spec with no models) is bit-equal to no
     scenario at all.
+
+    ``secure`` turns on secure aggregation
+    (``repro.core.SecureAggSpec``): eq. (3)'s reduction runs through the
+    uint32-ring pairwise-masking layer on whichever plane resolves, so the
+    server only materializes masked per-client messages and their
+    (dropout-recovered) sum.  ``SecureAggSpec(masked=False)`` is the open
+    ring reference the masked run is bit-equal to.  Requires
+    ``rcfg.placement == "mesh"``; composes with ``scenario`` dropouts
+    (non-reporting clients' pairwise terms are recovered).
     """
     plane: str = "auto"
     chunk_rounds: Union[int, str] = 25
@@ -145,6 +155,7 @@ class ExecutionPlan:
     memory_budget_bytes: Optional[int] = None
     local_batch: Optional[int] = None
     scenario: Optional[ScenarioSpec] = None
+    secure: Optional[SecureAggSpec] = None
 
     def __post_init__(self):
         plane = _PLANE_ALIASES.get(self.plane, self.plane)
@@ -194,6 +205,11 @@ class ExecutionPlan:
             raise PlanError(
                 f"scenario must be a repro.scenario.ScenarioSpec, got "
                 f"{type(self.scenario).__name__}", plane=plane)
+        if self.secure is not None \
+                and not isinstance(self.secure, SecureAggSpec):
+            raise PlanError(
+                f"secure must be a repro.core.SecureAggSpec, got "
+                f"{type(self.secure).__name__}", plane=plane)
 
 
 def as_plan(plan: Union[None, str, ExecutionPlan]) -> ExecutionPlan:
@@ -235,6 +251,7 @@ class PlanDecision:
     dispatch_overhead_s: Optional[float] = None   # set when it was measured
     bucketed: bool = False
     scenario: bool = False
+    secure: bool = False
 
     def record(self) -> dict:
         rec = {"event": "plan", "plane": self.plane, "auto": self.auto,
@@ -251,6 +268,8 @@ class PlanDecision:
             rec["bucketed"] = True
         if self.scenario:
             rec["scenario"] = True
+        if self.secure:
+            rec["secure"] = True
         return rec
 
 
@@ -432,6 +451,18 @@ def resolve(plan: ExecutionPlan, trainer, n_rounds: int) -> PlanDecision:
         if plan.scenario.cohort is not None:
             parts.append("AdaptiveCohort")
         decision.reason += f"; scenario active ({', '.join(parts)})"
+    if plan.secure is not None:
+        if trainer.rcfg.placement != "mesh":
+            raise PlanError(
+                f"secure aggregation masks the [C, ...] cohort stack with a "
+                f"[C, C, ...] pairwise grid — placement='mesh' only, got "
+                f"rcfg.placement={trainer.rcfg.placement!r}",
+                plane=decision.plane)
+        decision.secure = True
+        decision.reason += (
+            f"; secure aggregation "
+            f"({'masked' if plan.secure.masked else 'open ring'}, "
+            f"frac_bits={plan.secure.frac_bits})")
     return decision
 
 

@@ -64,6 +64,7 @@ convention (``rcfg.clients_per_round`` must equal ``sampler.lowered_clients``).
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import queue
 import threading
 import time
@@ -426,10 +427,14 @@ class FederatedTrainer:
         honored exactly, same rounds as the per-round plane.
         ``resume=True`` continues from the latest durable checkpoint.  Auto
         resolutions are appended to the history and metrics jsonl as
-        ``{"event": "plan", ...}`` records.
+        ``{"event": "plan", ...}`` records.  ``plan.secure`` is scoped the
+        same way as ``local_batch``/``ckpt``: it lands on ``self.rcfg``
+        for this call only (RoundConfig keys the jit caches, so secure and
+        open runs never share a compiled executable).
         """
         plan = as_plan(plan)
-        saved = (self.local_batch, self.ckpt_path, self.ckpt_every)
+        saved = (self.local_batch, self.ckpt_path, self.ckpt_every,
+                 self.rcfg)
         if plan.local_batch is not None:
             self.local_batch = plan.local_batch
         if plan.ckpt is not None:
@@ -437,6 +442,8 @@ class FederatedTrainer:
                 self.ckpt_path = plan.ckpt.path
             if plan.ckpt.every is not None:
                 self.ckpt_every = plan.ckpt.every
+        if plan.secure is not None:
+            self.rcfg = dataclasses.replace(self.rcfg, secure=plan.secure)
         try:
             self._check_client_extent()
             decision = resolve(plan, self, n_rounds)
@@ -474,7 +481,8 @@ class FederatedTrainer:
                                        bool(plan.prefetch), eval_fn,
                                        eval_every, verbose, resume)
         finally:
-            self.local_batch, self.ckpt_path, self.ckpt_every = saved
+            (self.local_batch, self.ckpt_path, self.ckpt_every,
+             self.rcfg) = saved
             self._scenario = None
 
     # ------------------------------------------------------------------

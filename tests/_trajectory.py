@@ -124,9 +124,10 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
 
     ``driver`` is a DRIVERS/AUTO_DRIVERS name or ``"streaming-uniform"``
     (the tiers=1 cache layout); extra ``cache_clients`` / ``cache_bytes`` /
-    ``cache_tiers`` / ``memory_budget_bytes`` / ``scenario`` kwargs land on
-    the ``ExecutionPlan``, the rest (``resume``, ``eval_fn``) pass through
-    to ``run``.  Returns the trajectory records (audit events stripped).
+    ``cache_tiers`` / ``memory_budget_bytes`` / ``scenario`` / ``secure``
+    kwargs land on the ``ExecutionPlan``, the rest (``resume``,
+    ``eval_fn``) pass through to ``run``.  Returns the trajectory records
+    (audit events stripped).
     """
     if driver not in _PLANE_OF:
         raise ValueError(
@@ -141,7 +142,9 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
                                       driver == "streaming-bucketed"))
     budget = kw.pop("memory_budget_bytes", None)
     scenario = kw.pop("scenario", None)
-    if LEGACY_SHIMS and driver in DRIVERS and scenario is None:
+    secure = kw.pop("secure", None)
+    if LEGACY_SHIMS and driver in DRIVERS and scenario is None \
+            and secure is None:
         # streaming-uniform has no legacy shim (run_streaming predates the
         # tiers knob) — it always routes through the plan API below
         hist = _run_legacy_shim(tr, driver, n_rounds, chunk_rounds,
@@ -151,7 +154,7 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
         return strip_events(hist)
     plan = ExecutionPlan(plane=_PLANE_OF[driver], chunk_rounds=chunk_rounds,
                          cache=cache, memory_budget_bytes=budget,
-                         scenario=scenario)
+                         scenario=scenario, secure=secure)
     return strip_events(tr.run(n_rounds, plan=plan, verbose=False, **kw))
 
 
@@ -200,6 +203,22 @@ def assert_same_trajectory(got, want, atol=1e-6):
     for key in ("loss", "delta_norm"):
         np.testing.assert_allclose([r[key] for r in hist_a],
                                    [r[key] for r in hist_b], atol=atol)
+
+
+def assert_bitwise_trajectory(got, want):
+    """Strict variant for the secure-aggregation certifications: final
+    params BIT-equal (``==``, no tolerance) and equal round ids.  The
+    uint32-ring masking guarantee is exact cancellation, so masked-vs-open
+    comparisons must not hide drift behind an atol."""
+    hist_a, state_a = got
+    hist_b, state_b = want
+    hist_a, hist_b = strip_events(hist_a), strip_events(hist_b)
+    wa, wb = flat_w(state_a), flat_w(state_b)
+    np.testing.assert_array_equal(wa, wb)
+    assert [r["round"] for r in hist_a] == [r["round"] for r in hist_b]
+    for key in ("loss", "delta_norm"):
+        np.testing.assert_array_equal([float(r[key]) for r in hist_a],
+                                      [float(r[key]) for r in hist_b])
 
 
 def default_rcfg(clients_per_round=3, local_steps=4, placement="mesh",

@@ -1,0 +1,17 @@
+"""Host-side sampler behavior (repro.core.sampling).
+
+The device-sampler replay/trajectory coverage lives with the plane
+matrices (test_multiround.py etc.); this file holds standalone host
+sampler properties."""
+import numpy as np
+
+from repro.core import ClientPopulation, DiurnalSampler
+
+
+def test_diurnal_sampler_varies_m():
+    pop = ClientPopulation(counts=np.full(100, 10))
+    s = DiurnalSampler(pop, m_min=4, m_max=16, period=100, seed=0)
+    ms = [int((s.sample(t)[1] > 0).sum()) for t in range(100)]
+    assert min(ms) <= 6 and max(ms) >= 14   # swings across the range
+    idx, w = s.sample(0)
+    assert len(idx) == 16                    # lowered for the max extent
