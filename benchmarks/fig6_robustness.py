@@ -16,7 +16,17 @@ move less across the dropout grid than FedAvg's:
     PYTHONPATH=src python -m benchmarks.fig6_robustness --scenario \\
         [--smoke] [--emit-bench BENCH_7.json]
 
-``--smoke`` shrinks to a CI-sized pass (100k clients, fewer rounds);
+Trace lane (``--trace``): the same robustness question on RECORDED reality
+— each dropout cell's synthetic scenario is recorded into a ``FleetTrace``
+(saved and re-loaded from disk) and replayed via
+``ScenarioSpec(trace=TraceSpec(...))`` over a disk-backed, mmap-read
+corpus (``DiskShardProvider``); one cell is certified bit-equal to its
+originating synthetic run (``replay_drift_bits == 0`` in the snapshot):
+
+    PYTHONPATH=src python -m benchmarks.fig6_robustness --trace \\
+        [--smoke] [--emit-bench BENCH_9.json]
+
+``--smoke`` shrinks to a CI-sized pass (smaller corpus, fewer rounds);
 ``--emit-bench PATH`` writes the sweep as the committed per-PR snapshot
 (``BENCH_<pr>.json`` — CI regenerates the smoke shape against it).
 """
@@ -24,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import numpy as np
 
@@ -172,20 +183,168 @@ def _linreg_loss(params, b):
     return jnp.mean(jnp.square(pred - b["y"])), {}
 
 
+def _trace_run(opt, provider, scenario, rounds: int, *, m: int,
+               local_steps: int, chunk_rounds: int, seed: int):
+    """One trace-lane cell: disk-backed streaming run under ``scenario``
+    (a synthetic spec or a trace replay — same code path, same sampler);
+    returns final loss + completion + the flattened final params (for the
+    bit-drift certification)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import DeviceUniformSampler, RoundConfig
+    from repro.data import StreamingFederatedDataset
+    from repro.launch.plan import CacheSpec, ExecutionPlan
+    from repro.launch.train import FederatedTrainer
+
+    ds = StreamingFederatedDataset.from_provider(provider, seed=seed + 7)
+    rcfg = RoundConfig(clients_per_round=m, local_steps=local_steps,
+                       lr=0.05, placement="mesh", compute_dtype="float32")
+    d = provider.fields["x"][0][0]
+    tr = FederatedTrainer(
+        loss_fn=_linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
+        sampler=DeviceUniformSampler(ds.population(), m, seed=seed),
+        state=opt.init({"w": jnp.zeros(d), "b": jnp.zeros(())}),
+        local_batch=4)
+    plan = ExecutionPlan(plane="streaming", chunk_rounds=chunk_rounds,
+                         cache=CacheSpec(clients=m * chunk_rounds),
+                         scenario=scenario)
+    hist = [r for r in tr.run(rounds, plan=plan, verbose=False)
+            if "event" not in r]
+    flat = np.concatenate([np.ravel(np.asarray(x))
+                           for x in jax.tree.leaves(tr.state.w)])
+    return {
+        "final_loss": float(np.mean([r["loss"] for r in hist[-10:]])),
+        "completed_mean": float(np.mean([r["completed"] for r in hist])),
+        "losses": [float(r["loss"]) for r in hist],
+        "flat_w": flat,
+    }
+
+
+def trace_lane(rounds: int = 48, n_clients: int = 50_000,
+               smoke: bool = False, verbose: bool = True) -> dict:
+    """Trace-replay robustness lane (BENCH_9): the dropout sweep re-run on
+    RECORDED reality instead of live rate draws — a synthetic
+    ``ScenarioSpec`` per dropout rate is recorded into a ``FleetTrace``
+    (save/load round-tripped through disk), then FedAvg vs FedMom replay
+    the trace via ``ScenarioSpec(trace=TraceSpec(...))`` over a
+    DISK-BACKED corpus (``write_disk_corpus`` -> mmap ``DiskShardProvider``).
+    One cell is certified bit-equal against its originating synthetic run
+    (``replay_drift_bits`` must be 0).  Returns the BENCH_9 snapshot dict.
+    """
+    import tempfile
+
+    from repro.core import DeviceUniformSampler
+    from repro.data import DiskShardProvider, write_disk_corpus
+    from repro.scenario import (LatencyStragglers, ScenarioSpec,
+                                UniformDropout, zipf_linreg_provider)
+    from repro.traces import FleetTrace, TraceRecorder, TraceSpec
+
+    if smoke:
+        rounds, n_clients = min(rounds, 16), min(n_clients, 5_000)
+    m, local_steps, chunk_rounds, deadline_s = 8, 10, 8, 11.0
+    rates = [0.0, 0.3, 0.6]
+    seed = 6
+    src = zipf_linreg_provider(n_clients, dim=16, n_min=4, n_max=64,
+                               seed=0)
+    tmp = tempfile.mkdtemp(prefix="repro-trace-lane-")
+    corpus = write_disk_corpus(os.path.join(tmp, "corpus"), src,
+                               layout="npy-packed")
+    provider = DiskShardProvider(corpus)
+    disk_mb = sum(os.path.getsize(os.path.join(corpus, f))
+                  for f in os.listdir(corpus)) / 2**20
+    if verbose:
+        print(f"[fig6-trace] disk corpus: {n_clients} clients, "
+              f"{disk_mb:.1f} MB packed (mmap-backed)")
+    eta = n_clients / m
+    out = {"bench": "trace_replay_dropout",
+           "config": {"model": "linreg", "n_clients": n_clients,
+                      "rounds": rounds, "m": m, "local_steps": local_steps,
+                      "chunk_rounds": chunk_rounds,
+                      "deadline_s": deadline_s, "rates": rates,
+                      "smoke": smoke},
+           "corpus": {"layout": "npy-packed",
+                      "disk_mb": round(disk_mb, 2)},
+           "rates": {}}
+    # record one trace per dropout rate — pure host work, then round-trip
+    # each through FleetTrace.save/load so the replayed object is the
+    # deserialized one (persistence is part of what the lane certifies)
+    traces, syn_specs = {}, {}
+    from repro.data import StreamingFederatedDataset
+    pop = StreamingFederatedDataset.from_provider(
+        provider, seed=seed + 7).population()
+    for rate in rates:
+        spec = ScenarioSpec(
+            dropout=UniformDropout(rate=rate) if rate > 0 else None,
+            stragglers=LatencyStragglers(deadline_s=deadline_s,
+                                         mean_step_s=1.0),
+            seed=seed + 11)
+        sampler = DeviceUniformSampler(pop, m, seed=seed)
+        trace = TraceRecorder(spec, local_steps).record(sampler, rounds)
+        path = trace.save(os.path.join(tmp, f"trace_rate{rate}"))
+        traces[rate] = FleetTrace.load(path)
+        syn_specs[rate] = spec
+    out["trace"] = {"rounds": rounds,
+                    "events_per_trace": int(traces[rates[0]].n_events),
+                    "peak_m": int(traces[rates[0]].peak_m)}
+    drift_bits = None
+    for label, opt_fn in (("fedavg", lambda: fedavg(eta=eta)),
+                          ("fedmom", lambda: fedmom(eta=eta, beta=0.9))):
+        finals = []
+        for rate in rates:
+            replay = ScenarioSpec(trace=TraceSpec(trace=traces[rate]))
+            cell = _trace_run(opt_fn(), provider, replay, rounds, m=m,
+                              local_steps=local_steps,
+                              chunk_rounds=chunk_rounds, seed=seed)
+            if label == "fedmom" and rate == rates[1]:
+                # certify: the replayed trajectory is bit-equal to the
+                # originating synthetic run on the same disk corpus
+                syn = _trace_run(opt_fn(), provider, syn_specs[rate],
+                                 rounds, m=m, local_steps=local_steps,
+                                 chunk_rounds=chunk_rounds, seed=seed)
+                drift_bits = int((cell["flat_w"].view(np.uint32)
+                                  != syn["flat_w"].view(np.uint32)).sum())
+                drift_bits += sum(a != b for a, b
+                                  in zip(cell["losses"], syn["losses"]))
+            cell.pop("flat_w")
+            cell.pop("losses")
+            out["rates"].setdefault(str(rate), {})[label] = cell
+            finals.append(cell["final_loss"])
+            if verbose:
+                print(f"[fig6-trace] {label} rate={rate}: "
+                      f"loss={cell['final_loss']:.4f} "
+                      f"completed={cell['completed_mean']:.2f}/{m}")
+        out[label + "_spread"] = float(max(finals) - min(finals))
+    out["replay_drift_bits"] = drift_bits
+    if verbose:
+        print(f"[fig6-trace] final-loss spread under replayed dropout "
+              f"traces: fedavg {out['fedavg_spread']:.4f} vs "
+              f"fedmom {out['fedmom_spread']:.4f}; "
+              f"replay drift {drift_bits} bits (must be 0)")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--scenario", action="store_true",
                     help="run the dropout-sweep scenario lane instead of "
                          "the gamma/H grids")
+    ap.add_argument("--trace", action="store_true",
+                    help="run the trace-replay lane: record each dropout "
+                         "cell's scenario into a FleetTrace and replay it "
+                         "over a disk-backed corpus (BENCH_9)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized scenario pass (100k clients, short run)")
+                    help="CI-sized pass (smaller corpus, short run)")
     ap.add_argument("--emit-bench", metavar="PATH", default=None,
-                    help="write the scenario sweep as a JSON snapshot "
+                    help="write the sweep as a JSON snapshot "
                          "(the committed BENCH_<pr>.json perf record)")
     args = ap.parse_args(argv)
-    if args.scenario or args.emit_bench:
-        snap = scenario_lane(rounds=args.rounds or 60, smoke=args.smoke)
+    if args.trace or args.scenario or args.emit_bench:
+        if args.trace:
+            snap = trace_lane(rounds=args.rounds or 48, smoke=args.smoke)
+        else:
+            snap = scenario_lane(rounds=args.rounds or 60, smoke=args.smoke)
         if args.emit_bench:
             with open(args.emit_bench, "w") as f:
                 json.dump(snap, f, indent=2, sort_keys=True)

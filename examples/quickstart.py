@@ -44,8 +44,10 @@ from repro.data import (FederatedDataset, StreamingFederatedDataset,
 from repro.launch.plan import CacheSpec, ExecutionPlan
 from repro.launch.train import FederatedTrainer
 from repro.models import small
+from repro.data.stream import DiskShardProvider
 from repro.scenario import (AdaptiveCohort, LatencyStragglers, ScenarioSpec,
                             UniformDropout, zipf_linreg_provider)
+from repro.traces import TraceSpec, record_trace
 
 PLAN_TABLE = """\
 plan selection (--plan):
@@ -97,6 +99,26 @@ Scenario runs log a per-round "completed" metric (clients that finished
 any work).  The dropout sweep benchmark: benchmarks/fig6_robustness.py
 --scenario --emit-bench BENCH_7.json (eq. (3) keeps FedMom's final loss
 stable as the dropout rate climbs).
+
+fleet traces (repro.traces; record reality once, replay it anywhere):
+  flag                    what it does
+  ---------------------   -------------------------------------------
+  --record-trace PATH     record the declared scenario's per-round
+                          cohorts / step caps / cutoffs into a
+                          versioned FleetTrace (PATH.npz + PATH.json)
+                          before training starts
+  --replay-trace PATH     replay a recorded trace through the same
+                          eq. (3) step-mask machinery — bit-equal to
+                          the originating run on every plane; rounds
+                          past the recorded horizon raise (explicit
+                          wrap/clamp policies live on TraceSpec)
+  --leaf-dir PATH         train from an on-disk corpus directory via
+                          DiskShardProvider (mmap-backed npy-packed /
+                          npz-per-client manifests, or a raw LEAF json
+                          directory; streaming plane)
+Trace snapshot: benchmarks/fig6_robustness.py --trace --emit-bench
+BENCH_9.json (record-on-synthetic -> replay-on-disk-corpus, drift must
+be 0 bits; CI re-checks a smoke run).
 
 privacy (--secure-agg / --dp-clip / --dp-noise): --secure-agg runs the
 round's aggregation through the compiled uint32-ring pairwise-masking
@@ -172,6 +194,18 @@ def main():
                     help="train a lazily-synthesized Zipf linreg fleet of "
                          "K clients via a ShardProvider (streaming plane) "
                          "instead of materialized FEMNIST")
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="record the declared scenario's per-round "
+                         "cohorts/caps into a versioned FleetTrace at "
+                         "PATH (.npz + .json) before training")
+    ap.add_argument("--replay-trace", default=None, metavar="PATH",
+                    help="replay a recorded FleetTrace through the eq. "
+                         "(3) step masks (bit-equal to the originating "
+                         "run on every plane)")
+    ap.add_argument("--leaf-dir", default=None, metavar="PATH",
+                    help="train from an on-disk corpus / LEAF json "
+                         "directory via DiskShardProvider (mmap-backed; "
+                         "streaming plane)")
     ap.add_argument("--secure-agg", action="store_true",
                     help="aggregate under compiled secure aggregation "
                          "(uint32-ring pairwise masks; bit-equal to the "
@@ -189,13 +223,15 @@ def main():
     args = ap.parse_args()
 
     plane = args.plan or ("streaming" if args.stream_data or args.provider
+                          or args.leaf_dir
                           else "device" if args.device_data
                           else "scanned" if args.scanned else "per-round")
     budget = (int(args.memory_budget_mb * 2**20)
               if args.memory_budget_mb is not None else None)
     scenario = None
     if (args.dropout is not None or args.deadline is not None
-            or args.adaptive_cohort is not None):
+            or args.adaptive_cohort is not None
+            or args.replay_trace is not None):
         scenario = ScenarioSpec(
             dropout=(UniformDropout(rate=args.dropout)
                      if args.dropout is not None else None),
@@ -203,6 +239,8 @@ def main():
                         if args.deadline is not None else None),
             cohort=(AdaptiveCohort(goal=args.adaptive_cohort)
                     if args.adaptive_cohort is not None else None),
+            trace=(TraceSpec(path=args.replay_trace)
+                   if args.replay_trace is not None else None),
             seed=args.scenario_seed)
     secure = (SecureAggSpec(masked=True, seed=0,
                             frac_bits=args.secure_frac_bits)
@@ -214,9 +252,10 @@ def main():
                          memory_budget_bytes=budget, scenario=scenario,
                          secure=secure)
 
-    if args.provider:
-        provider = zipf_linreg_provider(args.provider, dim=16, n_min=4,
-                                        n_max=64, seed=0)
+    if args.provider or args.leaf_dir:
+        provider = (DiskShardProvider(args.leaf_dir) if args.leaf_dir
+                    else zipf_linreg_provider(args.provider, dim=16,
+                                              n_min=4, n_max=64, seed=0))
         ds = StreamingFederatedDataset.from_provider(provider, seed=1)
         pop = ds.population()
         K, M = pop.n_clients, args.m
@@ -260,6 +299,17 @@ def main():
                        lr=args.lr, placement="mesh",
                        compute_dtype="float32")
 
+    if args.record_trace:
+        # record what the declared scenario does to the exact cohorts the
+        # run below will sample (same keyed sampler: pop, M, seed=2)
+        rec = record_trace(scenario if scenario is not None
+                           else ScenarioSpec(seed=args.scenario_seed),
+                           DeviceUniformSampler(pop, M, seed=2),
+                           args.rounds, args.local_steps)
+        out = rec.save(args.record_trace)
+        print(f"recorded fleet trace: {rec.n_rounds} rounds x m={M} "
+              f"({rec.n_events} events, peak m={rec.peak_m}) -> {out}")
+
     hetero_fn = None
     if args.hetero:
         def hetero_fn(t):
@@ -273,7 +323,9 @@ def main():
                  f"deadline={args.deadline}s" if args.deadline is not None
                  else None,
                  f"cohort->{args.adaptive_cohort}"
-                 if args.adaptive_cohort is not None else None]
+                 if args.adaptive_cohort is not None else None,
+                 f"replay={args.replay_trace}"
+                 if args.replay_trace is not None else None]
         scen_tag = f" [scenario: {', '.join(p for p in parts if p)}]"
     priv = []
     if args.secure_agg:
@@ -298,9 +350,11 @@ def main():
               f"{' [hetero H_k]' if args.hetero else ''}{scen_tag} ===")
         # the per-round plane works with the paper's stateful sampler; the
         # compiled/fused planes (and auto, which may resolve to one) need
-        # the keyed Device* capabilities
+        # the keyed Device* capabilities — as do trace record/replay runs,
+        # whose cohorts must be replayable as pure functions of (seed, t)
         sampler = (UniformSampler(pop, M, seed=2)
                    if plan.plane == "per_round"
+                   and not (args.record_trace or args.replay_trace)
                    else DeviceUniformSampler(pop, M, seed=2))
         trainer = FederatedTrainer(
             loss_fn=loss_fn, server_opt=opt, rcfg=rcfg,

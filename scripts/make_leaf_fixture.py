@@ -1,0 +1,69 @@
+"""Generate the tiny committed LEAF-format fixture under tests/fixtures/.
+
+The fixture is what lets ``DiskShardProvider`` tests and the CI
+trace-replay lane exercise real LEAF-format ingestion hermetically — no
+downloads, no network.  It is a linear-regression fleet in the repo's
+linreg convention (``x: [n_k, dim] float32``, ``y: [n_k] float32``) so the
+same ``loss_fn`` the tests and quickstart use trains on it directly.
+
+Deterministic: counts and rows are pure functions of SEED (SeedSequence on
+tuples), and floats are rounded to 4 decimals before json serialization —
+re-running this script reproduces the committed file byte for byte.
+
+    python scripts/make_leaf_fixture.py [--out tests/fixtures/leaf]
+"""
+import argparse
+import json
+import os
+
+import numpy as np
+
+SEED = 9
+N_USERS = 12
+DIM = 3
+N_MIN, N_MAX = 2, 8
+
+
+def build(seed: int = SEED) -> dict:
+    rng = np.random.default_rng((seed, 0x1EAF))
+    counts = rng.integers(N_MIN, N_MAX + 1, size=N_USERS)
+    w = rng.normal(size=DIM)
+    users, num_samples, user_data = [], [], {}
+    for k in range(N_USERS):
+        rk = np.random.default_rng((seed, 0x1EAF, k))
+        n = int(counts[k])
+        x = rk.normal(size=(n, DIM))
+        w_k = w + 0.25 * rk.normal(size=DIM)
+        y = x @ w_k + 0.1 * rk.normal(size=n)
+        name = f"u_{k:03d}"
+        users.append(name)
+        num_samples.append(n)
+        user_data[name] = {
+            "x": [[round(float(v), 4) for v in row] for row in x],
+            "y": [round(float(v), 4) for v in y],
+        }
+    return {"users": users, "num_samples": num_samples,
+            "user_data": user_data}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join("tests", "fixtures",
+                                                  "leaf"),
+                    help="output LEAF directory (default: "
+                         "tests/fixtures/leaf)")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "all_data_0.json")
+    blob = build()
+    with open(path, "w") as f:
+        json.dump(blob, f, sort_keys=True)
+        f.write("\n")
+    size = os.path.getsize(path)
+    assert size <= 50 * 1024, f"fixture too big: {size} B > 50 KB"
+    print(f"wrote {path} ({size} B, {len(blob['users'])} users, "
+          f"{sum(blob['num_samples'])} samples)")
+
+
+if __name__ == "__main__":
+    main()

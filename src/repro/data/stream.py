@@ -60,6 +60,9 @@ corrupt an in-flight chunk (double buffering for free).
 """
 from __future__ import annotations
 
+import glob as _glob
+import json
+import os
 from bisect import bisect_left
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -177,10 +180,26 @@ class StreamingFederatedDataset:
       [K] metadata, never K shards.
 
     ``seed`` keys the minibatch draws like every other plane.
+
+    ``validate`` (provider path only) controls schema validation of
+    fetched shards: ``"first"`` (default) validates each client ONCE — an
+    eviction-refetch of an already-passed client skips the re-check, which
+    at million-client scale is pure overhead on rows the provider is
+    contractually obliged to reproduce bit-identically; ``"always"``
+    re-validates every fetch (distrust the provider's purity);
+    ``"never"`` skips validation entirely.  Failures raise
+    ``CorpusSchemaError`` naming the client either way.
     """
 
+    VALIDATE_MODES = ("always", "first", "never")
+
     def __init__(self, data: Optional[List[Dict[str, np.ndarray]]] = None,
-                 seed: int = 0, provider: Optional[ShardProvider] = None):
+                 seed: int = 0, provider: Optional[ShardProvider] = None,
+                 validate: str = "first"):
+        if validate not in self.VALIDATE_MODES:
+            raise ValueError(
+                f"validate must be one of {self.VALIDATE_MODES}, "
+                f"got {validate!r}")
         if (data is None) == (provider is None):
             raise ValueError(
                 "StreamingFederatedDataset takes exactly one of data= (a "
@@ -220,17 +239,20 @@ class StreamingFederatedDataset:
         self.seed = seed
         self.n_max = int(self.counts.max())
         self.fields = fields
+        self.validate = validate
+        self._validated: set = set()   # clients passed under "first"
 
     @classmethod
     def from_federated(cls, ds: FederatedDataset) -> "StreamingFederatedDataset":
         return cls(ds.data, seed=ds.seed)
 
     @classmethod
-    def from_provider(cls, provider: ShardProvider,
-                      seed: int = 0) -> "StreamingFederatedDataset":
+    def from_provider(cls, provider: ShardProvider, seed: int = 0,
+                      validate: str = "first") -> "StreamingFederatedDataset":
         """Lazy corpus over a ``ShardProvider`` declaration (see class
-        docstring); ``seed`` keys the minibatch draws."""
-        return cls(provider=provider, seed=seed)
+        docstring); ``seed`` keys the minibatch draws, ``validate`` the
+        per-fetch schema check policy."""
+        return cls(provider=provider, seed=seed, validate=validate)
 
     # -- inspection -----------------------------------------------------
     @property
@@ -296,12 +318,20 @@ class StreamingFederatedDataset:
         I/O — validated against the declared schema AND the declared
         ``counts[cid]`` before any device upload sees it (a provider that
         drifts from its declaration raises ``CorpusSchemaError`` naming the
-        client, not a downstream scatter-shape crash)."""
+        client, not a downstream scatter-shape crash).  The ``validate``
+        knob scopes the check: every fetch (``"always"``), first fetch per
+        client (``"first"``, the default — eviction-refetch of a
+        passed client skips it), or not at all (``"never"``)."""
         if self.provider is None:
             return self.data[cid]
-        shard = self.provider.shard(int(cid))
-        check_shard(shard, self.fields, int(cid),
-                    n_k=int(self.counts[cid]), source="provider shard for")
+        cid = int(cid)
+        shard = self.provider.shard(cid)
+        if self.validate == "always" or (self.validate == "first"
+                                         and cid not in self._validated):
+            check_shard(shard, self.fields, cid, n_k=int(self.counts[cid]),
+                        source="provider shard for")
+            if self.validate == "first":
+                self._validated.add(cid)
         return shard
 
     def padded_client(self, cid: int,
@@ -540,6 +570,11 @@ class ShardCache:
         self._lru: List["OrderedDict[int, None]"] = [
             OrderedDict() for _ in range(layout.n_tiers)]
         self.hits = self.misses = self.evictions = 0
+        # per-tier churn attribution (sums equal the cache-wide counters):
+        # the chunk metrics records surface these as cache_tier_* deltas
+        self.tier_hits = [0] * layout.n_tiers
+        self.tier_misses = [0] * layout.n_tiers
+        self.tier_evictions = [0] * layout.n_tiers
 
     @staticmethod
     def _put(x: np.ndarray):
@@ -595,7 +630,10 @@ class ShardCache:
             tier = int(self._tier_of[cid])
             if cid not in self._slot_of[tier]:
                 fresh_by_tier.setdefault(tier, []).append(cid)
+                self.tier_misses[tier] += 1
                 n_fresh += 1
+            else:
+                self.tier_hits[tier] += 1
         self.hits += len(need) - n_fresh
         self.misses += n_fresh
         for tier, fresh in fresh_by_tier.items():
@@ -612,6 +650,7 @@ class ShardCache:
                     slot = slot_of.pop(victim)
                     del lru[victim]
                     self.evictions += 1
+                    self.tier_evictions[tier] += 1
                 slot_of[cid] = slot
                 assigned.append(slot)
             idx = jnp.asarray(np.asarray(assigned, np.int32))
@@ -638,3 +677,267 @@ class ShardCache:
         return CacheView(tuple(dict(arrs) for arrs in self.tier_arrays),
                          self._counts_dev, jnp.asarray(self._tier_of),
                          jnp.asarray(client_slots), self.dataset.seed)
+
+
+# ---------------------------------------------------------------------------
+# on-disk corpora: DiskShardProvider + writer + LEAF ingestion
+# ---------------------------------------------------------------------------
+CORPUS_FORMAT = "repro-fleet-corpus"
+CORPUS_VERSION = 1
+CORPUS_LAYOUTS = ("npy-packed", "npz-per-client")
+
+
+def _dtype_tag(dt) -> str:
+    return np.dtype(dt).name
+
+
+def _field_dtype(arr: np.ndarray) -> np.dtype:
+    """LEAF json carries untyped numbers: floats land as float64, ints as
+    int64 — narrow to the repo's float32/int32 corpus convention."""
+    if np.issubdtype(arr.dtype, np.floating):
+        return np.dtype(np.float32)
+    if np.issubdtype(arr.dtype, np.integer):
+        return np.dtype(np.int32)
+    raise CorpusSchemaError(
+        f"unsupported field dtype {arr.dtype} (want numeric)")
+
+
+def parse_leaf_dir(leaf_dir: str):
+    """Parse a LEAF-format directory (``*.json`` files with ``users`` /
+    ``num_samples`` / ``user_data``, the layout the LEAF benchmark suite
+    emits) into ``(counts, fields, shards, users)`` — host arrays, floats
+    narrowed to float32 and ints to int32.  Files are visited in sorted
+    name order and users in file order, so the client-id assignment is
+    deterministic across runs and machines."""
+    files = sorted(_glob.glob(os.path.join(leaf_dir, "*.json")))
+    if not files:
+        raise CorpusSchemaError(
+            f"no LEAF json files in {leaf_dir!r} (want the LEAF layout: "
+            f"*.json with users/num_samples/user_data)")
+    users, shards = [], []
+    for path in files:
+        with open(path) as f:
+            blob = json.load(f)
+        for key in ("users", "user_data"):
+            if key not in blob:
+                raise CorpusSchemaError(
+                    f"{path!r} is not LEAF-format: missing {key!r}")
+        declared = dict(zip(blob["users"],
+                            blob.get("num_samples", [])))
+        for user in blob["users"]:
+            ud = blob["user_data"][user]
+            shard = {}
+            for name, rows in sorted(ud.items()):
+                arr = np.asarray(rows)
+                shard[name] = arr.astype(_field_dtype(arr))
+            n = len(next(iter(shard.values())))
+            if user in declared and int(declared[user]) != n:
+                raise CorpusSchemaError(
+                    f"LEAF user {user!r} declares num_samples="
+                    f"{declared[user]} but carries {n} rows",
+                    client=len(users))
+            users.append(user)
+            shards.append(shard)
+    fields = {name: schema
+              for name, schema in sorted(shard_schema(shards[0]).items())}
+    counts = np.array([check_shard(s, fields, k, source="LEAF user")
+                       for k, s in enumerate(shards)], np.int64)
+    return counts, fields, shards, users
+
+
+def write_disk_corpus(root: str, provider: ShardProvider,
+                      layout: str = "npy-packed") -> str:
+    """Materialize any ``ShardProvider`` as an on-disk corpus directory
+    readable by ``DiskShardProvider``; returns ``root``.
+
+    ``npy-packed``: one row-concatenated ``<field>.npy`` per field (written
+    via ``open_memmap``, so host RAM never holds the packed corpus) —
+    the mmap-backed layout for big corpora.  ``npz-per-client``: one
+    ``shards/<cid>.npz`` per client — the simple layout for small ones.
+    Either way ``counts.npy`` + ``manifest.json`` declare the schema.
+    """
+    if layout not in CORPUS_LAYOUTS:
+        raise ValueError(
+            f"layout must be one of {CORPUS_LAYOUTS}, got {layout!r}")
+    os.makedirs(root, exist_ok=True)
+    counts = np.asarray(provider.counts, np.int64)
+    fields = {name: (tuple(tail), np.dtype(dt))
+              for name, (tail, dt) in sorted(provider.fields.items())}
+    np.save(os.path.join(root, "counts.npy"), counts)
+    if layout == "npy-packed":
+        total = int(counts.sum())
+        offsets = np.concatenate([[0], np.cumsum(counts)])
+        mms = {name: np.lib.format.open_memmap(
+                   os.path.join(root, f"{name}.npy"), mode="w+",
+                   dtype=dtype, shape=(total,) + tail)
+               for name, (tail, dtype) in fields.items()}
+        for cid in range(len(counts)):
+            shard = provider.shard(cid)
+            lo, hi = int(offsets[cid]), int(offsets[cid + 1])
+            for name, mm in mms.items():
+                mm[lo:hi] = np.asarray(shard[name], mm.dtype)
+        for mm in mms.values():
+            mm.flush()
+    else:
+        sdir = os.path.join(root, "shards")
+        os.makedirs(sdir, exist_ok=True)
+        for cid in range(len(counts)):
+            shard = provider.shard(cid)
+            np.savez(os.path.join(sdir, f"{cid}.npz"),
+                     **{name: np.asarray(shard[name], dtype)
+                        for name, (_, dtype) in fields.items()})
+    manifest = {
+        "format": CORPUS_FORMAT,
+        "version": CORPUS_VERSION,
+        "layout": layout,
+        "n_clients": int(len(counts)),
+        "counts": "counts.npy",
+        "fields": {name: {"shape": list(tail), "dtype": _dtype_tag(dtype)}
+                   for name, (tail, dtype) in fields.items()},
+    }
+    with open(os.path.join(root, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return root
+
+
+def leaf_to_corpus(leaf_dir: str, out_dir: str,
+                   layout: str = "npz-per-client") -> str:
+    """Convert a LEAF-format directory into a ``DiskShardProvider`` corpus
+    (see ``write_disk_corpus`` for the layouts); returns ``out_dir``."""
+    parsed_counts, parsed_fields, parsed_shards, _ = parse_leaf_dir(leaf_dir)
+
+    class _Parsed:
+        n_clients = len(parsed_counts)
+        counts = parsed_counts
+        fields = parsed_fields
+
+        def shard(self, cid):
+            return parsed_shards[int(cid)]
+
+    return write_disk_corpus(out_dir, _Parsed(), layout=layout)
+
+
+class DiskShardProvider:
+    """``ShardProvider`` over an on-disk corpus directory.
+
+    Accepts either a manifest-declared corpus (``manifest.json`` +
+    ``counts.npy`` + field files, as ``write_disk_corpus`` /
+    ``leaf_to_corpus`` emit) or a raw LEAF-format directory of json files
+    (parsed once at construction — json cannot be mmapped; convert big
+    LEAF corpora with ``leaf_to_corpus`` to get the mmap-backed layout).
+
+    ``npy-packed`` corpora are opened with ``np.load(mmap_mode="r")``:
+    construction touches only the [K] count vector and the file headers,
+    and ``shard(cid)`` copies the client's row span out of the mapping —
+    host RAM never holds the corpus.  ``shard`` is a pure function of
+    ``client_id`` over immutable files, so an eviction-refetch (or a
+    resumed run) returns bit-identical rows — the property that keeps
+    disk-backed trajectories bit-reproducible.
+    """
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        manifest_path = os.path.join(self.root, "manifest.json")
+        if os.path.exists(manifest_path):
+            self._init_manifest(manifest_path)
+        elif _glob.glob(os.path.join(self.root, "*.json")):
+            self._init_leaf()
+        else:
+            raise CorpusSchemaError(
+                f"{self.root!r} is neither a manifest-declared corpus "
+                f"(manifest.json) nor a LEAF-format directory (*.json)")
+
+    def _init_manifest(self, manifest_path: str):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != CORPUS_FORMAT:
+            raise CorpusSchemaError(
+                f"{manifest_path!r} is not a {CORPUS_FORMAT} manifest "
+                f"(format={manifest.get('format')!r})")
+        if manifest.get("version") != CORPUS_VERSION:
+            raise CorpusSchemaError(
+                f"corpus version {manifest.get('version')!r} unsupported "
+                f"(this build reads version {CORPUS_VERSION})")
+        layout = manifest.get("layout")
+        if layout not in CORPUS_LAYOUTS:
+            raise CorpusSchemaError(
+                f"corpus layout {layout!r} unsupported (want one of "
+                f"{CORPUS_LAYOUTS})")
+        self.layout = layout
+        counts = np.load(os.path.join(self.root, manifest["counts"]))
+        counts = np.asarray(counts, np.int64)
+        if counts.ndim != 1 or len(counts) != int(manifest["n_clients"]):
+            raise CorpusSchemaError(
+                f"counts file has shape {counts.shape} but the manifest "
+                f"declares n_clients={manifest['n_clients']}")
+        self._counts = counts
+        self._fields = {
+            name: (tuple(spec["shape"]), np.dtype(spec["dtype"]))
+            for name, spec in sorted(manifest["fields"].items())}
+        if not self._fields:
+            raise CorpusSchemaError("corpus manifest declares no fields")
+        self._shards_mem = None
+        if layout == "npy-packed":
+            self._offsets = np.concatenate([[0], np.cumsum(counts)])
+            total = int(self._offsets[-1])
+            self._mm = {}
+            for name, (tail, dtype) in self._fields.items():
+                mm = np.load(os.path.join(self.root, f"{name}.npy"),
+                             mmap_mode="r")
+                if mm.shape != (total,) + tail or mm.dtype != dtype:
+                    raise CorpusSchemaError(
+                        f"packed field {name!r} is {mm.shape}/{mm.dtype} "
+                        f"but the manifest declares "
+                        f"{(total,) + tail}/{dtype}")
+                self._mm[name] = mm
+        else:
+            sdir = os.path.join(self.root, "shards")
+            for probe in (0, len(counts) - 1):
+                p = os.path.join(sdir, f"{probe}.npz")
+                if not os.path.exists(p):
+                    raise CorpusSchemaError(
+                        f"npz-per-client corpus missing shard file {p!r}",
+                        client=probe)
+            self._sdir = sdir
+
+    def _init_leaf(self):
+        self.layout = "leaf-json"
+        counts, fields, shards, users = parse_leaf_dir(self.root)
+        self._counts = counts
+        self._fields = fields
+        self._shards_mem = shards
+        self.users = users
+
+    @classmethod
+    def from_leaf(cls, leaf_dir: str) -> "DiskShardProvider":
+        """Open a raw LEAF-format directory directly (parse-once path;
+        equivalent to ``DiskShardProvider(leaf_dir)``)."""
+        return cls(leaf_dir)
+
+    # -- ShardProvider protocol ------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        return len(self._counts)
+
+    @property
+    def counts(self) -> np.ndarray:
+        return self._counts
+
+    @property
+    def fields(self) -> Dict[str, tuple]:
+        return self._fields
+
+    def shard(self, client_id: int) -> Dict[str, np.ndarray]:
+        cid = int(client_id)
+        if not 0 <= cid < self.n_clients:
+            raise IndexError(
+                f"client {cid} outside corpus [0, {self.n_clients})")
+        if self._shards_mem is not None:          # leaf-json
+            return self._shards_mem[cid]
+        if self.layout == "npy-packed":
+            lo, hi = int(self._offsets[cid]), int(self._offsets[cid + 1])
+            return {name: np.array(mm[lo:hi])
+                    for name, mm in self._mm.items()}
+        with np.load(os.path.join(self._sdir, f"{cid}.npz")) as z:
+            return {name: z[name] for name in self._fields}

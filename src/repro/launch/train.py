@@ -94,20 +94,33 @@ from repro.scenario.spec import ScenarioRuntime
 
 def _cache_counters(cache: Optional[ShardCache]):
     return None if cache is None else (cache.hits, cache.misses,
-                                       cache.evictions)
+                                       cache.evictions,
+                                       tuple(cache.tier_hits),
+                                       tuple(cache.tier_misses),
+                                       tuple(cache.tier_evictions))
 
 
 def _cache_stats(before, cache: Optional[ShardCache]):
     """Per-chunk delta of the cache counters (+ cumulative hit rate), the
     durable form of the stats that used to live only on the live cache
     object.  Staging overlaps compute, so uploads dispatched for chunk i+1
-    during chunk i land on chunk i's record; the per-run sums are exact."""
+    during chunk i land on chunk i's record; the per-run sums are exact.
+    The ``cache_tier_*`` lists attribute the same deltas to the cache's
+    n_k size tiers (index = tier, smallest slot rows first), so churn at
+    skewed corpora can be pinned to the tier causing it."""
     if cache is None:
         return None
     return {"cache_hits": cache.hits - before[0],
             "cache_misses": cache.misses - before[1],
             "cache_evictions": cache.evictions - before[2],
-            "cache_hit_rate": round(cache.hit_rate, 6)}
+            "cache_hit_rate": round(cache.hit_rate, 6),
+            "cache_tier_hits": [a - b for a, b
+                                in zip(cache.tier_hits, before[3])],
+            "cache_tier_misses": [a - b for a, b
+                                  in zip(cache.tier_misses, before[4])],
+            "cache_tier_evictions": [a - b for a, b
+                                     in zip(cache.tier_evictions,
+                                            before[5])]}
 
 
 def _eval_spans(t0: int, n_rounds: int, chunk_rounds: int,

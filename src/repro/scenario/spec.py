@@ -63,17 +63,28 @@ class ScenarioSpec:
     purely mnemonic; ``extra`` takes any further models) — all compose by
     elementwise min of their step caps.  ``availability`` masks cohort
     slots past M(t); ``cohort`` adaptively shrinks/grows the active slot
-    count toward a completed-clients goal.  ``seed`` keys every scenario
-    draw, independent of the data/sampler seeds.
+    count toward a completed-clients goal.  ``trace`` replays a RECORDED
+    fleet log (``repro.traces.TraceSpec``) instead of — or composed by
+    min with — the synthetic models.  ``seed`` keys every scenario draw,
+    independent of the data/sampler seeds (a trace ignores it: a recorded
+    log has no randomness left).
     """
     dropout: Optional[LifecycleModel] = None
     stragglers: Optional[LifecycleModel] = None
     extra: Tuple[LifecycleModel, ...] = ()
     availability: Optional[AvailabilityModel] = None
     cohort: Optional[AdaptiveCohort] = None
+    trace: Optional["TraceSpec"] = None   # repro.traces.TraceSpec
     seed: int = 0
 
     def __post_init__(self):
+        if self.trace is not None:
+            from repro.traces.replay import TraceSpec
+
+            if not isinstance(self.trace, TraceSpec):
+                raise TypeError(
+                    f"trace must be a repro.traces.TraceSpec, got "
+                    f"{type(self.trace).__name__}")
         for m in self.models:
             if not isinstance(m, LifecycleModel):
                 raise TypeError(
@@ -88,8 +99,11 @@ class ScenarioSpec:
 
     @property
     def models(self) -> Tuple[LifecycleModel, ...]:
-        return tuple(m for m in (self.dropout, self.stragglers)
-                     if m is not None) + tuple(self.extra)
+        out = tuple(m for m in (self.dropout, self.stragglers)
+                    if m is not None) + tuple(self.extra)
+        if self.trace is not None:
+            out += (self.trace.replay(),)
+        return out
 
     @property
     def null(self) -> bool:
@@ -129,6 +143,9 @@ class ScenarioRuntime:
         self.local_steps = int(local_steps)
         self._rate_ema = 1.0
         self._next_t = 0
+        # the applied slot cutoff of the last staged round (what
+        # traces.TraceRecorder logs as the trace's per-round m[t])
+        self.last_m: Optional[int] = None
 
     def _adaptive_m(self, n_slots: int) -> int:
         c = self.spec.cohort
@@ -158,6 +175,7 @@ class ScenarioRuntime:
             m_t = min(m_t, spec.availability.m_at(t))
         if spec.cohort is not None:
             m_t = min(m_t, self._adaptive_m(n))
+        self.last_m = int(m_t)
         caps[m_t:] = 0
         if spec.cohort is not None:
             active = max(m_t, 1)

@@ -1,0 +1,28 @@
+"""Trace subsystem: record what a scenario did to a fleet, replay it
+anywhere.
+
+``FleetTrace`` is the versioned record (npz + json manifest: per-round
+available-device cutoffs, per-(round, client) join/dropout-step/latency
+events); ``TraceRecorder`` runs any ``ScenarioSpec`` on host and emits the
+trace it induced; ``TraceReplay`` / ``TraceAvailability`` play a trace
+back through the existing lifecycle ``step_caps()`` and
+``AvailabilityModel`` protocols — so a recorded trace drives the eq. (3)
+``step_mask`` machinery on every execution plane, keyed, resume-safe and
+bit-equal to the originating run.  ``TraceSpec`` is the declarative form:
+``ScenarioSpec(trace=TraceSpec(path=...))``.
+"""
+from repro.traces.fleet import (  # noqa: F401
+    TRACE_FORMAT,
+    TRACE_VERSION,
+    FleetTrace,
+)
+from repro.traces.record import (  # noqa: F401
+    TraceRecorder,
+    record_trace,
+)
+from repro.traces.replay import (  # noqa: F401
+    POLICIES,
+    TraceAvailability,
+    TraceReplay,
+    TraceSpec,
+)

@@ -1,0 +1,582 @@
+"""Trace-driven fleet replay + disk-backed corpora.
+
+Four contracts:
+
+* **Record -> replay bit-equality** — a ``FleetTrace`` recorded from any
+  ``ScenarioSpec`` and replayed via ``ScenarioSpec(trace=TraceSpec(...))``
+  trains the BIT-identical trajectory on every execution plane
+  (per-round / scanned / device / streaming / streaming-bucketed),
+  including across a save -> load round trip and a checkpoint resume.
+* **Explicit horizon policy** — replaying past the recorded horizon is
+  governed by one shared knob (``"raise"`` / ``"wrap"`` / ``"clamp"``),
+  never by silent extrapolation; empty traces are rejected up front.
+* **Disk corpus purity** — ``DiskShardProvider.shard`` is a pure function
+  of ``client_id`` over immutable files, so disk-backed training (both
+  layouts, plus raw LEAF json) is bit-equal to the same corpus served
+  lazily, eviction-refetches included.
+* **Schema violations fail loudly** — unversioned/foreign manifests,
+  count/shape mismatches, and duplicate trace events raise with the
+  offending entity named, never misread.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from _trajectory import (DRIVERS, assert_bitwise_trajectory, flat_w,
+                         linreg_loss, linreg_params, make_clients,
+                         run_trajectory)
+from repro.core import DeviceUniformSampler, RoundConfig, fedmom
+from repro.data import (CorpusSchemaError, DiskShardProvider,
+                        FederatedDataset, ShardProvider,
+                        StreamingFederatedDataset, leaf_to_corpus,
+                        parse_leaf_dir, write_disk_corpus)
+from repro.data.stream import CORPUS_FORMAT, CORPUS_VERSION, ShardCache
+from repro.launch.plan import CacheSpec, ExecutionPlan
+from repro.launch.train import FederatedTrainer
+from repro.scenario import (AvailabilityModel, LatencyStragglers,
+                            LifecycleModel, ScenarioSpec, UniformDropout,
+                            ZipfLinregProvider)
+from repro.scenario.spec import ScenarioRuntime
+from repro.traces import (TRACE_FORMAT, TRACE_VERSION, FleetTrace,
+                          TraceAvailability, TraceRecorder, TraceReplay,
+                          TraceSpec, record_trace)
+
+CLIENTS = make_clients(n=8, lo=8, hi=16)
+RCFG = RoundConfig(clients_per_round=4, local_steps=6, lr=0.05)
+SPEC = ScenarioSpec(dropout=UniformDropout(rate=0.35),
+                    stragglers=LatencyStragglers(deadline_s=5.0), seed=7)
+LEAF_DIR = os.path.join(os.path.dirname(__file__), "fixtures", "leaf")
+
+
+def _record(n_rounds=12, spec=SPEC, rcfg=RCFG, clients=CLIENTS):
+    """Record ``spec`` over the EXACT sampler/dataset ``run_trajectory``
+    builds (ds seed 1, sampler seed 2) — the bit-equality certifications
+    need the replayed cohorts to be the recorded cohorts."""
+    ds = FederatedDataset([dict(c) for c in clients], seed=1)
+    sampler = DeviceUniformSampler(ds.population(), rcfg.clients_per_round,
+                                   seed=2)
+    return TraceRecorder(spec, rcfg.local_steps).record(sampler, n_rounds)
+
+
+def _tiny_trace():
+    """3 rounds x 4 clients, H=10: round 0 = {c1: 4, c3: 10}, round 1 =
+    {c0: 0}, round 2 = no events; m = [2, 1, 3]."""
+    return FleetTrace(n_rounds=3, n_clients=4, local_steps=10,
+                      m=[2, 1, 3], ev_round=[0, 0, 1],
+                      ev_client=[1, 3, 0], ev_steps=[4, 10, 0])
+
+
+# ---------------------------------------------------------------------------
+# FleetTrace: construction, validation, persistence
+# ---------------------------------------------------------------------------
+def test_fleet_trace_sorts_and_slices():
+    tr = FleetTrace(n_rounds=2, n_clients=5, local_steps=8,
+                    m=[3, 2], ev_round=[1, 0, 0], ev_client=[2, 4, 1],
+                    ev_steps=[7, 8, 0])
+    # events land (round, client)-sorted regardless of input order
+    assert tr.ev_round.tolist() == [0, 0, 1]
+    assert tr.ev_client.tolist() == [1, 4, 2]
+    assert tr.ev_steps.tolist() == [0, 8, 7]
+    assert tr.n_events == 3 and tr.peak_m == 3
+    r0 = tr.round_events(0)
+    assert r0["client"].tolist() == [1, 4]
+    assert np.all(np.isnan(r0["latency"]))
+    with pytest.raises(IndexError, match="outside recorded trace"):
+        tr.round_events(2)
+
+
+def test_fleet_trace_validation():
+    ok = dict(n_rounds=2, n_clients=3, local_steps=5, m=[1, 2],
+              ev_round=[0], ev_client=[1], ev_steps=[3])
+    FleetTrace(**ok)
+    with pytest.raises(ValueError, match="m must be"):
+        FleetTrace(**{**ok, "m": [1]})
+    with pytest.raises(ValueError, match="event rounds"):
+        FleetTrace(**{**ok, "ev_round": [2]})
+    with pytest.raises(ValueError, match="client ids"):
+        FleetTrace(**{**ok, "ev_client": [3]})
+    with pytest.raises(ValueError, match="step caps"):
+        FleetTrace(**{**ok, "ev_steps": [6]})
+    with pytest.raises(ValueError, match="disagree on length"):
+        FleetTrace(**{**ok, "ev_steps": [3, 3]})
+    with pytest.raises(ValueError, match="duplicate"):
+        FleetTrace(n_rounds=2, n_clients=3, local_steps=5, m=[1, 2],
+                   ev_round=[0, 0], ev_client=[1, 1], ev_steps=[3, 4])
+    with pytest.raises(ValueError, match="local_steps >= 1"):
+        FleetTrace(n_rounds=0, n_clients=1, local_steps=0, m=[],
+                   ev_round=[], ev_client=[], ev_steps=[])
+    # an empty trace is constructible (peak 0) — replay rejects it
+    empty = FleetTrace(n_rounds=0, n_clients=1, local_steps=5, m=[],
+                       ev_round=[], ev_client=[], ev_steps=[])
+    assert empty.n_events == 0 and empty.peak_m == 0
+
+
+def test_fleet_trace_save_load_round_trip(tmp_path):
+    tr = _record(6)
+    manifest = tr.save(os.path.join(str(tmp_path), "day0"))
+    assert manifest.endswith("day0.json")
+    # load accepts the manifest, the npz, or the bare stem
+    for path in (manifest, manifest[:-5] + ".npz", manifest[:-5]):
+        got = FleetTrace.load(path)
+        assert (got.n_rounds, got.n_clients, got.local_steps) == \
+            (tr.n_rounds, tr.n_clients, tr.local_steps)
+        for name in ("m", "ev_round", "ev_client", "ev_steps"):
+            np.testing.assert_array_equal(getattr(got, name),
+                                          getattr(tr, name))
+        np.testing.assert_array_equal(
+            np.isnan(got.ev_latency), np.isnan(tr.ev_latency))
+        np.testing.assert_array_equal(got.ev_latency[~np.isnan(got.ev_latency)],
+                                      tr.ev_latency[~np.isnan(tr.ev_latency)])
+
+
+def test_fleet_trace_load_validates(tmp_path):
+    stem = os.path.join(str(tmp_path), "t")
+    manifest = _tiny_trace().save(stem)
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        FleetTrace.load(os.path.join(str(tmp_path), "nope"))
+    blob = json.load(open(manifest))
+    for field, value, msg in (("format", "something-else", "manifest"),
+                              ("version", TRACE_VERSION + 1, "version"),
+                              ("n_events", 99, "declares")):
+        bad = {**blob, field: value}
+        with open(manifest, "w") as f:
+            json.dump(bad, f)
+        with pytest.raises(ValueError, match=msg):
+            FleetTrace.load(stem)
+    assert blob["format"] == TRACE_FORMAT
+
+
+# ---------------------------------------------------------------------------
+# TraceReplay / TraceAvailability semantics
+# ---------------------------------------------------------------------------
+def test_trace_replay_caps_semantics():
+    rp = TraceReplay(_tiny_trace())
+    assert isinstance(rp, LifecycleModel)
+    cids = np.array([0, 1, 2, 3])
+    # partial cap replayed; absent clients get full work; recorded 0 = 0
+    caps = rp.step_caps(123, 0, cids, 10)
+    assert caps.tolist() == [10, 4, 10, 10]
+    assert caps.dtype == np.int32
+    assert rp.step_caps(0, 1, cids, 10).tolist() == [0, 10, 10, 10]
+    assert rp.step_caps(0, 2, cids, 10).tolist() == [10, 10, 10, 10]
+    # seed is ignored: a trace has no randomness left
+    np.testing.assert_array_equal(rp.step_caps(0, 0, cids, 10),
+                                  rp.step_caps(999, 0, cids, 10))
+
+
+def test_trace_replay_h_mapping():
+    rp = TraceReplay(_tiny_trace())  # recorded H = 10; c3 complete, c1 = 4
+    cids = np.array([1, 3])
+    # larger replay H: recorded-complete maps to the NEW H, partial stays
+    assert rp.step_caps(0, 0, cids, 20).tolist() == [4, 20]
+    # smaller replay H: partial caps clip
+    assert rp.step_caps(0, 0, cids, 3).tolist() == [3, 3]
+
+
+def test_trace_replay_out_of_range_policies():
+    tr = _tiny_trace()
+    cids = np.array([1])
+    with pytest.raises(IndexError, match="policy='raise'"):
+        TraceReplay(tr).step_caps(0, 3, cids, 10)
+    with pytest.raises(IndexError, match="policy='raise'"):
+        TraceReplay(tr).step_caps(0, -1, cids, 10)
+    # wrap: t=3 -> 0 (c1's partial 4); t=4 -> 1 (c1 absent)
+    wrap = TraceReplay(tr, policy="wrap")
+    assert wrap.step_caps(0, 3, cids, 10).tolist() == [4]
+    assert wrap.step_caps(0, 4, cids, 10).tolist() == [10]
+    # clamp: everything past the horizon holds round 2 (no events)
+    clamp = TraceReplay(tr, policy="clamp")
+    assert clamp.step_caps(0, 99, cids, 10).tolist() == [10]
+    assert clamp.step_caps(0, -5, cids, 10).tolist() == [4]
+    with pytest.raises(ValueError, match="policy"):
+        TraceReplay(tr, policy="extrapolate")
+    with pytest.raises(TypeError, match="FleetTrace"):
+        TraceReplay("not a trace")
+
+
+def test_trace_replay_rejects_empty_trace():
+    empty = FleetTrace(n_rounds=0, n_clients=1, local_steps=5, m=[],
+                       ev_round=[], ev_client=[], ev_steps=[])
+    with pytest.raises(ValueError, match="empty trace"):
+        TraceReplay(empty)
+    with pytest.raises(ValueError, match="empty trace"):
+        TraceAvailability(empty)
+
+
+def test_trace_availability_edges():
+    tr = _tiny_trace()           # m = [2, 1, 3]
+    av = TraceAvailability(tr)
+    assert isinstance(av, AvailabilityModel)
+    # peak is the exact max over recorded rounds, not a declared bound
+    assert av.peak == 3 == tr.peak_m
+    assert [av.m_at(t) for t in range(3)] == [2, 1, 3]
+    assert [int(av.m_device(t)) for t in range(3)] == [2, 1, 3]
+    with pytest.raises(IndexError, match="policy='raise'"):
+        av.m_at(3)
+    wrap = TraceAvailability(tr, policy="wrap")
+    assert wrap.m_at(4) == 1 and int(wrap.m_device(4)) == 1
+    clamp = TraceAvailability(tr, policy="clamp")
+    assert clamp.m_at(99) == 3 and int(clamp.m_device(99)) == 3
+    assert clamp.m_at(-1) == 2
+    # a trace with no devices at any round cannot drive availability
+    dead = FleetTrace(n_rounds=2, n_clients=1, local_steps=5, m=[0, 0],
+                      ev_round=[], ev_client=[], ev_steps=[])
+    with pytest.raises(ValueError, match="at least one device"):
+        TraceAvailability(dead)
+
+
+def test_trace_spec_validation():
+    tr = _tiny_trace()
+    with pytest.raises(ValueError, match="exactly one"):
+        TraceSpec()
+    with pytest.raises(ValueError, match="exactly one"):
+        TraceSpec(trace=tr, path="x.json")
+    with pytest.raises(TypeError, match="FleetTrace"):
+        TraceSpec(trace="x.json")
+    with pytest.raises(ValueError, match="policy"):
+        TraceSpec(trace=tr, policy="loop")
+    spec = TraceSpec(trace=tr)
+    assert spec.replay() is spec.replay()          # cached
+    assert spec.availability().peak == 3
+    with pytest.raises(TypeError, match="TraceSpec"):
+        ScenarioSpec(trace=tr)                     # raw trace: wrap it
+
+
+def test_trace_spec_path_loads_lazily(tmp_path):
+    stem = os.path.join(str(tmp_path), "t")
+    _tiny_trace().save(stem)
+    spec = TraceSpec(path=stem)
+    assert spec.load() is spec.load()
+    assert spec.replay().step_caps(0, 0, np.array([1]), 10).tolist() == [4]
+    scen = ScenarioSpec(trace=spec)
+    assert not scen.null
+    assert any(isinstance(m, TraceReplay) for m in scen.models)
+
+
+# ---------------------------------------------------------------------------
+# TraceRecorder: what the trainer would see is what the trace stores
+# ---------------------------------------------------------------------------
+def test_recorder_matches_runtime_caps():
+    n_rounds = 9
+    trace = _record(n_rounds)
+    assert trace.n_clients == len(CLIENTS)
+    assert trace.local_steps == RCFG.local_steps
+    assert trace.n_events == n_rounds * RCFG.clients_per_round
+    # latency recorded (LatencyStragglers exposes step_times): finite
+    assert np.all(np.isfinite(trace.ev_latency))
+    # replaying the recorded rounds through a fresh runtime reproduces the
+    # recorder's caps exactly — on the same cohorts
+    ds = FederatedDataset([dict(c) for c in CLIENTS], seed=1)
+    sampler = DeviceUniformSampler(ds.population(), RCFG.clients_per_round,
+                                   seed=2)
+    rt = ScenarioRuntime(SPEC, RCFG.local_steps)
+    rp = TraceReplay(trace)
+    for t in range(n_rounds):
+        idx, _ = sampler.sample(t)
+        cids = np.asarray(idx, np.int64)
+        np.testing.assert_array_equal(rt.steps_for(t, cids),
+                                      rp.step_caps(0, t, cids,
+                                                   RCFG.local_steps))
+
+
+def test_recorder_without_stragglers_logs_nan_latency():
+    trace = _record(4, spec=ScenarioSpec(dropout=UniformDropout(0.5),
+                                         seed=3))
+    assert trace.n_events > 0 and np.all(np.isnan(trace.ev_latency))
+    with pytest.raises(TypeError, match="ScenarioSpec"):
+        TraceRecorder("not a spec", 5)
+    with pytest.raises(ValueError, match="local_steps"):
+        TraceRecorder(SPEC, 0)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole certification: record -> replay bit-equal on every plane
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("driver", DRIVERS + ("streaming-bucketed",))
+def test_record_replay_bit_equal_across_planes(driver):
+    trace = _record(12)
+    replay = ScenarioSpec(trace=TraceSpec(trace=trace))
+    syn = run_trajectory(driver, fedmom(eta=1.0, beta=0.9), RCFG, CLIENTS,
+                         12, scenario=SPEC, chunk_rounds=5)
+    rep = run_trajectory(driver, fedmom(eta=1.0, beta=0.9), RCFG, CLIENTS,
+                         12, scenario=replay, chunk_rounds=5)
+    assert_bitwise_trajectory(rep, syn)
+
+
+def test_replay_from_disk_bit_equal(tmp_path):
+    trace = _record(10)
+    loaded = FleetTrace.load(trace.save(os.path.join(str(tmp_path), "t")))
+    syn = run_trajectory("scanned", fedmom(eta=1.0, beta=0.9), RCFG,
+                         CLIENTS, 10, scenario=SPEC, chunk_rounds=4)
+    rep = run_trajectory("scanned", fedmom(eta=1.0, beta=0.9), RCFG,
+                         CLIENTS, 10,
+                         scenario=ScenarioSpec(trace=TraceSpec(trace=loaded)),
+                         chunk_rounds=4)
+    assert_bitwise_trajectory(rep, syn)
+
+
+def test_replay_resume_bit_equal(tmp_path):
+    trace = _record(12)
+    replay = ScenarioSpec(trace=TraceSpec(trace=trace))
+    full = run_trajectory("streaming", fedmom(eta=1.0, beta=0.9), RCFG,
+                          CLIENTS, 12, scenario=replay, chunk_rounds=5)
+    stitched = run_trajectory("streaming", fedmom(eta=1.0, beta=0.9), RCFG,
+                              CLIENTS, 12, scenario=replay, chunk_rounds=5,
+                              resume_at=7, tmp_path=tmp_path)
+    assert_bitwise_trajectory(stitched, full)
+
+
+# ---------------------------------------------------------------------------
+# DiskShardProvider: on-disk corpora, both layouts
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ("npy-packed", "npz-per-client"))
+def test_disk_provider_round_trips_bitwise(tmp_path, layout):
+    src = ZipfLinregProvider(30, dim=4, n_min=2, n_max=16, seed=5)
+    root = write_disk_corpus(os.path.join(str(tmp_path), layout), src,
+                             layout=layout)
+    disk = DiskShardProvider(root)
+    assert isinstance(disk, ShardProvider)
+    assert disk.layout == layout and disk.n_clients == 30
+    np.testing.assert_array_equal(disk.counts, src.counts)
+    assert set(disk.fields) == set(src.fields)
+    for cid in range(30):
+        want = src.shard(cid)
+        got = disk.shard(cid)
+        for name in want:
+            np.testing.assert_array_equal(got[name], want[name])
+    # pure function of client_id: an eviction-refetch is bit-identical
+    a, b = disk.shard(7), disk.shard(7)
+    for name in a:
+        np.testing.assert_array_equal(a[name], b[name])
+    with pytest.raises(IndexError, match="outside corpus"):
+        disk.shard(30)
+
+
+def test_disk_provider_schema_errors(tmp_path):
+    with pytest.raises(CorpusSchemaError, match="neither"):
+        DiskShardProvider(str(tmp_path))            # empty dir
+    src = ZipfLinregProvider(4, dim=2, n_min=2, n_max=4, seed=0)
+    with pytest.raises(ValueError, match="layout"):
+        write_disk_corpus(os.path.join(str(tmp_path), "x"), src,
+                          layout="tar")
+    root = write_disk_corpus(os.path.join(str(tmp_path), "c"), src,
+                             layout="npz-per-client")
+    mpath = os.path.join(root, "manifest.json")
+    blob = json.load(open(mpath))
+    assert blob["format"] == CORPUS_FORMAT
+    assert blob["version"] == CORPUS_VERSION
+    for field, value, msg in (("format", "other", "manifest"),
+                              ("version", CORPUS_VERSION + 1, "version"),
+                              ("layout", "tar", "layout"),
+                              ("n_clients", 7, "counts")):
+        with open(mpath, "w") as f:
+            json.dump({**blob, field: value}, f)
+    # last corruption standing: n_clients=7 vs 4 counts
+        with pytest.raises(CorpusSchemaError, match=msg):
+            DiskShardProvider(root)
+    with open(mpath, "w") as f:
+        json.dump(blob, f)
+    os.remove(os.path.join(root, "shards", "3.npz"))
+    with pytest.raises(CorpusSchemaError, match="missing shard"):
+        DiskShardProvider(root)
+
+
+def test_disk_backed_training_bit_equal_with_evictions(tmp_path):
+    """The acceptance certification: a streaming run over a DISK corpus —
+    with a cache small enough to force eviction-refetch churn — is
+    bit-equal to the same corpus served by the originating provider."""
+    src = ZipfLinregProvider(12, dim=5, n_min=4, n_max=16, seed=3)
+    root = write_disk_corpus(os.path.join(str(tmp_path), "corpus"), src,
+                             layout="npy-packed")
+
+    def train(provider):
+        ds = StreamingFederatedDataset.from_provider(provider, seed=9)
+        rcfg = RoundConfig(clients_per_round=3, local_steps=4, lr=0.05)
+        opt = fedmom(eta=1.0, beta=0.9)
+        tr = FederatedTrainer(
+            loss_fn=linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
+            sampler=DeviceUniformSampler(ds.population(), 3, seed=2),
+            state=opt.init(linreg_params()), local_batch=4)
+        # single-tier layout with fewer slots than clients: chunks past
+        # the first must evict and REFETCH from disk (the purity claim)
+        plan = ExecutionPlan(plane="streaming", chunk_rounds=3,
+                             cache=CacheSpec(clients=9, tiers=1))
+        hist = [r for r in tr.run(12, plan=plan, verbose=False)
+                if "event" not in r]
+        assert tr.stream_cache.evictions > 0   # churn actually happened
+        return hist, tr.state
+
+    got = train(DiskShardProvider(root))
+    want = train(src)
+    assert [r["loss"] for r in got[0]] == [r["loss"] for r in want[0]]
+    np.testing.assert_array_equal(flat_w(got[1]), flat_w(want[1]))
+
+
+# ---------------------------------------------------------------------------
+# LEAF ingestion (committed fixture: scripts/make_leaf_fixture.py)
+# ---------------------------------------------------------------------------
+def test_leaf_fixture_parses():
+    counts, fields, shards, users = parse_leaf_dir(LEAF_DIR)
+    assert len(users) == 12 and users[0] == "u_000"
+    assert counts.sum() == sum(len(s["y"]) for s in shards)
+    (tail_x, dt_x), (tail_y, dt_y) = fields["x"], fields["y"]
+    assert tail_x == (3,) and dt_x == np.float32
+    assert tail_y == () and dt_y == np.float32
+    assert shards[0]["x"].shape == (int(counts[0]), 3)
+
+
+def test_leaf_provider_and_conversion_agree(tmp_path):
+    leaf = DiskShardProvider.from_leaf(LEAF_DIR)
+    assert leaf.layout == "leaf-json" and len(leaf.users) == 12
+    for layout in ("npy-packed", "npz-per-client"):
+        out = leaf_to_corpus(LEAF_DIR, os.path.join(str(tmp_path), layout),
+                             layout=layout)
+        conv = DiskShardProvider(out)
+        np.testing.assert_array_equal(conv.counts, leaf.counts)
+        for cid in range(leaf.n_clients):
+            a, b = leaf.shard(cid), conv.shard(cid)
+            for name in a:
+                np.testing.assert_array_equal(a[name], b[name])
+
+
+def test_leaf_validation(tmp_path):
+    with pytest.raises(CorpusSchemaError, match="no LEAF json"):
+        parse_leaf_dir(str(tmp_path))
+    bad = {"users": ["u"], "num_samples": [3],
+           "user_data": {"u": {"x": [[1.0], [2.0]], "y": [0.0, 1.0]}}}
+    with open(os.path.join(str(tmp_path), "all_data_0.json"), "w") as f:
+        json.dump(bad, f)
+    with pytest.raises(CorpusSchemaError, match="num_samples"):
+        parse_leaf_dir(str(tmp_path))
+    del bad["user_data"]
+    with open(os.path.join(str(tmp_path), "all_data_0.json"), "w") as f:
+        json.dump(bad, f)
+    with pytest.raises(CorpusSchemaError, match="user_data"):
+        parse_leaf_dir(str(tmp_path))
+
+
+def test_leaf_fixture_trains():
+    provider = DiskShardProvider.from_leaf(LEAF_DIR)
+    ds = StreamingFederatedDataset.from_provider(provider, seed=1)
+    rcfg = RoundConfig(clients_per_round=3, local_steps=4, lr=0.05)
+    opt = fedmom(eta=1.0, beta=0.9)
+    tr = FederatedTrainer(
+        loss_fn=linreg_loss, server_opt=opt, rcfg=rcfg, dataset=ds,
+        sampler=DeviceUniformSampler(ds.population(), 3, seed=2),
+        state=opt.init({"w": np.zeros(3, np.float32),
+                        "b": np.zeros((), np.float32)}), local_batch=2)
+    plan = ExecutionPlan(plane="streaming", chunk_rounds=4,
+                         cache=CacheSpec(clients=9))
+    hist = [r for r in tr.run(8, plan=plan, verbose=False)
+            if "event" not in r]
+    assert len(hist) == 8 and all(np.isfinite(r["loss"]) for r in hist)
+
+
+# ---------------------------------------------------------------------------
+# validate knob on provider-backed datasets
+# ---------------------------------------------------------------------------
+class _FlakyProvider:
+    """Honest on the first fetch of each client, corrupt afterwards —
+    distinguishes validate='first' (trusts refetches) from 'always'."""
+
+    def __init__(self, base):
+        self.base = base
+        self.fetches = {}
+
+    n_clients = property(lambda self: self.base.n_clients)
+    counts = property(lambda self: self.base.counts)
+    fields = property(lambda self: self.base.fields)
+
+    def shard(self, cid):
+        n = self.fetches.get(cid, 0)
+        self.fetches[cid] = n + 1
+        s = self.base.shard(cid)
+        if n > 0:  # corrupt: one row short of the declared count
+            return {k: v[:-1] if v.ndim else v for k, v in s.items()}
+        return s
+
+
+def test_validate_knob_modes():
+    base = ZipfLinregProvider(6, dim=3, n_min=3, n_max=8, seed=0)
+    with pytest.raises(ValueError, match="validate"):
+        StreamingFederatedDataset.from_provider(base, validate="maybe")
+
+    # default 'first': the first fetch is checked, refetches are trusted
+    ds = StreamingFederatedDataset.from_provider(_FlakyProvider(base))
+    assert ds.validate == "first"
+    ds.shard(2)
+    ds.shard(2)                          # corrupt but unchecked: no raise
+
+    # 'always': every fetch is checked — the corrupt refetch raises
+    ds = StreamingFederatedDataset.from_provider(_FlakyProvider(base),
+                                                 validate="always")
+    ds.shard(2)
+    with pytest.raises(CorpusSchemaError, match="provider shard"):
+        ds.shard(2)
+
+    # 'never': even a first fetch that lies about counts sails through
+    class Lying:
+        n_clients = base.n_clients
+        counts = base.counts + 1
+        fields = base.fields
+
+        def shard(self, cid):
+            return base.shard(cid)
+
+    ds = StreamingFederatedDataset.from_provider(Lying(), validate="never")
+    ds.shard(0)
+    ds = StreamingFederatedDataset.from_provider(Lying())
+    with pytest.raises(CorpusSchemaError, match="provider shard"):
+        ds.shard(0)                      # default still catches it
+
+
+# ---------------------------------------------------------------------------
+# per-tier cache counters
+# ---------------------------------------------------------------------------
+def test_shard_cache_tier_counters():
+    # counts spanning three power-of-two tiers; the 16-row tier holds 5
+    # clients against 3 slots, so churn there must evict
+    data = [{"x": np.random.default_rng(c).normal(
+                 size=(n, 3)).astype(np.float32),
+             "y": np.zeros(n, np.float32)}
+            for c, n in enumerate([4, 6, 8, 12, 14, 16, 13, 15])]
+    ds = StreamingFederatedDataset(data, seed=0)
+    cache = ShardCache(ds, capacity_clients=3)
+    assert len(cache.tier_hits) == cache.layout.n_tiers >= 2
+    cache.ensure([0, 1, 3])              # all misses
+    cache.ensure([0, 3, 5])              # 2 hits, 1 miss
+    cache.ensure([4, 6, 7])              # tier full: misses must evict
+    assert sum(cache.tier_hits) == cache.hits > 0
+    assert sum(cache.tier_misses) == cache.misses > 0
+    assert sum(cache.tier_evictions) == cache.evictions > 0
+    assert all(v >= 0 for v in
+               cache.tier_hits + cache.tier_misses + cache.tier_evictions)
+
+
+def test_streaming_metrics_carry_tier_counters():
+    clients = make_clients(n=8, lo=4, hi=32)   # multi-tier n_k spread
+    ds = FederatedDataset([dict(c) for c in clients], seed=1)
+    opt = fedmom(eta=1.0, beta=0.9)
+    tr = FederatedTrainer(
+        loss_fn=linreg_loss, server_opt=opt, rcfg=RCFG, dataset=ds,
+        sampler=DeviceUniformSampler(ds.population(), 4, seed=2),
+        state=opt.init(linreg_params()), local_batch=4)
+    hist = tr.run(8, plan=ExecutionPlan(plane="streaming", chunk_rounds=4,
+                                        cache=CacheSpec(clients=8)),
+                  verbose=False)
+    rows = [r for r in hist if "cache_tier_hits" in r]
+    assert rows, "streaming chunk records must carry cache_tier_* metrics"
+    cache = tr.stream_cache
+    n_tiers = cache.layout.n_tiers
+    for key in ("cache_tier_hits", "cache_tier_misses",
+                "cache_tier_evictions"):
+        assert all(len(r[key]) == n_tiers for r in rows)
+    # per-tier deltas attribute the SAME churn the cache-wide counters saw
+    assert sum(sum(r["cache_tier_hits"]) for r in rows) == \
+        sum(r["cache_hits"] for r in rows) == cache.hits
+    assert sum(sum(r["cache_tier_misses"]) for r in rows) == \
+        sum(r["cache_misses"] for r in rows) == cache.misses
+    assert sum(sum(r["cache_tier_evictions"]) for r in rows) == \
+        sum(r["cache_evictions"] for r in rows) == cache.evictions
