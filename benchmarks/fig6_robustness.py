@@ -287,6 +287,24 @@ def trace_lane(rounds: int = 48, n_clients: int = 50_000,
     out["trace"] = {"rounds": rounds,
                     "events_per_trace": int(traces[rates[0]].n_events),
                     "peak_m": int(traces[rates[0]].peak_m)}
+    # per-trace fleet analytics (FleetTrace.summarize): completion
+    # histogram + churn/round summary, printed per dropout rate and kept
+    # on the snapshot so the recorded conditions are auditable
+    out["trace"]["summaries"] = {}
+    for rate in rates:
+        summ = traces[rate].summarize()
+        out["trace"]["summaries"][str(rate)] = summ
+        if verbose:
+            hist = summ["completion_hist"]
+            jpr = summ["joined_per_round"]
+            print(f"[fig6-trace] rate={rate}: {summ['participants']} "
+                  f"participants over {summ['n_events']} events — "
+                  f"complete/mixed/partial = {hist['all_complete']}/"
+                  f"{hist['mixed']}/{hist['all_partial']}, "
+                  f"joined/round {jpr['mean']:.1f} "
+                  f"[{jpr['min']}, {jpr['max']}], "
+                  f"complete-frac {summ['complete_frac_mean']:.3f}, "
+                  f"turnover {summ['turnover_mean']:.3f}")
     drift_bits = None
     for label, opt_fn in (("fedavg", lambda: fedavg(eta=eta)),
                           ("fedmom", lambda: fedmom(eta=eta, beta=0.9))):

@@ -47,6 +47,20 @@ masked and open final params, the ring-cancellation guarantee):
 
     PYTHONPATH=src python -m benchmarks.perf_compare --secure \
         [--rounds 60] [--m 8] [--smoke] [--emit-bench BENCH_8.json]
+
+Mesh lane: the mesh-sharded round engine (``ExecutionPlan(mesh=
+MeshSpec(devices=n))``) at increasing data-parallel device counts —
+ms/round per count at equal trajectory, on forced host devices.  The
+``--mesh`` branch merges ``--xla_force_host_platform_device_count=8`` and
+the XLA latency-hiding-scheduler flags into ``XLA_FLAGS`` before jax
+initializes (user-set force counts are respected), so the lane runs on any
+host.  Host-CPU collectives are emulation, not hardware interconnect, so
+the snapshot records ms/round per device count without asserting a
+speedup — the numbers are the scaling SHAPE record, the trajectory-drift
+field is the correctness record:
+
+    PYTHONPATH=src python -m benchmarks.perf_compare --mesh \
+        [--rounds 60] [--m 8] [--smoke] [--emit-bench BENCH_10.json]
 """
 from __future__ import annotations
 
@@ -553,6 +567,70 @@ def bench_secure(argv):
     return snap
 
 
+def bench_mesh(argv):
+    """ms/round vs data-parallel device count on the mesh-sharded device
+    plane, at equal trajectory.
+
+    The 1-device row is ``mesh=None`` — the pre-mesh engine, the baseline
+    every sharded row's final loss is drift-checked against (the psum
+    reassociates the fp32 cohort reduction, so the check is a tolerance,
+    not bitwise).  No speedup assert: on forced host devices the psum is
+    a CPU-emulated collective whose cost swamps the tiny per-shard
+    compute — the lane records the scaling shape, real wins need real
+    chips.  Returns/emits the BENCH_10.json snapshot."""
+    import os
+
+    import jax
+
+    from repro.launch.mesh import MeshSpec
+    from repro.launch.plan import ExecutionPlan
+
+    args = _lane_args(argv, "--mesh", smoke=True)
+    if args.m == 2:
+        args.m = 8              # parser default is the tiny driver lane's;
+        # this lane wants a cohort every tested mesh size divides
+    if args.smoke:
+        args.model, args.rounds, args.chunk_rounds = "linreg", 12, 4
+    counts = [n for n in (1, 2, 4, 8)
+              if n <= jax.device_count() and args.m % n == 0]
+
+    def lane(n):
+        plan = ExecutionPlan(
+            plane="device", chunk_rounds=args.chunk_rounds,
+            mesh=None if n == 1 else MeshSpec(devices=n))
+        return lambda tr, k: tr.run(k, plan=plan, verbose=False)
+
+    ms, final, _ = _time_lanes(args, {f"{n}-dev": lane(n) for n in counts})
+    drift = max(abs(final[f"{n}-dev"] - final["1-dev"]) for n in counts)
+    assert drift < 1e-4, f"sharded trajectories diverged: {final}"
+    base = ms["1-dev"]
+    rel = {n: ms[f"{n}-dev"] / base for n in counts}
+    print(f"  mesh-sharded   cohort M={args.m} over {counts} device(s): "
+          + ", ".join(f"{n}-dev {rel[n]:.2f}x" for n in counts)
+          + f" vs 1-dev ms/round; final-loss drift {drift:.2e} "
+          f"(host-emulated collectives — shape record, not a speedup "
+          f"claim)")
+    snap = {
+        "bench": "mesh_sharded_round",
+        "config": {"model": args.model, "rounds": args.rounds,
+                   "chunk_rounds": args.chunk_rounds, "m": args.m,
+                   "local_steps": args.local_steps,
+                   "device_counts": counts,
+                   "xla_flags": os.environ.get("XLA_FLAGS", ""),
+                   "smoke": bool(getattr(args, "smoke", False))},
+        "ms_per_round": {str(n): round(ms[f"{n}-dev"] * 1e3, 4)
+                         for n in counts},
+        "relative_to_1dev": {str(n): round(rel[n], 4) for n in counts},
+        "final_loss_drift": float(drift),
+    }
+    if getattr(args, "emit_bench", None):
+        with open(args.emit_bench, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"  bench snapshot -> {args.emit_bench}")
+    return snap
+
+
 if __name__ == "__main__":
     if "--drivers" in sys.argv[1:]:
         bench_drivers(sys.argv[1:])
@@ -560,5 +638,21 @@ if __name__ == "__main__":
         bench_data_plane(sys.argv[1:])
     elif "--secure" in sys.argv[1:]:
         bench_secure(sys.argv[1:])
+    elif "--mesh" in sys.argv[1:]:
+        # XLA_FLAGS must be final before anything imports jax: force 8
+        # host devices when the user didn't pin a count, and turn on the
+        # latency-hiding scheduler so the psum overlaps with per-shard
+        # compute where XLA can manage it (async collectives are default-on
+        # in this XLA; its old opt-in flag no longer parses)
+        import os
+
+        _flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in _flags:
+            _flags += " --xla_force_host_platform_device_count=8"
+        _f = "--xla_gpu_enable_latency_hiding_scheduler=true"
+        if _f not in _flags:
+            _flags += " " + _f
+        os.environ["XLA_FLAGS"] = _flags.strip()
+        bench_mesh(sys.argv[1:])
     else:
         main(sys.argv[1:] or ["results/hillclimb.jsonl"])

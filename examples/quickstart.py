@@ -41,6 +41,7 @@ from repro.core import (
 )
 from repro.data import (FederatedDataset, StreamingFederatedDataset,
                         synthetic_femnist)
+from repro.launch.mesh import MeshSpec
 from repro.launch.plan import CacheSpec, ExecutionPlan
 from repro.launch.train import FederatedTrainer
 from repro.models import small
@@ -63,6 +64,19 @@ auto rule: packed_nbytes <= budget -> device; else chunk working set
 (clients_per_round * chunk_rounds clients, priced at the ACTUAL tiered
 cache bytes) <= budget -> streaming; else scanned.  Fused planes need a
 Device* sampler (DeviceSampleable / KeyedReplayable capabilities).
+
+--mesh-devices N shards any fused plane over an N-way data mesh
+(ExecutionPlan(mesh=MeshSpec(devices=N))): the round cohort, its step
+masks/weights and the minibatch index stacks split across devices, the
+weighted delta aggregates with a psum (server state replicated), the
+streaming plane runs one full-capacity cache shard per device
+(client -> shard by cid % N), and the auto rule re-prices the device
+plane at ceil(packed/N) per device — the flip is audited in the plan
+log with mesh_shape / per_device_nbytes.  Same trajectory within fp32
+reduction-order tolerance (secure-agg stays bit-exact: uint32 ring).
+Needs N visible devices: on CPU, set
+XLA_FLAGS=--xla_force_host_platform_device_count=N.  Scaling-shape
+record: benchmarks/perf_compare.py --mesh --emit-bench BENCH_10.json.
 
 streaming cache slots are n_k-TIERED (CacheSpec.tiers / --cache-tiers):
 clients bucket into power-of-two size tiers so small clients never pay
@@ -169,6 +183,12 @@ def main():
     ap.add_argument("--bucketed", action="store_true",
                     help="n_k-bucketed compute: one sized launch per "
                          "occupied cache tier (streaming plane only)")
+    ap.add_argument("--mesh-devices", type=int, default=None, metavar="N",
+                    help="shard the fused planes over an N-way data mesh "
+                         "(cohort split + psum aggregation; needs N "
+                         "visible devices — on CPU force them with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     ap.add_argument("--fused-server", action="store_true",
                     help="route FedMom through the fused Pallas update "
                          "(compiled on TPU; interpret mode — slower — on "
@@ -245,12 +265,14 @@ def main():
     secure = (SecureAggSpec(masked=True, seed=0,
                             frac_bits=args.secure_frac_bits)
               if args.secure_agg else None)
+    mesh = (MeshSpec(devices=args.mesh_devices)
+            if args.mesh_devices is not None else None)
     plan = ExecutionPlan(plane=plane, chunk_rounds=args.chunk_rounds,
                          cache=CacheSpec(clients=args.cache_clients,
                                          tiers=args.cache_tiers,
                                          bucketed=args.bucketed),
                          memory_budget_bytes=budget, scenario=scenario,
-                         secure=secure)
+                         secure=secure, mesh=mesh)
 
     if args.provider or args.leaf_dir:
         provider = (DiskShardProvider(args.leaf_dir) if args.leaf_dir

@@ -36,6 +36,15 @@ The ``dataset`` of ``scan_rounds_ondevice`` is anything honoring the
 ``data.stream.CacheView`` over a bounded shard cache (data plane v2,
 ``plan="streaming"`` — the fourth execution plane).  Both draw the same
 keyed minibatch indices, so every path trains the same trajectory.
+
+Mesh sharding: no scan body names a mesh axis.  Under an active data-
+parallel mesh context (``ExecutionPlan(mesh=MeshSpec(...))`` activates it
+around the plane dispatch), the in-scan ``round_step`` call itself enters
+the explicit ``shard_map``+``psum`` plane — the body's gathered [C, H, ...]
+cohort stack splits across devices at that boundary and the reduced delta
+comes back replicated, so the carried ``ServerState`` is replicated on
+every device and the scan structure here is unchanged.  ``mesh=None`` runs
+this file's code on the pre-mesh single-device path bit for bit.
 """
 from __future__ import annotations
 

@@ -25,13 +25,16 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import client as client_lib
 from repro.core import secure_agg
 from repro.core.secure_agg import SecureAggSpec
 from repro.core.server_opt import ServerOpt, ServerState
 from repro.optim import local as local_opt_lib
-from repro.sharding import shard_tree, spmd_client_axes
+from repro.sharding import (client_axis_size, current_mesh, shard_tree,
+                            spmd_client_axes)
 
 
 @dataclass(frozen=True)
@@ -86,6 +89,64 @@ def _cast_tree(tree, dtype):
     return jax.tree.map(lambda x: x.astype(dtype), tree)
 
 
+def _client_mesh_axes() -> tuple:
+    """The live mesh axes the cohort tiles, as a tuple (() outside a mesh)."""
+    entry = spmd_client_axes()
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def _shard_map_round(loss_fn, opt, w_c, batches, weights, step_mask, lr,
+                     mesh, axes, ddt):
+    """Mesh-sharded step 3+4: the cohort splits into contiguous per-device
+    blocks under ``shard_map`` over the client mesh axes; each shard vmaps
+    its C/n clients and reduces its own weighted-delta partial in fp32, and
+    a ``psum`` over those axes makes the delta replicated — the server
+    update then runs identically on every device.  Per-shard loss streams
+    stitch back to cohort order through the sharded out_spec (contiguous
+    block splitting preserves the global client order).
+
+    fp32 reduction-order caveat: the cohort einsum is reassociated
+    (per-shard partial sums, then a cross-device psum tree), so the delta
+    is tolerance-equal — not bit-equal — to the single-device plane.
+    tests/test_mesh_shard.py certifies the trajectory within fp32 noise;
+    the secure path never routes here (its uint32 ring reduction is exact
+    and order-independent, so it stays on the GSPMD plane bit-equal).
+    """
+    lead = P(*axes)
+
+    def body(w_rep, lr_rep, ws, bs, ms):
+        def one(p, b, m=None):
+            return client_lib.local_update(
+                loss_fn, p, b, lr_rep, opt, step_mask=m)
+
+        C_s = ws.shape[0]
+        local0 = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (C_s,) + p.shape), w_rep)
+        final, losses = (jax.vmap(one)(local0, bs) if ms is None
+                         else jax.vmap(one)(local0, bs, ms))
+        part = jax.tree.map(
+            lambda w0, wk: jnp.einsum(
+                "c,c...->...", ws, w0[None] - wk,
+                preferred_element_type=jnp.float32),
+            w_rep, final)
+        return jax.lax.psum(part, axes), losses
+
+    rep = jax.tree.map(lambda _: P(), w_c)
+    if step_mask is None:
+        fn = shard_map(
+            lambda w, l, ws, bs: body(w, l, ws, bs, None), mesh=mesh,
+            in_specs=(rep, P(), lead, lead), out_specs=(rep, lead))
+        delta, losses = fn(w_c, lr, weights, batches)
+    else:
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(rep, P(), lead, lead, lead), out_specs=(rep, lead))
+        delta, losses = fn(w_c, lr, weights, batches, step_mask)
+    return jax.tree.map(lambda d: d.astype(ddt), delta), losses
+
+
 def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
                batches: Any, weights: jax.Array, rcfg: RoundConfig,
                param_axes: Optional[Any] = None,
@@ -122,33 +183,49 @@ def round_step(loss_fn, server_opt: ServerOpt, state: ServerState,
         return client_lib.local_update(loss_fn, p, b, lr, opt, step_mask=m)
 
     if rcfg.placement == "mesh":
-        local0 = jax.tree.map(
-            lambda p: jnp.broadcast_to(p[None], (C,) + p.shape), w_c)
-        if param_axes is not None:
-            local0 = shard_tree(local0, param_axes, prefix=("clients",))
-        spmd = spmd_client_axes()
-        vmapped = jax.vmap(one_client, spmd_axis_name=spmd) if spmd \
-            else jax.vmap(one_client)
-        if step_mask is None:
-            final, losses = vmapped(local0, batches)
+        mesh = current_mesh()
+        axes = _client_mesh_axes()
+        # explicit shard_map plane: only when the live mesh is a pure
+        # data-parallel mesh over exactly the client axes (a 'model' axis
+        # would need param sharding inside the shard, which is the GSPMD
+        # path's job), the cohort divides evenly into contiguous per-device
+        # blocks, and aggregation is open (secure's [C, C, ...] pairwise
+        # mask grid must see the whole cohort; its uint32 ring reduction is
+        # also exact under GSPMD, so it loses nothing by staying there)
+        if (rcfg.secure is None and mesh is not None and axes
+                and set(mesh.axis_names) == set(axes)
+                and C % client_axis_size() == 0):
+            delta, losses = _shard_map_round(
+                loss_fn, opt, w_c, batches, weights, step_mask, lr,
+                mesh, axes, ddt)
         else:
-            final, losses = vmapped(local0, batches, step_mask)
-        if param_axes is not None:
-            final = shard_tree(final, param_axes, prefix=("clients",))
-        # products and accumulation stay fp32 no matter delta_dtype: rounding
-        # the n_k/n weights (or the per-client diffs) to bf16 BEFORE the
-        # reduction leaks weight mass under skewed n_k; only the final result
-        # is rounded to ddt, so the bf16 delta is the correctly-rounded fp32
-        # reduction
-        if rcfg.secure is not None:
-            delta = _secure_delta(rcfg.secure, w_c, final, weights,
-                                  step_mask, state.t, ddt)
-        else:
-            delta = jax.tree.map(
-                lambda w0, wk: jnp.einsum(
-                    "c,c...->...", weights, w0[None] - wk,
-                    preferred_element_type=jnp.float32).astype(ddt),
-                w_c, final)
+            local0 = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (C,) + p.shape), w_c)
+            if param_axes is not None:
+                local0 = shard_tree(local0, param_axes, prefix=("clients",))
+            spmd = spmd_client_axes()
+            vmapped = jax.vmap(one_client, spmd_axis_name=spmd) if spmd \
+                else jax.vmap(one_client)
+            if step_mask is None:
+                final, losses = vmapped(local0, batches)
+            else:
+                final, losses = vmapped(local0, batches, step_mask)
+            if param_axes is not None:
+                final = shard_tree(final, param_axes, prefix=("clients",))
+            # products and accumulation stay fp32 no matter delta_dtype:
+            # rounding the n_k/n weights (or the per-client diffs) to bf16
+            # BEFORE the reduction leaks weight mass under skewed n_k; only
+            # the final result is rounded to ddt, so the bf16 delta is the
+            # correctly-rounded fp32 reduction
+            if rcfg.secure is not None:
+                delta = _secure_delta(rcfg.secure, w_c, final, weights,
+                                      step_mask, state.t, ddt)
+            else:
+                delta = jax.tree.map(
+                    lambda w0, wk: jnp.einsum(
+                        "c,c...->...", weights, w0[None] - wk,
+                        preferred_element_type=jnp.float32).astype(ddt),
+                    w_c, final)
     elif rcfg.placement == "scan":
         if param_axes is not None:
             # scan placement promises FSDP-sharded params: constrain the

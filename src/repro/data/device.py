@@ -76,7 +76,13 @@ class DeviceFederatedDataset:
         Dtype-aware: each field keeps its own dtype (int32 token streams
         next to float32 images).  With ``shard_clients`` and an active mesh
         context, leaves are placed with the 'clients' logical axis sharded
-        over the mesh (replicated otherwise).
+        over the mesh (replicated otherwise) — under
+        ``ExecutionPlan(mesh=MeshSpec(...))`` the [K, ...] corpus splits
+        into contiguous per-device client blocks, each device paying
+        ``ceil(K / n_devices)`` slots of the packed ceiling (the per-device
+        pricing the plan auto rule uses), and the in-scan gather reads
+        shard-locally before ``round_step``'s shard_map plane splits the
+        cohort.
         """
         counts = validate_client_data(data)
         n_max = int(counts.max())

@@ -679,6 +679,151 @@ class ShardCache:
                          jnp.asarray(client_slots), self.dataset.seed)
 
 
+class MeshShardedCache:
+    """Per-shard ``ShardCache`` composition for the mesh-sharded planes.
+
+    Clients are assigned to data shards by ``cid % n_shards`` (static, so
+    the assignment never depends on LRU history), and each shard owns a
+    FULL-capacity ``ShardCache`` over its own client subset — per-device
+    capacity semantics: the declared ``capacity_clients``/``capacity_bytes``
+    budget is what ONE device's cache may hold, matching the per-device
+    memory pricing of the mesh auto rule.  Splitting one budget n ways
+    instead would let an unlucky shard assignment evict mid-chunk.
+
+    ``ensure`` routes each shard its own sub-sequence (order preserved, so
+    per-shard LRU recency still lands in last-use order); ``view`` composes
+    ONE ``CacheView`` by concatenating the per-shard tier corpora along the
+    slot axis and offsetting each shard's client->slot table by the slots
+    of the shards before it — so ``gather_round_batch`` (and the bucketed
+    ``gather_tier_*``) consume the composed view verbatim and the
+    trajectory is bit-equal to the single-cache plane (the gather contract
+    keys draws by true client id and n_k, never by slot).  Device
+    placement of the composed corpus follows the replicated 'cache_slots'
+    rule (slot order is LRU-arbitrary — see FED_MESH_RULES); the per-shard
+    structure is the client->shard bookkeeping that keeps every device's
+    working set bounded by its own declared budget.
+
+    Counter properties aggregate across shards, so the trainer's
+    ``cache_*`` chunk metrics and the perf lanes read it like a plain
+    ``ShardCache``.
+    """
+
+    def __init__(self, dataset: StreamingFederatedDataset, n_shards: int,
+                 capacity_clients: Optional[int] = None,
+                 capacity_bytes: Optional[int] = None,
+                 tiers: Optional[int] = None):
+        if int(n_shards) < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards!r}")
+        self.dataset = dataset
+        self.n_shards = int(n_shards)
+        self.shards = tuple(
+            ShardCache(dataset, capacity_clients=capacity_clients,
+                       capacity_bytes=capacity_bytes, tiers=tiers)
+            for _ in range(self.n_shards))
+        self.layout = self.shards[0].layout
+        self._counts_dev = self.shards[0]._counts_dev
+        self._tier_of = self.layout.tier_of
+
+    def shard_of(self, cid: int) -> int:
+        return int(cid) % self.n_shards
+
+    # -- aggregate inspection (ShardCache-compatible) -------------------
+    @property
+    def capacity(self) -> int:
+        """Total distinct-client guarantee across shards — exact only for
+        a shard-balanced request; the per-shard guarantee is what
+        ``ensure`` actually enforces."""
+        return sum(s.capacity for s in self.shards)
+
+    @property
+    def slots(self) -> int:
+        return sum(s.slots for s in self.shards)
+
+    @property
+    def tier_slots(self) -> Tuple[int, ...]:
+        return tuple(sum(s.tier_slots[t] for s in self.shards)
+                     for t in range(self.layout.n_tiers))
+
+    @property
+    def tier_sizes(self) -> Tuple[int, ...]:
+        return self.layout.sizes
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self.shards)
+
+    @property
+    def hits(self) -> int:
+        return sum(s.hits for s in self.shards)
+
+    @property
+    def misses(self) -> int:
+        return sum(s.misses for s in self.shards)
+
+    @property
+    def evictions(self) -> int:
+        return sum(s.evictions for s in self.shards)
+
+    @property
+    def tier_hits(self) -> List[int]:
+        return [sum(s.tier_hits[t] for s in self.shards)
+                for t in range(self.layout.n_tiers)]
+
+    @property
+    def tier_misses(self) -> List[int]:
+        return [sum(s.tier_misses[t] for s in self.shards)
+                for t in range(self.layout.n_tiers)]
+
+    @property
+    def tier_evictions(self) -> List[int]:
+        return [sum(s.tier_evictions[t] for s in self.shards)
+                for t in range(self.layout.n_tiers)]
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+    def resident(self) -> set:
+        return set().union(*(s.resident() for s in self.shards))
+
+    # -- population -----------------------------------------------------
+    def ensure(self, client_ids) -> None:
+        """Route each client to its shard's cache (sub-sequences keep the
+        chunk's raw order, so per-shard LRU recency refresh stays in
+        last-use order)."""
+        per_shard: List[list] = [[] for _ in range(self.n_shards)]
+        for cid in client_ids:
+            per_shard[int(cid) % self.n_shards].append(int(cid))
+        for shard, seq in zip(self.shards, per_shard):
+            if seq:
+                shard.ensure(seq)
+
+    def view(self) -> CacheView:
+        """One composed ``CacheView`` over all shards: per-tier corpora
+        concatenate along the slot axis in shard order, and each shard's
+        client->slot entries shift by the cumulative slot count of earlier
+        shards.  The concat is a device op per chunk dispatch — O(cache
+        bytes), overlapped with compute like the uploads themselves."""
+        tier_arrays = []
+        for t in range(self.layout.n_tiers):
+            names = self.shards[0].tier_arrays[t].keys()
+            tier_arrays.append({
+                name: jnp.concatenate(
+                    [s.tier_arrays[t][name] for s in self.shards], axis=0)
+                for name in names})
+        client_slots = np.full(self.dataset.n_clients, -1, np.int32)
+        offsets = [0] * self.layout.n_tiers
+        for s in self.shards:
+            for t, slot_of in enumerate(s._slot_of):
+                for cid, slot in slot_of.items():
+                    client_slots[cid] = slot + offsets[t]
+            for t in range(self.layout.n_tiers):
+                offsets[t] += s.tier_slots[t]
+        return CacheView(tuple(tier_arrays), self._counts_dev,
+                         jnp.asarray(self._tier_of),
+                         jnp.asarray(client_slots), self.dataset.seed)
+
+
 # ---------------------------------------------------------------------------
 # on-disk corpora: DiskShardProvider + writer + LEAF ingestion
 # ---------------------------------------------------------------------------

@@ -1,7 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be set before any other import: jax locks the device count at first
-# initialization.  Do NOT move or merge these lines.
+# MUST run before any other import: jax locks the device count at first
+# initialization.  Do NOT move below the jax import.  MERGES with a
+# user-set XLA_FLAGS instead of clobbering it: an existing device-count
+# force wins (the user asked for that many host devices), every other
+# user flag is kept alongside ours.
+_user_xla_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _user_xla_flags:
+    os.environ["XLA_FLAGS"] = (
+        _user_xla_flags + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 """Multi-pod dry-run driver.
 

@@ -45,7 +45,9 @@ from typing import Any, Optional, Union
 from repro.core.sampling import DeviceSampleable, KeyedReplayable
 from repro.core.secure_agg import SecureAggSpec
 from repro.data.device import DeviceFederatedDataset
-from repro.data.stream import ShardCache, StreamingFederatedDataset
+from repro.data.stream import (MeshShardedCache, ShardCache,
+                               StreamingFederatedDataset)
+from repro.launch.mesh import MeshSpec
 from repro.scenario.spec import ScenarioSpec
 
 PLANES = ("per_round", "scanned", "device", "streaming")
@@ -156,6 +158,15 @@ class ExecutionPlan:
     local_batch: Optional[int] = None
     scenario: Optional[ScenarioSpec] = None
     secure: Optional[SecureAggSpec] = None
+    # data-parallel device mesh (repro.launch.mesh.MeshSpec): the resolved
+    # plane's cohort splits across devices under shard_map, the
+    # weighted-delta aggregation becomes a psum (server state replicated),
+    # and the auto rule re-prices memory per device — a corpus that
+    # overflows one device may fit the mesh, flipping the auto decision
+    # (audited in plan_log).  None is bit-equal to the pre-mesh
+    # single-device planes; a sharded run is tolerance-equal (fp32
+    # reduction-order caveat, see core.round._shard_map_round).
+    mesh: Optional[MeshSpec] = None
 
     def __post_init__(self):
         plane = _PLANE_ALIASES.get(self.plane, self.plane)
@@ -210,6 +221,10 @@ class ExecutionPlan:
             raise PlanError(
                 f"secure must be a repro.core.SecureAggSpec, got "
                 f"{type(self.secure).__name__}", plane=plane)
+        if self.mesh is not None and not isinstance(self.mesh, MeshSpec):
+            raise PlanError(
+                f"mesh must be a repro.launch.mesh.MeshSpec, got "
+                f"{type(self.mesh).__name__}", plane=plane)
 
 
 def as_plan(plan: Union[None, str, ExecutionPlan]) -> ExecutionPlan:
@@ -252,18 +267,28 @@ class PlanDecision:
     bucketed: bool = False
     scenario: bool = False
     secure: bool = False
+    # mesh audit trail (set when the plan carries a MeshSpec): the built
+    # mesh's shape/axes and the PER-DEVICE working-set bytes the auto rule
+    # actually priced — so a plan_log/metrics-jsonl reader can see why a
+    # corpus that overflows one device resolved to the device plane anyway
+    mesh_shape: Optional[tuple] = None
+    axis_names: Optional[tuple] = None
+    per_device_nbytes: Optional[int] = None
 
     def record(self) -> dict:
         rec = {"event": "plan", "plane": self.plane, "auto": self.auto,
                "reason": self.reason}
         for k in ("packed_nbytes", "budget_bytes", "working_set_nbytes",
-                  "chunk_rounds"):
+                  "chunk_rounds", "per_device_nbytes"):
             v = getattr(self, k)
             if v is not None:
                 rec[k] = int(v)
         if self.dispatch_overhead_s is not None:
             rec["dispatch_overhead_s"] = round(
                 float(self.dispatch_overhead_s), 9)
+        if self.mesh_shape is not None:
+            rec["mesh_shape"] = list(int(n) for n in self.mesh_shape)
+            rec["axis_names"] = list(self.axis_names or ())
         if self.bucketed:
             rec["bucketed"] = True
         if self.scenario:
@@ -463,6 +488,22 @@ def resolve(plan: ExecutionPlan, trainer, n_rounds: int) -> PlanDecision:
             f"; secure aggregation "
             f"({'masked' if plan.secure.masked else 'open ring'}, "
             f"frac_bits={plan.secure.frac_bits})")
+    if plan.mesh is not None:
+        # stamped centrally so explicit-plane plans get the mesh audit
+        # fields too, not just auto resolutions
+        n = plan.mesh.n_devices()
+        decision.mesh_shape = (n,)
+        decision.axis_names = (plan.mesh.axis,)
+        if decision.per_device_nbytes is None:
+            if decision.plane == "device" \
+                    and decision.packed_nbytes is not None:
+                decision.per_device_nbytes = -(-decision.packed_nbytes // n)
+            elif decision.working_set_nbytes is not None:
+                # streaming: each data shard owns a full-capacity cache
+                # (per-device capacity semantics — see MeshShardedCache)
+                decision.per_device_nbytes = decision.working_set_nbytes
+        decision.reason += \
+            f"; mesh-sharded over {n} device(s) on axis {plan.mesh.axis!r}"
     return decision
 
 
@@ -494,13 +535,21 @@ def _resolve_plane(plan: ExecutionPlan, trainer) -> PlanDecision:
               else device_memory_budget())
     sds = trainer.session.streaming_dataset(dataset)   # host metadata only
     packed = sds.packed_nbytes
+    # under a mesh the budget is PER DEVICE and the packed corpus shards
+    # its client axis n_shards ways — a corpus that overflows one device
+    # may fit the mesh, flipping auto back to the device plane
+    n_shards = 1 if plan.mesh is None else plan.mesh.n_devices()
+    packed_per_dev = -(-packed // n_shards)
     if isinstance(sampler, DeviceSampleable) and (budget is None
-                                                  or packed <= budget):
+                                                  or packed_per_dev <= budget):
+        sharded = ("" if n_shards == 1 else
+                   f", {packed_per_dev} B/device over {n_shards} shards")
         return PlanDecision(
             "device", True,
-            f"packed corpus ({packed} B) fits the device memory budget "
-            f"({'unbounded' if budget is None else f'{budget} B'})",
-            packed_nbytes=packed, budget_bytes=budget)
+            f"packed corpus ({packed} B{sharded}) fits the device memory "
+            f"budget ({'unbounded' if budget is None else f'{budget} B'})",
+            packed_nbytes=packed, budget_bytes=budget,
+            per_device_nbytes=packed_per_dev if n_shards > 1 else None)
     # streaming working set: the ACTUAL tiered cache footprint the declared
     # CacheSpec would allocate, not a uniform slot_nbytes multiple — under
     # n_k skew the tiered bytes are several-fold smaller, which can flip
@@ -528,6 +577,10 @@ def _resolve_plane(plan: ExecutionPlan, trainer) -> PlanDecision:
         if not isinstance(sampler, DeviceSampleable):
             blocked = (f"the device plane is out (sampler "
                        f"{type(sampler).__name__} lacks DeviceSampleable)")
+        elif n_shards > 1:
+            blocked = (f"packed corpus ({packed} B, {packed_per_dev} "
+                       f"B/device over {n_shards} shards) exceeds the "
+                       f"per-device budget ({budget} B)")
         else:
             blocked = (f"packed corpus ({packed} B) exceeds the budget "
                        f"({budget} B)")
@@ -600,9 +653,21 @@ class TrainSession:
     jit_cache: dict = field(default_factory=dict)
     plan_log: list = field(default_factory=list)
     _device_src: Any = None
+    _device_mesh: Any = None
     _stream_src: Any = None
     _cache_key: Any = None
+    _mesh_cache: dict = field(default_factory=dict)
     _dispatch_overhead_s: Optional[float] = None
+
+    def mesh_for(self, spec: MeshSpec):
+        """The built jax ``Mesh`` for a ``MeshSpec``, cached per spec — a
+        spec always names the same devices within a process, and caching
+        keeps a Mesh identity stable across ``run()`` calls so jitted
+        executables keyed on it stay warm."""
+        mesh = self._mesh_cache.get(spec)
+        if mesh is None:
+            mesh = self._mesh_cache[spec] = spec.build()
+        return mesh
 
     def dispatch_overhead(self) -> float:
         """Measured per-dispatch overhead (seconds), measured ONCE per
@@ -619,15 +684,21 @@ class TrainSession:
             fn = self.jit_cache[key] = build()
         return fn
 
-    def device_dataset(self, dataset,
-                       shard_clients: bool = True) -> DeviceFederatedDataset:
-        if self.device_ds is None or self._device_src is not dataset:
+    def device_dataset(self, dataset, shard_clients: bool = True,
+                       mesh: Optional[MeshSpec] = None
+                       ) -> DeviceFederatedDataset:
+        # keyed on (source identity, mesh spec): packing places buffers
+        # under the ACTIVE mesh context, so a corpus packed for one mesh
+        # must never be silently reused for another (or for no mesh)
+        if (self.device_ds is None or self._device_src is not dataset
+                or self._device_mesh != mesh):
             if isinstance(dataset, DeviceFederatedDataset):
                 self.device_ds = dataset
             else:
                 self.device_ds = DeviceFederatedDataset.from_federated(
                     dataset, shard_clients=shard_clients)
             self._device_src = dataset
+            self._device_mesh = mesh
         return self.device_ds
 
     def streaming_dataset(self, dataset) -> StreamingFederatedDataset:
@@ -643,17 +714,28 @@ class TrainSession:
     def shard_cache_for(self, sds: StreamingFederatedDataset,
                         capacity_clients: Optional[int],
                         capacity_bytes: Optional[int],
-                        tiers: Optional[int] = None) -> ShardCache:
-        """The persistent cache, rebuilt only when the dataset or the
-        declared capacity/tiering changes (same declaration => warm reuse).
-        Keyed on ``_IdKey(sds)``, never bare ``id(sds)``: the key holds a
-        strong reference, so a rebuilt dataset can never land on a recycled
-        id and silently inherit another corpus's resident shards."""
-        key = (_IdKey(sds), capacity_clients, capacity_bytes, tiers)
+                        tiers: Optional[int] = None,
+                        mesh: Optional[MeshSpec] = None) -> ShardCache:
+        """The persistent cache, rebuilt only when the dataset, the
+        declared capacity/tiering or the mesh changes (same declaration =>
+        warm reuse).  Keyed on ``_IdKey(sds)``, never bare ``id(sds)``: the
+        key holds a strong reference, so a rebuilt dataset can never land
+        on a recycled id and silently inherit another corpus's resident
+        shards.  Under a multi-device ``mesh`` the cache is a
+        ``MeshShardedCache``: one full-capacity ``ShardCache`` per data
+        shard, clients assigned ``cid % n_shards``."""
+        n_shards = 1 if mesh is None else mesh.n_devices()
+        key = (_IdKey(sds), capacity_clients, capacity_bytes, tiers,
+               mesh if n_shards > 1 else None)
         if self.shard_cache is None or self._cache_key != key:
-            self.shard_cache = ShardCache(sds,
-                                          capacity_clients=capacity_clients,
-                                          capacity_bytes=capacity_bytes,
-                                          tiers=tiers)
+            if n_shards > 1:
+                self.shard_cache = MeshShardedCache(
+                    sds, n_shards,
+                    capacity_clients=capacity_clients,
+                    capacity_bytes=capacity_bytes, tiers=tiers)
+            else:
+                self.shard_cache = ShardCache(
+                    sds, capacity_clients=capacity_clients,
+                    capacity_bytes=capacity_bytes, tiers=tiers)
             self._cache_key = key
         return self.shard_cache

@@ -87,9 +87,11 @@ from repro.core.server_opt import ServerOpt, ServerState
 from repro.data.device import DeviceFederatedDataset
 from repro.data.federated import FederatedDataset, minibatch_indices
 from repro.data.stream import ShardCache, StreamingFederatedDataset
+from repro.launch.mesh import MeshSpec
 from repro.launch.plan import (CacheSpec, CkptSpec, ExecutionPlan, PlanError,
                                TrainSession, _IdKey, as_plan, resolve)
 from repro.scenario.spec import ScenarioRuntime
+from repro.sharding import FED_MESH_RULES, axis_rules
 
 
 def _cache_counters(cache: Optional[ShardCache]):
@@ -199,6 +201,10 @@ class FederatedTrainer:
         # the active ScenarioRuntime, scoped to one run() call (set when the
         # resolved plan carries a non-null ScenarioSpec, cleared after)
         self._scenario: Optional[ScenarioRuntime] = None
+        # the active MeshSpec, scoped to one run() call like _scenario.
+        # It keys _sig() (a sharded and an unsharded run must never alias a
+        # compiled executable) and the session's dataset/cache lookups.
+        self._mesh_spec: Optional[MeshSpec] = None
 
     # ------------------------------------------------------------------
     # jitted engines (lazily built, cached on the session so a fresh
@@ -207,7 +213,7 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
     def _sig(self):
         return (_IdKey(self.loss_fn), _IdKey(self.server_opt), self.rcfg,
-                _IdKey(self.param_axes))
+                _IdKey(self.param_axes), self._mesh_spec)
 
     def _step_fn(self, masked: bool):
         rcfg, axes = self.rcfg, self.param_axes
@@ -457,6 +463,7 @@ class FederatedTrainer:
                 self.ckpt_every = plan.ckpt.every
         if plan.secure is not None:
             self.rcfg = dataclasses.replace(self.rcfg, secure=plan.secure)
+        self._mesh_spec = plan.mesh
         try:
             self._check_client_extent()
             decision = resolve(plan, self, n_rounds)
@@ -474,29 +481,42 @@ class FederatedTrainer:
                           f"({decision.reason})")
             cadence = (log_every if log_every is not None
                        else plan.eval.cadence)
-            if decision.plane == "per_round":
-                return self._run_per_round(n_rounds, cadence, eval_fn,
-                                           verbose, resume)
-            # chunked planes take the RESOLVED chunk size — a literal plan
-            # value, or the measured-overhead auto pick (see plan.resolve)
-            chunk_rounds = decision.chunk_rounds
-            eval_every = cadence if eval_fn is not None else None
-            if decision.plane == "scanned":
-                return self._run_scanned(n_rounds, chunk_rounds,
-                                         int(plan.prefetch), eval_fn,
-                                         eval_every, verbose, resume)
-            if decision.plane == "device":
-                return self._run_device(n_rounds, chunk_rounds,
-                                        eval_fn, eval_every, verbose, resume)
-            return self._run_streaming(n_rounds, chunk_rounds,
-                                       plan.cache.clients, plan.cache.bytes,
-                                       plan.cache.tiers, decision.bucketed,
-                                       bool(plan.prefetch), eval_fn,
-                                       eval_every, verbose, resume)
+            # a plan-carried mesh activates the logical-axis rules for the
+            # whole plane dispatch: packing, cache uploads and tracing all
+            # see the same mesh context, so the cohort axis shards (GSPMD
+            # constraints everywhere, the explicit shard_map+psum plane in
+            # round_step when the mesh is pure data-parallel).  mesh=None
+            # activates nothing — the pre-mesh code path, bit for bit.
+            mesh_ctx = (axis_rules(self.session.mesh_for(plan.mesh),
+                                   FED_MESH_RULES)
+                        if plan.mesh is not None
+                        else contextlib.nullcontext())
+            with mesh_ctx:
+                if decision.plane == "per_round":
+                    return self._run_per_round(n_rounds, cadence, eval_fn,
+                                               verbose, resume)
+                # chunked planes take the RESOLVED chunk size — a literal
+                # plan value, or the measured-overhead auto pick (see
+                # plan.resolve)
+                chunk_rounds = decision.chunk_rounds
+                eval_every = cadence if eval_fn is not None else None
+                if decision.plane == "scanned":
+                    return self._run_scanned(n_rounds, chunk_rounds,
+                                             int(plan.prefetch), eval_fn,
+                                             eval_every, verbose, resume)
+                if decision.plane == "device":
+                    return self._run_device(n_rounds, chunk_rounds, eval_fn,
+                                            eval_every, verbose, resume)
+                return self._run_streaming(
+                    n_rounds, chunk_rounds, plan.cache.clients,
+                    plan.cache.bytes, plan.cache.tiers, decision.bucketed,
+                    bool(plan.prefetch), eval_fn, eval_every, verbose,
+                    resume)
         finally:
             (self.local_batch, self.ckpt_path, self.ckpt_every,
              self.rcfg) = saved
             self._scenario = None
+            self._mesh_spec = None
 
     # ------------------------------------------------------------------
     # plane: per_round — one dispatch per round
@@ -602,9 +622,13 @@ class FederatedTrainer:
     def device_dataset(self,
                        shard_clients: bool = True) -> DeviceFederatedDataset:
         """The packed corpus (built once, owned by the session; see
-        data/device.py for the K * n_max memory ceiling this implies)."""
+        data/device.py for the K * n_max memory ceiling this implies).
+        Keyed by the active mesh spec: packing places the client axis
+        under the live mesh context, so a sharded and an unsharded run
+        never share a packed corpus."""
         return self.session.device_dataset(self.dataset,
-                                           shard_clients=shard_clients)
+                                           shard_clients=shard_clients,
+                                           mesh=self._mesh_spec)
 
     def _sample_key(self):
         return (self.sampler.base_key()
@@ -647,7 +671,8 @@ class FederatedTrainer:
         if cache_clients is None and cache_bytes is None:
             cache_clients = self.rcfg.clients_per_round * chunk_rounds
         cache = self.session.shard_cache_for(sds, cache_clients, cache_bytes,
-                                             cache_tiers)
+                                             cache_tiers,
+                                             mesh=self._mesh_spec)
         spans = _eval_spans(t0, n_rounds, chunk_rounds, eval_every)
         if bucketed:
             return self._run_streaming_bucketed(spans, n_rounds, sds, cache,

@@ -194,6 +194,21 @@ def spmd_client_axes() -> object:
     return entry
 
 
+def client_axis_size() -> int:
+    """Number of shards the 'clients' logical axis splits into on the live
+    mesh — the product of its mapped mesh-axis sizes.  1 outside a mesh
+    context (or when the rules map 'clients' to no live axis), so callers
+    can divide cohort/memory math by it unconditionally."""
+    entry = spmd_client_axes()
+    if entry is None:
+        return 1
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    n = 1
+    for a in axes:
+        n *= _ctx.mesh.shape[a]
+    return n
+
+
 def tree_shardings(logical_tree, rules: AxisRules, mesh: Mesh,
                    sds_tree=None):
     """Map a pytree of logical-axis tuples to NamedShardings.  Pass the

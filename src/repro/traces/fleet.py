@@ -120,6 +120,66 @@ class FleetTrace:
         would lower for (0 for an empty trace)."""
         return int(self.m.max()) if self.n_rounds else 0
 
+    def summarize(self) -> Dict[str, object]:
+        """Fleet analytics over the whole trace (host-side, O(n_events)).
+
+        ``completion_hist``: how many DISTINCT clients fall in each
+        participation-outcome bucket over their whole recorded history —
+        ``all_complete`` (every joined round finished all H steps),
+        ``mixed`` (some rounds complete, some partial), ``all_partial``
+        (never finished a round), plus ``never_joined`` (population minus
+        participants).  ``steps_hist``: [H + 1] event counts by completed
+        step cap (index = steps; index H = finished).  The churn block is
+        per round: mean/min/max of joined clients, the mean fraction of a
+        round's joiners that completed all H steps, and the mean round-
+        over-round cohort turnover (fraction of round t's joiners absent
+        from round t+1 — 0.0 for a frozen cohort, 1.0 for full churn)."""
+        H = self.local_steps
+        steps_hist = np.bincount(self.ev_steps, minlength=H + 1)
+        complete = self.ev_steps == H
+        participants = np.unique(self.ev_client)
+        # per-client complete/partial event counts over the whole trace
+        n_ev = np.bincount(self.ev_client, minlength=self.n_clients)
+        n_ok = np.bincount(self.ev_client, weights=complete,
+                           minlength=self.n_clients).astype(np.int64)
+        joined = n_ev > 0
+        hist = {
+            "all_complete": int(np.sum(joined & (n_ok == n_ev))),
+            "mixed": int(np.sum(joined & (n_ok > 0) & (n_ok < n_ev))),
+            "all_partial": int(np.sum(joined & (n_ok == 0))),
+            "never_joined": int(self.n_clients - len(participants)),
+        }
+        per_round = np.diff(self.row_splits)
+        if self.n_rounds and per_round.min() > 0:
+            ok_per_round = np.add.reduceat(
+                complete.astype(np.int64), self.row_splits[:-1])
+            complete_frac = float(np.mean(ok_per_round / per_round))
+        else:
+            complete_frac = float("nan")
+        turnover = []
+        for t in range(self.n_rounds - 1):
+            cur = set(self.round_events(t)["client"].tolist())
+            if not cur:
+                continue
+            nxt = set(self.round_events(t + 1)["client"].tolist())
+            turnover.append(len(cur - nxt) / len(cur))
+        return {
+            "n_rounds": self.n_rounds,
+            "n_clients": self.n_clients,
+            "n_events": self.n_events,
+            "participants": int(len(participants)),
+            "completion_hist": hist,
+            "steps_hist": [int(c) for c in steps_hist],
+            "joined_per_round": {
+                "mean": float(per_round.mean()) if self.n_rounds else 0.0,
+                "min": int(per_round.min()) if self.n_rounds else 0,
+                "max": int(per_round.max()) if self.n_rounds else 0,
+            },
+            "complete_frac_mean": complete_frac,
+            "turnover_mean": (float(np.mean(turnover)) if turnover
+                              else float("nan")),
+        }
+
     def round_events(self, t: int) -> Dict[str, np.ndarray]:
         """Round ``t``'s events as {client, steps, latency} arrays (sorted
         by client id); raises IndexError outside [0, n_rounds) — the

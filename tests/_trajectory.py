@@ -124,8 +124,8 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
 
     ``driver`` is a DRIVERS/AUTO_DRIVERS name or ``"streaming-uniform"``
     (the tiers=1 cache layout); extra ``cache_clients`` / ``cache_bytes`` /
-    ``cache_tiers`` / ``memory_budget_bytes`` / ``scenario`` / ``secure``
-    kwargs land on the ``ExecutionPlan``, the rest (``resume``,
+    ``cache_tiers`` / ``memory_budget_bytes`` / ``scenario`` / ``secure`` /
+    ``mesh`` kwargs land on the ``ExecutionPlan``, the rest (``resume``,
     ``eval_fn``) pass through to ``run``.  Returns the trajectory records
     (audit events stripped).
     """
@@ -143,8 +143,9 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
     budget = kw.pop("memory_budget_bytes", None)
     scenario = kw.pop("scenario", None)
     secure = kw.pop("secure", None)
+    mesh = kw.pop("mesh", None)
     if LEGACY_SHIMS and driver in DRIVERS and scenario is None \
-            and secure is None:
+            and secure is None and mesh is None:
         # streaming-uniform has no legacy shim (run_streaming predates the
         # tiers knob) — it always routes through the plan API below
         hist = _run_legacy_shim(tr, driver, n_rounds, chunk_rounds,
@@ -154,7 +155,7 @@ def run_driver(tr, driver, n_rounds, chunk_rounds=8, **kw):
         return strip_events(hist)
     plan = ExecutionPlan(plane=_PLANE_OF[driver], chunk_rounds=chunk_rounds,
                          cache=cache, memory_budget_bytes=budget,
-                         scenario=scenario, secure=secure)
+                         scenario=scenario, secure=secure, mesh=mesh)
     return strip_events(tr.run(n_rounds, plan=plan, verbose=False, **kw))
 
 

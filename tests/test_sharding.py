@@ -7,9 +7,13 @@ from repro.sharding import (
     FED_MESH_RULES,
     FSDP_RULES,
     axis_rules,
+    client_axis_size,
+    current_mesh,
     logical_spec,
     shard,
+    spmd_client_axes,
 )
+from repro.sharding.rules import put_logical
 
 
 @pytest.fixture(scope="module")
@@ -85,3 +89,55 @@ def test_shard_rank_mismatch_raises(mesh):
     with axis_rules(mesh, FED_MESH_RULES):
         with pytest.raises(ValueError):
             shard(jnp.ones((2, 2)), "batch")
+
+
+# ---------------------------------------------------------------------------
+# rules naming ('pod','data') against meshes that lack 'pod', and the
+# no-active-mesh no-ops the round engine's gates rely on
+# ---------------------------------------------------------------------------
+def test_clients_rule_filters_to_live_axes(mesh, mesh16):
+    """FED_MESH_RULES maps 'clients' to ('pod','data'); the filtered entry
+    must only ever name axes the live mesh actually has."""
+    with axis_rules(mesh, FED_MESH_RULES):
+        assert spmd_client_axes() == "data"    # 'pod' dropped -> bare str
+        assert client_axis_size() == mesh.shape["data"]
+    with axis_rules(mesh16, FED_MESH_RULES):
+        assert spmd_client_axes() == ("pod", "data")
+        assert client_axis_size() == (mesh16.shape["pod"]
+                                      * mesh16.shape["data"])
+
+
+def test_clients_rule_mapped_to_no_live_axis(mesh):
+    """Rules that map 'clients' to an axis the mesh lacks degrade to the
+    unsharded behaviour (entry None, size 1) — never a KeyError."""
+    rules = dict(FED_MESH_RULES, clients=("pod",))
+    with axis_rules(mesh, rules):
+        assert spmd_client_axes() is None
+        assert client_axis_size() == 1
+        # and shard() on such an axis replicates instead of raising
+        import jax.numpy as jnp
+        y = shard(jnp.ones((4, 2)), "clients", None)
+        assert (y == 1).all()
+
+
+def test_no_active_mesh_noops():
+    """Outside axis_rules: no ambient mesh, size-1 client axis, and both
+    shard() and put_logical() pass values through untouched."""
+    import jax.numpy as jnp
+    assert current_mesh() is None
+    assert spmd_client_axes() is None
+    assert client_axis_size() == 1
+    x = jnp.arange(6.0).reshape(2, 3)
+    assert (shard(x, "clients", "embed") == x).all()
+    import numpy as np
+    y = put_logical(np.ones((2, 3), np.float32), "clients", None)
+    assert isinstance(y, jax.Array) and (y == 1).all()
+
+
+def test_client_axis_size_restored_after_context(mesh):
+    with axis_rules(mesh, FED_MESH_RULES):
+        assert client_axis_size() >= 1
+        with axis_rules(None, None):       # nested deactivation
+            assert client_axis_size() == 1
+        assert client_axis_size() == mesh.shape["data"]
+    assert client_axis_size() == 1
